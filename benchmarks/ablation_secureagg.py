@@ -1,0 +1,70 @@
+"""Ablations beyond the paper's tables.
+
+1. SecureAgg mask scale vs. statistics exactness: pairwise masks cancel
+   only up to float32 associativity, so privacy (bigger masks) trades
+   directly against the paper's Table-4 exactness. The paper never
+   quantifies this; we sweep mask_scale over 6 decades.
+2. GNB ridge sensitivity: the head's single numerical knob.
+3. Backbone ladder (paper Table 5 analogue): stronger frozen features →
+   better FedCGS accuracy, same statistics machinery.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Reporter, make_world
+from repro.core.classifier import gnb_head
+from repro.core.secure_agg import secure_sum
+from repro.core.statistics import (
+    centralized_statistics,
+    derive_global,
+    statistics_deviation,
+)
+from repro.data import dirichlet_partition
+from repro.fl.backbone import BACKBONES, make_backbone
+from repro.fl.fedcgs import client_stats_pass, run_fedcgs
+
+
+def run(reporter: Reporter, *, quick: bool = False, seed: int = 0) -> None:
+    world = make_world("synth10", quick=True)
+    x, y = world.train
+    c = world.spec.num_classes
+    parts = dirichlet_partition(y, 10, 0.1, seed=seed)
+    clients = [(x[p], y[p]) for p in parts]
+
+    feats = world.backbone.features(jnp.asarray(x))
+    ref = centralized_statistics(feats, jnp.asarray(y), c)
+    test_feats = world.backbone.features(jnp.asarray(world.test[0]))
+    yt = jnp.asarray(world.test[1])
+
+    # --- 1. mask scale sweep -------------------------------------------
+    stats_list = [client_stats_pass(world.backbone, cx, cy, c) for cx, cy in clients]
+    for scale in (0.0, 1e1, 1e3, 1e5, 1e7):
+        if scale == 0.0:
+            agg = stats_list[0]
+            for s in stats_list[1:]:
+                agg = agg + s
+        else:
+            agg = secure_sum(stats_list, mask_scale=scale)
+        g = derive_global(agg)
+        dmu, dsig = statistics_deviation(g, ref)
+        acc = float(gnb_head(g).accuracy(test_feats, yt))
+        tag = f"mask{scale:g}"
+        reporter.add("ablate_secagg", tag, "delta_mu", float(dmu))
+        reporter.add("ablate_secagg", tag, "delta_sigma", float(dsig))
+        reporter.add("ablate_secagg", tag, "acc", acc)
+
+    # --- 2. ridge sensitivity ------------------------------------------
+    for ridge in (1e-8, 1e-6, 1e-4, 1e-2, 1.0):
+        head = gnb_head(ref, ridge=ridge)
+        acc = float(head.accuracy(test_feats, yt))
+        reporter.add("ablate_ridge", f"r{ridge:g}", "acc", acc)
+
+    # --- 3. backbone ladder (paper Table 5 analogue) -------------------
+    for name in BACKBONES:
+        bb = make_backbone(name, world.spec.input_dim)
+        res = run_fedcgs(bb, clients, c, test_data=world.test)
+        reporter.add("ablate_backbone", name, "acc", res.accuracy)
+        reporter.add("ablate_backbone", name, "upload_floats", res.uploaded_floats_per_client)

@@ -1,0 +1,33 @@
+"""Paper §Communication Overhead: uploaded floats per client per method."""
+
+from __future__ import annotations
+
+from benchmarks.common import Reporter, make_world
+from repro.fl.baselines.ccvr import ccvr_upload_floats
+from repro.fl.baselines.fedpft import fedpft_upload_floats
+from repro.fl.trainer import ClassifierModel
+
+
+def run(reporter: Reporter, *, quick: bool = False, seed: int = 0) -> None:
+    import jax
+
+    world = make_world("synth10", quick=True)
+    c = world.spec.num_classes
+    d = world.backbone.feature_dim
+    model = ClassifierModel(backbone=world.backbone, num_classes=c)
+    theta = sum(
+        x.size for x in jax.tree_util.tree_leaves(model.init(0))
+    )
+    reporter.add("comm", f"C{c}|d{d}", "FedAvg/DENSE/Co-Boosting(|theta|)", theta)
+    reporter.add("comm", f"C{c}|d{d}", "FedPFT((2d+1)KgC)", fedpft_upload_floats(d, 10, c))
+    reporter.add("comm", f"C{c}|d{d}", "CCVR(C(d^2+d+1))", ccvr_upload_floats(d, c))
+    reporter.add("comm", f"C{c}|d{d}", "FedCGS((C+d)d+C)", (c + d) * d + c)
+
+    # the paper's own example: ResNet18 (d=512) on CIFAR10
+    d, c, theta_resnet18 = 512, 10, 11_181_642
+    reporter.add("comm", "paper|resnet18|cifar10", "FedAvg(|theta|)", theta_resnet18)
+    reporter.add(
+        "comm", "paper|resnet18|cifar10", "FedPFT", fedpft_upload_floats(d, 10, c)
+    )
+    reporter.add("comm", "paper|resnet18|cifar10", "FedCGS", (c + d) * d + c)
+    reporter.add("comm", "paper|resnet18|cifar10", "CCVR", ccvr_upload_floats(d, c))

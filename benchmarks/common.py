@@ -1,0 +1,67 @@
+"""Shared benchmark world: synthetic datasets standing in for the paper's
+CIFAR10/CIFAR100/SVHN (label shift) and PACS/OfficeHome (feature shift).
+
+Absolute accuracies are NOT comparable to the paper (no ImageNet
+weights offline); orderings and invariances are (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+from repro.data import SyntheticSpec, make_classification_data
+from repro.fl.backbone import Backbone, make_backbone
+
+Dataset = Tuple[np.ndarray, np.ndarray]
+
+
+@dataclasses.dataclass
+class World:
+    name: str
+    spec: SyntheticSpec
+    train: Dataset
+    test: Dataset
+    backbone: Backbone
+
+
+def make_world(name: str, *, backbone: str = "resnet18-like", quick: bool = False) -> World:
+    presets = {
+        # name:        (C,  samples/class, sep, modes)
+        "synth10": (10, 150 if quick else 400, 1.6, 3),
+        "synth100": (100, 30 if quick else 80, 2.2, 2),
+        "synth-svhn": (10, 150 if quick else 400, 1.2, 4),
+    }
+    c, spc, sep, modes = presets[name]
+    spec = SyntheticSpec(
+        num_classes=c, input_dim=64, samples_per_class=spc,
+        class_sep=sep, modes_per_class=modes, seed=hash(name) % 10000,
+    )
+    x, y = make_classification_data(spec, seed=spec.seed + 1)
+    xt, yt = make_classification_data(spec, seed=spec.seed + 2)
+    return World(
+        name=name, spec=spec,
+        train=(np.asarray(x), np.asarray(y)),
+        test=(np.asarray(xt), np.asarray(yt)),
+        backbone=make_backbone(backbone, spec.input_dim),
+    )
+
+
+class Reporter:
+    """Collects (bench, config, metric, value) rows; prints CSV."""
+
+    def __init__(self):
+        self.rows: List[Tuple[str, str, str, float]] = []
+
+    def add(self, bench: str, config: str, metric: str, value: float) -> None:
+        self.rows.append((bench, config, metric, float(value)))
+        print(f"{bench},{config},{metric},{value:.6g}", flush=True)
+
+    def timeit(self, bench: str, config: str, fn: Callable, *args, **kwargs):
+        t0 = time.time()
+        out = fn(*args, **kwargs)
+        self.add(bench, config, "wall_s", time.time() - t0)
+        return out

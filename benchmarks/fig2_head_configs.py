@@ -1,0 +1,61 @@
+"""Paper Fig. 2 analogue: classifier-head configurations.
+
+- Centralized : linear head trained on ALL raw features (upper bound)
+- Linear      : linear head trained on features SAMPLED from the global
+                statistics (the "upper bound of FedPFT")
+- GNB (ours)  : the training-free Naive-Bayes head from the same stats
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Reporter, make_world
+from repro.core.classifier import gnb_head
+from repro.core.statistics import centralized_statistics
+from repro.fl.baselines.fedpft import _train_linear_head
+
+
+def run(reporter: Reporter, *, quick: bool = False, seed: int = 0) -> None:
+    datasets = ["synth10"] if quick else ["synth10", "synth100", "synth-svhn"]
+    epochs = 10 if quick else 50
+    rng = np.random.default_rng(seed)
+    for ds in datasets:
+        world = make_world(ds, quick=quick)
+        x, y = world.train
+        c = world.spec.num_classes
+        feats = np.asarray(world.backbone.features(jnp.asarray(x)))
+        test_feats = world.backbone.features(jnp.asarray(world.test[0]))
+        yt = jnp.asarray(world.test[1])
+
+        # --- Centralized: linear head on raw features
+        w, b = _train_linear_head(feats, y, c, epochs=epochs, seed=seed)
+        acc = float(jnp.mean((jnp.argmax(test_feats @ w + b, -1) == yt).astype(jnp.float32)))
+        reporter.add("fig2", ds, "Centralized-linear", acc)
+
+        # --- global statistics (exact, as FedCGS captures them)
+        stats = centralized_statistics(jnp.asarray(feats), jnp.asarray(y), c)
+
+        # --- Linear: head trained on stats-sampled synthetic features
+        cov = np.asarray(stats.sigma) + 1e-4 * np.eye(stats.feature_dim)
+        chol = np.linalg.cholesky(cov)
+        synth_x, synth_y = [], []
+        for cls in range(c):
+            n_cls = int(stats.counts[cls])
+            if n_cls < 1:
+                continue
+            z = rng.standard_normal((n_cls, stats.feature_dim))
+            synth_x.append(np.asarray(stats.mu[cls]) + z @ chol.T)
+            synth_y.append(np.full(n_cls, cls, dtype=np.int64))
+        w, b = _train_linear_head(
+            np.concatenate(synth_x), np.concatenate(synth_y), c,
+            epochs=epochs, seed=seed,
+        )
+        acc = float(jnp.mean((jnp.argmax(test_feats @ w + b, -1) == yt).astype(jnp.float32)))
+        reporter.add("fig2", ds, "Linear-on-sampled", acc)
+
+        # --- GNB head (ours): training-free
+        head = gnb_head(stats)
+        acc = float(head.accuracy(test_feats, yt))
+        reporter.add("fig2", ds, "GNB-head", acc)

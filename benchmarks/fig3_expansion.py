@@ -1,0 +1,35 @@
+"""Paper Fig. 3 analogue: feature expansion vs accuracy + comm overhead."""
+
+from __future__ import annotations
+
+from benchmarks.common import Reporter, make_world
+from repro.core.expansion import FeatureExpansion
+from repro.data import dirichlet_partition
+from repro.fl.fedcgs import run_fedcgs
+
+
+def run(reporter: Reporter, *, quick: bool = False, seed: int = 0) -> None:
+    datasets = ["synth10"] if quick else ["synth10", "synth100"]
+    dims = (0, 128, 512) if quick else (0, 128, 256, 512, 1024)
+    for ds in datasets:
+        world = make_world(ds, quick=quick)
+        x, y = world.train
+        c = world.spec.num_classes
+        parts = dirichlet_partition(y, 10, 0.1, seed=seed)
+        clients = [(x[p], y[p]) for p in parts]
+        for dim in dims:
+            exp = (
+                None
+                if dim == 0
+                else FeatureExpansion(
+                    in_dim=world.backbone.feature_dim, out_dim=dim, seed=seed
+                )
+            )
+            res = run_fedcgs(
+                world.backbone, clients, c, test_data=world.test, expansion=exp
+            )
+            reporter.add("fig3", f"{ds}|d+{dim}", "acc", res.accuracy)
+            reporter.add(
+                "fig3", f"{ds}|d+{dim}", "upload_floats",
+                res.uploaded_floats_per_client,
+            )

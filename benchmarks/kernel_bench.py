@@ -1,0 +1,59 @@
+"""Kernel microbenchmarks: Pallas (interpret) correctness-at-scale sweep
+and jnp-oracle wall time, plus the kernels' arithmetic intensities for
+the TPU roofline (compute-bound vs memory-bound classification)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Reporter
+from repro.kernels import ref
+from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS
+
+
+def _bench(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
+def run(reporter: Reporter, *, quick: bool = False, seed: int = 0) -> None:
+    shapes = [(4096, 512, 100)] if quick else [(4096, 512, 100), (16384, 1024, 1000)]
+    for n, d, c in shapes:
+        k1, k2 = jax.random.split(jax.random.key(seed))
+        f = jax.random.normal(k1, (n, d))
+        y = jax.random.randint(k2, (n,), 0, c)
+        tag = f"n{n}|d{d}|C{c}"
+
+        # oracle wall time on CPU (the TPU kernel itself can't be timed here)
+        jitted = jax.jit(lambda f, y: ref.client_stats_ref(f, y, c))
+        us = _bench(jitted, f, y) * 1e6
+        reporter.add("kernels", tag, "stats_oracle_us", us)
+
+        # arithmetic intensity of the Gram kernel: 2nd²  /  (nd + d²) * 4B
+        flops = 2.0 * n * d * d + 2.0 * n * c * d
+        bytes_ = 4.0 * (n * d + d * d + c * d)
+        ai = flops / bytes_
+        reporter.add("kernels", tag, "stats_flops", flops)
+        reporter.add("kernels", tag, "stats_arith_intensity", ai)
+        # TPU v5e ridge point: compute-bound iff AI > peak/bw
+        ridge = PEAK_FLOPS / HBM_BW
+        reporter.add("kernels", tag, "stats_compute_bound", float(ai > ridge))
+
+        # correctness at bench scale (interpret kernel vs oracle)
+        from repro.kernels import client_stats
+
+        A, B, N = client_stats(f, y, c)
+        A0, B0, N0 = ref.client_stats_ref(f, y, c)
+        err = max(
+            float(jnp.max(jnp.abs(A - A0))),
+            float(jnp.max(jnp.abs(B - B0))),
+        )
+        reporter.add("kernels", tag, "stats_kernel_max_err", err)

@@ -1,0 +1,114 @@
+"""§Roofline aggregation: read the dry-run JSON artifacts and emit the
+per-(arch × shape × mesh) roofline table (CSV rows + a markdown file).
+
+The dry-run campaign itself is launched by ``benchmarks/run_dryruns.sh``
+(hours of CPU compile time); this module only aggregates what exists.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import Reporter
+
+ARTIFACT_DIR = os.environ.get("DRYRUN_DIR", "/root/repo/experiments/dryrun")
+
+
+def load_artifacts(directory: str = ARTIFACT_DIR) -> List[Dict]:
+    out = []
+    if not os.path.isdir(directory):
+        return out
+    for fname in sorted(os.listdir(directory)):
+        if fname.endswith(".json"):
+            with open(os.path.join(directory, fname)) as f:
+                out.append(json.load(f))
+    return out
+
+
+def markdown_table(arts: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | "
+        "dominant | useful_flops | HBM/chip GB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in arts:
+        if a.get("skipped"):
+            lines.append(
+                f"| {a['arch']} | {a['shape']} | - | - | - | - | SKIP | - | - |"
+            )
+            continue
+        r = a["roofline"]
+        mem_gb = (
+            a["memory"].get("argument_size_in_bytes", 0)
+            + a["memory"].get("temp_size_in_bytes", 0)
+        ) / 1e9
+        uf = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} "
+            f"| {r['compute_s']:.3g} | {r['memory_s']:.3g} "
+            f"| {r['collective_s']:.3g} | {r['dominant']} "
+            f"| {uf:.2f} | {mem_gb:.1f} |"
+            if uf is not None
+            else f"| {a['arch']} | {a['shape']} | {a['mesh']} | - | - | - | ? | - | - |"
+        )
+    return "\n".join(lines)
+
+
+def run(reporter: Reporter, *, quick: bool = False, seed: int = 0) -> None:
+    arts = load_artifacts()
+    if not arts:
+        reporter.add("roofline", "artifacts", "count", 0)
+        print("# roofline: no dry-run artifacts found "
+              f"(run benchmarks/run_dryruns.sh first; looked in {ARTIFACT_DIR})")
+        return
+    reporter.add("roofline", "artifacts", "count", len(arts))
+    for a in arts:
+        if a.get("skipped"):
+            continue
+        r = a["roofline"]
+        tag = f"{a['arch']}|{a['shape']}|{a['mesh']}"
+        reporter.add("roofline", tag, "compute_s", r["compute_s"])
+        reporter.add("roofline", tag, "memory_s", r["memory_s"])
+        reporter.add("roofline", tag, "collective_s", r["collective_s"])
+        dom = {"compute": 0, "memory": 1, "collective": 2}[r["dominant"]]
+        reporter.add("roofline", tag, "dominant_code", dom)
+        if r.get("useful_flops_ratio") is not None:
+            reporter.add("roofline", tag, "useful_flops", r["useful_flops_ratio"])
+    md = markdown_table(arts)
+    out_path = os.path.join(os.path.dirname(ARTIFACT_DIR), "roofline_table.md")
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        f.write(md + "\n")
+    print(f"# roofline table -> {out_path}")
+
+    # --- baseline vs beyond-paper optimized (if the opt campaign ran) ---
+    opt_dir = ARTIFACT_DIR.rstrip("/") + "_opt"
+    opts = {(a["arch"], a["shape"], a.get("kind")): a for a in load_artifacts(opt_dir)}
+    if opts:
+        lines = [
+            "| arch | shape | step | base max-term (s) | opt max-term (s) | delta |",
+            "|---|---|---|---|---|---|",
+        ]
+        for a in arts:
+            key = (a["arch"], a["shape"], a.get("kind"))
+            o = opts.get(key)
+            if a.get("skipped") or o is None or o.get("skipped"):
+                continue
+            rb, ro = a["roofline"], o["roofline"]
+            mb = max(rb["compute_s"], rb["memory_s"], rb["collective_s"])
+            mo = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+            delta = (mo - mb) / mb * 100.0
+            lines.append(
+                f"| {a['arch']} | {a['shape']} | {a.get('kind')} "
+                f"| {mb:.3g} | {mo:.3g} | {delta:+.0f}% |"
+            )
+            reporter.add(
+                "roofline_opt", f"{a['arch']}|{a['shape']}|{a.get('kind')}",
+                "max_term_delta_pct", delta,
+            )
+        cmp_path = os.path.join(os.path.dirname(ARTIFACT_DIR), "roofline_opt_compare.md")
+        with open(cmp_path, "w") as f:
+            f.write("\n".join(lines) + "\n")
+        print(f"# baseline-vs-optimized -> {cmp_path}")

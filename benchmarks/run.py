@@ -1,0 +1,62 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``bench,config,metric,value`` CSV rows (captured by
+``python -m benchmarks.run | tee bench_output.txt``).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only table1,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import Reporter
+
+MODULES = [
+    "table1_label_shift",
+    "table2_feature_shift",
+    "table3_personalized",
+    "table4_exactness",
+    "fig2_head_configs",
+    "fig3_expansion",
+    "comm_overhead",
+    "ablation_secureagg",
+    "kernel_bench",
+    "roofline",
+]
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--quick", action="store_true", help="reduced sizes/epochs")
+    p.add_argument("--only", default=None, help="comma-separated module subset")
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    mods = MODULES if args.only is None else [
+        m for m in MODULES if any(m.startswith(o) for o in args.only.split(","))
+    ]
+    reporter = Reporter()
+    print("bench,config,metric,value")
+    failures = []
+    for name in mods:
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            mod.run(reporter, quick=args.quick, seed=args.seed)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"# FAILED {name}: {e!r}", flush=True)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        print(f"# {len(failures)} benchmark module(s) failed")
+        return 1
+    print("# all benchmarks completed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

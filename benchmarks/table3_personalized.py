@@ -1,0 +1,82 @@
+"""Paper Table 3 analogue: personalized one-shot FL.
+
+Local-only / FedAvg / FedAvg-FT / FedProto / FedCGS-personalized on the
+dominant-class split (20% uniform), per-client test sets drawn from each
+client's own label distribution.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Reporter, make_world
+from repro.data import dominant_class_partition
+from repro.fl.baselines import (
+    run_fedavg_ft,
+    run_fedavg_multiround,
+    run_fedproto,
+    run_local_only,
+)
+from repro.fl.fedcgs import run_fedcgs_personalized
+
+
+def _client_testsets(xt, yt, parts_labels, seed=0):
+    """Per-client test sets matching each client's label distribution."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for labels in parts_labels:
+        probs = np.bincount(labels, minlength=yt.max() + 1).astype(float)
+        probs /= probs.sum()
+        weights = probs[yt]
+        weights /= weights.sum()
+        idx = rng.choice(len(yt), size=min(500, len(yt)), p=weights, replace=False)
+        out.append((xt[idx], yt[idx]))
+    return out
+
+
+def run(reporter: Reporter, *, quick: bool = False, seed: int = 0) -> None:
+    world = make_world("synth10", quick=quick)
+    x, y = world.train
+    xt, yt = world.test
+    c = world.spec.num_classes
+    m = 5 if quick else 10
+    parts = dominant_class_partition(y, m, uniform_fraction=0.2, seed=seed)
+    clients = [(x[p], y[p]) for p in parts]
+    tests = _client_testsets(xt, yt, [y[p] for p in parts], seed=seed)
+
+    rounds = 10 if quick else 50
+    local_epochs = 30 if quick else 100
+
+    accs = run_local_only(
+        world.backbone, clients, tests, c, epochs=local_epochs, seed=seed
+    )
+    reporter.add("table3", "synth10", "Local-only", float(np.mean(accs)))
+
+    acc_global, model, gparams = run_fedavg_multiround(
+        world.backbone, clients, c, world.test, rounds=rounds, seed=seed,
+        return_params=True,
+    )
+    import jax.numpy as jnp
+
+    per_client = [
+        model.accuracy(gparams, jnp.asarray(tx), jnp.asarray(ty))
+        for tx, ty in tests
+    ]
+    reporter.add("table3", "synth10", "FedAvg", float(np.mean(per_client)))
+
+    accs = run_fedavg_ft(
+        world.backbone, clients, tests, c, rounds=rounds, ft_epochs=10, seed=seed
+    )
+    reporter.add("table3", "synth10", "FedAvg-FT", float(np.mean(accs)))
+
+    accs = run_fedproto(
+        world.backbone, clients, tests, c, rounds=rounds, proto_lambda=1.0,
+        seed=seed,
+    )
+    reporter.add("table3", "synth10", "FedProto", float(np.mean(accs)))
+
+    accs, _ = run_fedcgs_personalized(
+        world.backbone, clients, tests, c,
+        proto_lambda=1.0, epochs=local_epochs, lr=0.05, seed=seed,
+    )
+    reporter.add("table3", "synth10", "FedCGS", float(np.mean(accs)))

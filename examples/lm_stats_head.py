@@ -1,0 +1,80 @@
+"""Beyond-paper: FedCGS statistics over an LLM backbone (class = next token).
+
+Trains a reduced gemma-2b for a few hundred steps on a synthetic Markov
+corpus, then builds the TRAINING-FREE GNB language-model head from
+federated (A, B, N) statistics captured across 4 simulated clients, and
+compares its next-token accuracy against the model's own trained head.
+
+This is the end-to-end driver exercising the launch/train substrate:
+~100M-param-class reduced model, a few hundred steps.
+
+    PYTHONPATH=src python examples/lm_stats_head.py [--steps 200]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.classifier import gnb_head
+from repro.core.secure_agg import secure_sum
+from repro.core.statistics import FeatureStats, client_statistics, derive_global
+from repro.data.tokens import TokenStream, synthetic_corpus
+from repro.launch.train import train
+from repro.models import transformer as T
+
+p = argparse.ArgumentParser()
+p.add_argument("--steps", type=int, default=200)
+p.add_argument("--batch", type=int, default=8)
+p.add_argument("--seq", type=int, default=256)
+args = p.parse_args()
+
+# --- 1. pre-train the backbone (this is the "pre-trained model") --------
+print(f"pre-training reduced gemma-2b for {args.steps} steps ...")
+params, losses = train(
+    "gemma-2b", num_steps=args.steps, batch=args.batch, seq=args.seq, lr=1e-3,
+    log_every=max(1, args.steps // 5),
+)
+cfg = get_config("gemma-2b", reduced=True)
+V, d = cfg.vocab_size, cfg.d_model
+print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f}\n")
+
+# --- 2. four "clients", each with its own shard of the corpus -----------
+num_clients = 4
+corpus = synthetic_corpus(V, 200_000, seed=1)
+shards = np.array_split(corpus, num_clients)
+
+client_stats = []
+for i, shard in enumerate(shards):
+    stream = iter(TokenStream(shard, batch=8, seq_len=args.seq, seed=i))
+    stats = FeatureStats.zeros(V, d)
+    for _ in range(4):
+        tokens, targets = next(stream)
+        hidden, _ = T.forward(params, cfg, jnp.asarray(tokens))
+        stats = stats + client_statistics(
+            hidden.reshape(-1, d), jnp.asarray(targets).reshape(-1), V
+        )
+    client_stats.append(stats)
+    print(f"client {i}: {int(jnp.sum(stats.N))} token statistics captured")
+
+# --- 3. SecureAgg + training-free LM head --------------------------------
+agg = secure_sum(client_stats)
+head = gnb_head(derive_global(agg))
+
+# --- 4. evaluate both heads on held-out text ----------------------------
+stream = iter(TokenStream(corpus, batch=16, seq_len=args.seq, seed=999))
+tokens, targets = next(stream)
+hidden, _ = T.forward(params, cfg, jnp.asarray(tokens))
+feats = hidden.reshape(-1, d)
+tgt = jnp.asarray(targets).reshape(-1)
+
+stats_acc = float(head.accuracy(feats, tgt))
+logits = T.unembed(params, cfg, hidden)
+trained_acc = float(jnp.mean((jnp.argmax(logits, -1).reshape(-1) == tgt)))
+print(f"\ntrained unembedding head : next-token acc {trained_acc:.4f}")
+print(f"FedCGS stats head        : next-token acc {stats_acc:.4f}")
+print(f"uniform-random baseline  : {1.0 / V:.6f}")
+print("\nThe stats head was configured WITHOUT any training — one secure")
+print("aggregation of (A, B, N) over clients, then w_j = Σ⁻¹μ_j.")

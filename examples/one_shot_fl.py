@@ -1,0 +1,38 @@
+"""End-to-end one-shot FL comparison — the paper's Table 1 in miniature.
+
+Runs FedCGS against FedAvg(one-shot), Ensemble and FedPFT at two
+heterogeneity levels and prints the comparison. Note how every baseline
+degrades as α drops while FedCGS is bit-identical.
+
+    PYTHONPATH=src python examples/one_shot_fl.py
+"""
+
+import numpy as np
+
+from repro.data import SyntheticSpec, dirichlet_partition, make_classification_data
+from repro.fl.backbone import make_backbone
+from repro.fl.baselines import run_ensemble, run_fedavg_oneshot, run_fedpft
+from repro.fl.fedcgs import run_fedcgs
+
+spec = SyntheticSpec(
+    num_classes=10, input_dim=64, samples_per_class=300, class_sep=1.6
+)
+x, y = map(np.asarray, make_classification_data(spec))
+test = tuple(map(np.asarray, make_classification_data(spec, seed=321)))
+backbone = make_backbone("resnet18-like", spec.input_dim)
+
+print(f"{'alpha':>6} | {'FedAvg':>8} | {'Ensemble':>8} | {'FedPFT':>8} | {'FedCGS':>8}")
+print("-" * 52)
+for alpha in (0.05, 0.5):
+    parts = dirichlet_partition(y, 10, alpha, seed=0)
+    clients = [(x[p], y[p]) for p in parts]
+    a_avg = run_fedavg_oneshot(backbone, clients, 10, test, epochs=15)
+    a_ens = run_ensemble(backbone, clients, 10, test, epochs=15)
+    a_pft = run_fedpft(backbone, clients, 10, test, epochs=15)
+    a_cgs = run_fedcgs(backbone, clients, 10, test_data=test).accuracy
+    print(
+        f"{alpha:>6} | {a_avg:>8.4f} | {a_ens:>8.4f} | {a_pft:>8.4f} | {a_cgs:>8.4f}"
+    )
+
+print("\nFedCGS is exactly α-invariant: the aggregated (A, B, N) are")
+print("partition-independent sums, so heterogeneity cannot affect them.")

@@ -1,0 +1,49 @@
+"""Personalized one-shot FL (paper Eq. 12): clients download the global
+prototypes once and fine-tune locally with the feature-alignment
+regularizer. Compared against Local-only training.
+
+    PYTHONPATH=src python examples/personalized_fl.py
+"""
+
+import numpy as np
+
+from repro.data import (
+    SyntheticSpec,
+    dominant_class_partition,
+    make_classification_data,
+)
+from repro.fl.backbone import make_backbone
+from repro.fl.baselines import run_local_only
+from repro.fl.fedcgs import run_fedcgs_personalized
+
+spec = SyntheticSpec(num_classes=10, input_dim=64, samples_per_class=200)
+x, y = map(np.asarray, make_classification_data(spec))
+xt, yt = map(np.asarray, make_classification_data(spec, seed=55))
+backbone = make_backbone("resnet18-like", spec.input_dim)
+
+# every client: 20% uniform data + 80% from 2 dominant classes
+parts = dominant_class_partition(y, num_clients=5, uniform_fraction=0.2)
+clients = [(x[p], y[p]) for p in parts]
+
+# per-client test sets matching each client's label distribution
+rng = np.random.default_rng(0)
+tests = []
+for p in parts:
+    probs = np.bincount(y[p], minlength=10).astype(float)
+    probs /= probs.sum()
+    w = probs[yt] / probs[yt].sum()
+    idx = rng.choice(len(yt), size=400, p=w, replace=False)
+    tests.append((xt[idx], yt[idx]))
+
+local = run_local_only(backbone, clients, tests, 10, epochs=60)
+print(f"Local-only        : {np.mean(local):.4f} (per-client {np.round(local, 3)})")
+
+accs, gstats = run_fedcgs_personalized(
+    backbone, clients, tests, 10, proto_lambda=1.0, epochs=60, lr=0.05
+)
+print(f"FedCGS-personal.  : {np.mean(accs):.4f} (per-client {np.round(accs, 3)})")
+print(
+    "\nOne extra DOWNLOAD round delivered fixed global prototypes "
+    f"μ {tuple(gstats.mu.shape)}; the regularizer pulls each client's "
+    "features toward them (Eq. 12)."
+)

@@ -1,0 +1,34 @@
+"""Quickstart: FedCGS in ~30 lines.
+
+10 clients with highly skewed (Dirichlet α=0.05) data, one upload round,
+a training-free global classifier.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.data import SyntheticSpec, dirichlet_partition, make_classification_data
+from repro.fl.backbone import make_backbone
+from repro.fl.fedcgs import run_fedcgs
+
+# --- a synthetic 10-class world + a frozen "pre-trained" backbone -------
+spec = SyntheticSpec(num_classes=10, input_dim=64, samples_per_class=400)
+x, y = map(np.asarray, make_classification_data(spec))
+x_test, y_test = map(np.asarray, make_classification_data(spec, seed=123))
+backbone = make_backbone("resnet18-like", spec.input_dim)
+
+# --- extreme label shift: α = 0.05 over 10 clients ----------------------
+parts = dirichlet_partition(y, num_clients=10, alpha=0.05)
+clients = [(x[p], y[p]) for p in parts]
+print("client sizes:", [len(p) for p in parts])
+print("client label skew (client 0):", np.bincount(y[parts[0]], minlength=10))
+
+# --- ONE communication round: upload (A_i, B_i, N_i), SecureAgg, done ---
+result = run_fedcgs(backbone, clients, num_classes=10, test_data=(x_test, y_test))
+
+print(f"\nFedCGS accuracy     : {result.accuracy:.4f}")
+print(f"uploaded floats     : {result.uploaded_floats_per_client:,} per client")
+print(f"  (vs full model    : a ResNet18 upload is 11,181,642 floats)")
+print(f"global prototypes μ : {result.stats.mu.shape}")
+print(f"shared covariance Σ : {result.stats.sigma.shape}")

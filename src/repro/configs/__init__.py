@@ -1,0 +1,54 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(name)`` returns the full-size :class:`ModelConfig`;
+``get_config(name, reduced=True)`` the CPU smoke-test variant.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "llama4_maverick_400b_a17b",
+    "zamba2_1p2b",
+    "chatglm3_6b",
+    "whisper_tiny",
+    "qwen2_moe_a2p7b",
+    "minitron_8b",
+    "qwen2_vl_2b",
+    "gemma_2b",
+    "mamba2_2p7b",
+    "starcoder2_15b",
+]
+
+# the hyphenated public ids map to module names
+ALIASES: Dict[str, str] = {
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "zamba2-1.2b": "zamba2_1p2b",
+    "chatglm3-6b": "chatglm3_6b",
+    "whisper-tiny": "whisper_tiny",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2p7b",
+    "minitron-8b": "minitron_8b",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "gemma-2b": "gemma_2b",
+    "mamba2-2.7b": "mamba2_2p7b",
+    "starcoder2-15b": "starcoder2_15b",
+}
+
+PUBLIC_IDS = list(ALIASES)
+
+
+def get_config(name: str, *, reduced: bool = False) -> ModelConfig:
+    mod_name = ALIASES.get(name, name.replace("-", "_").replace(".", "p"))
+    if mod_name not in ARCH_IDS:
+        raise KeyError(f"unknown architecture {name!r}; known: {PUBLIC_IDS}")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    cfg: ModelConfig = mod.CONFIG
+    return cfg.reduced() if reduced else cfg
+
+
+def all_configs(*, reduced: bool = False) -> Dict[str, ModelConfig]:
+    return {pub: get_config(pub, reduced=reduced) for pub in PUBLIC_IDS}

@@ -1,0 +1,22 @@
+"""chatglm3-6b — dense, 2d-RoPE (rotary on half the head dim), GQA kv=2.
+
+[arXiv:2406.12793 — 28L, d_model=4096, 32 heads / 2 kv heads,
+d_ff=13696 (SwiGLU), vocab=65024.]
+"""
+
+from repro.models.config import BlockGroup, ModelConfig
+
+CONFIG = ModelConfig(
+    name="chatglm3-6b",
+    family="dense",
+    d_model=4096,
+    num_layers=28,
+    num_heads=32,
+    num_kv_heads=2,
+    d_ff=13696,
+    vocab_size=65024,
+    groups=(BlockGroup(("dense",), 28),),
+    rope="2d",
+    mlp_act="silu",
+    citation="arXiv:2406.12793",
+)

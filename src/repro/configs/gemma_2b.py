@@ -1,0 +1,24 @@
+"""gemma-2b — GeGLU, head_dim=256, MQA (kv=1), tied embeddings.
+
+[arXiv:2403.08295 — 18L, d_model=2048, 8 heads x head_dim 256,
+d_ff=16384 (GeGLU), vocab=256000, embeddings scaled by sqrt(d_model).]
+"""
+
+from repro.models.config import BlockGroup, ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-2b",
+    family="dense",
+    d_model=2048,
+    num_layers=18,
+    num_heads=8,
+    num_kv_heads=1,
+    d_ff=16384,
+    vocab_size=256000,
+    head_dim=256,
+    groups=(BlockGroup(("dense",), 18),),
+    rope="standard",
+    mlp_act="geglu",
+    tie_embeddings=True,
+    citation="arXiv:2403.08295",
+)

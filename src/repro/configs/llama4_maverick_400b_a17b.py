@@ -1,0 +1,32 @@
+"""llama4-maverick-400b-a17b — MoE, early fusion.
+
+[hf:meta-llama/Llama-4-Scout-17B-16E (family model card); Maverick:
+128 routed experts, top-1 routing + 1 shared expert, MoE every other
+layer (interleave=2), 48L, d_model=5120, 40 heads GQA kv=8,
+dense d_ff=8192, vocab=202048 -> ~400B total / ~17B active params.]
+"""
+
+from repro.models.config import BlockGroup, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    d_model=5120,
+    num_layers=48,
+    num_heads=40,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202048,
+    groups=(BlockGroup(("dense", "moe"), 24),),
+    rope="standard",
+    rope_theta=500000.0,
+    mlp_act="silu",
+    moe=MoEConfig(
+        num_experts=128,
+        top_k=1,
+        expert_d_ff=8192,
+        num_shared_experts=1,
+        shared_d_ff=8192,
+    ),
+    citation="hf:meta-llama/Llama-4-Scout-17B-16E",
+)

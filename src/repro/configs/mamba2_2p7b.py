@@ -1,0 +1,26 @@
+"""mamba2-2.7b — attention-free SSD (state-space duality).
+
+[arXiv:2405.21060 — 64L, d_model=2560, d_inner=5120 (expand=2),
+head_dim P=64 (80 heads), ssm_state N=128, conv_width=4, vocab=50280,
+no MLP blocks (d_ff=0).]
+
+long_500k runs natively (linear-time scan, O(1) decode state).
+"""
+
+from repro.models.config import BlockGroup, ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    d_model=2560,
+    num_layers=64,
+    num_heads=1,  # attention-free; unused
+    num_kv_heads=1,
+    d_ff=0,
+    vocab_size=50280,
+    groups=(BlockGroup(("mamba",), 64),),
+    rope="none",
+    mlp_act="gelu",
+    ssm=SSMConfig(state_dim=128, head_dim=64, expand=2, conv_width=4, chunk_len=64),
+    citation="arXiv:2405.21060",
+)

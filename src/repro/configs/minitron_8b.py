@@ -1,0 +1,22 @@
+"""minitron-8b — width/depth-pruned Nemotron-4.
+
+[arXiv:2407.14679 — 32L, d_model=4096, 48->32 heads GQA kv=8,
+d_ff=16384, vocab=256000.]
+"""
+
+from repro.models.config import BlockGroup, ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b",
+    family="dense",
+    d_model=4096,
+    num_layers=32,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=256000,
+    groups=(BlockGroup(("dense",), 32),),
+    rope="standard",
+    mlp_act="silu",
+    citation="arXiv:2407.14679",
+)

@@ -1,0 +1,29 @@
+"""qwen2-moe-a2.7b — 60 routed experts top-4 + 4 shared experts.
+
+[hf:Qwen/Qwen1.5-MoE-A2.7B — 24L, d_model=2048, 16 heads (MHA kv=16),
+expert d_ff=1408, shared-expert intermediate 5632, vocab=151936.]
+"""
+
+from repro.models.config import BlockGroup, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    d_model=2048,
+    num_layers=24,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,
+    vocab_size=151936,
+    groups=(BlockGroup(("moe",), 24),),
+    rope="standard",
+    mlp_act="silu",
+    moe=MoEConfig(
+        num_experts=60,
+        top_k=4,
+        expert_d_ff=1408,
+        num_shared_experts=4,
+        shared_d_ff=1408,  # 4 shared experts fused -> 5632 total intermediate
+    ),
+    citation="hf:Qwen/Qwen1.5-MoE-A2.7B",
+)

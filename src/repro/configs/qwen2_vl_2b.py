@@ -1,0 +1,29 @@
+"""qwen2-vl-2b — VLM backbone with M-RoPE (3-section rotary).
+
+[arXiv:2409.12191 — 28L, d_model=1536, 12 heads GQA kv=2, d_ff=8960,
+vocab=151936, multimodal rotary (temporal/height/width sections),
+dynamic-resolution ViT.]
+
+The vision tower is a STUB (the allowed carve-out): ``input_specs``
+provides pre-computed patch embeddings spliced over the first
+``vision_tokens`` positions; M-RoPE position ids arrive as (3, B, S).
+"""
+
+from repro.models.config import BlockGroup, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    d_model=1536,
+    num_layers=28,
+    num_heads=12,
+    num_kv_heads=2,
+    d_ff=8960,
+    vocab_size=151936,
+    head_dim=128,
+    groups=(BlockGroup(("dense",), 28),),
+    rope="mrope",
+    mlp_act="silu",
+    vision_tokens=1024,  # stubbed dynamic-resolution patch budget
+    citation="arXiv:2409.12191",
+)

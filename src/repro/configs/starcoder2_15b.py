@@ -1,0 +1,22 @@
+"""starcoder2-15b — dense GQA code model.
+
+[arXiv:2402.19173 — 40L, d_model=6144, 48 heads GQA kv=4, d_ff=24576,
+vocab=49152, RoPE.]
+"""
+
+from repro.models.config import BlockGroup, ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b",
+    family="dense",
+    d_model=6144,
+    num_layers=40,
+    num_heads=48,
+    num_kv_heads=4,
+    d_ff=24576,
+    vocab_size=49152,
+    groups=(BlockGroup(("dense",), 40),),
+    rope="standard",
+    mlp_act="gelu",
+    citation="arXiv:2402.19173",
+)

@@ -1,0 +1,31 @@
+"""whisper-tiny — encoder-decoder audio model (backbone only).
+
+[arXiv:2212.04356 — 4 encoder + 4 decoder layers, d_model=384,
+6 heads (MHA), d_ff=1536 (plain GELU MLP), vocab=51865, learned
+absolute positions, 1500 mel frames after the conv frontend.]
+
+The mel-spectrogram + conv feature extractor is a STUB (the allowed
+carve-out): ``input_specs`` provides pre-computed (B, 1500, 384) frame
+embeddings. long_500k is SKIPPED for this arch (DESIGN.md §Skips).
+"""
+
+from repro.models.config import BlockGroup, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    d_model=384,
+    num_layers=4,  # decoder layers; encoder declared separately
+    num_heads=6,
+    num_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    head_dim=64,
+    groups=(BlockGroup(("encdec",), 4),),
+    rope="none",  # whisper uses learned absolute positions
+    mlp_act="gelu",
+    encoder_layers=4,
+    encoder_seq_len=1500,
+    max_seq_len=32768,  # backbone carve-out: decode_32k needs 32k positions
+    citation="arXiv:2212.04356",
+)

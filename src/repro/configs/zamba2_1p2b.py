@@ -1,0 +1,31 @@
+"""zamba2-1.2b — hybrid Mamba2 + shared (weight-tied) attention blocks.
+
+[arXiv:2411.15242 — 38 Mamba2 layers, d_model=2048, a single SHARED
+attention+MLP block invoked periodically (weight-tied), ssm_state=64,
+32 heads (kv=32 — full MHA in the shared block), d_ff=8192, vocab=32000.]
+
+Stack: 6 x (6 mamba + 1 shared_attn) + 2 trailing mamba = 38 mamba
+layers with 6 tied-attention invocations.
+"""
+
+from repro.models.config import BlockGroup, ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    d_model=2048,
+    num_layers=38,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32000,
+    head_dim=64,
+    groups=(
+        BlockGroup(("mamba",) * 6 + ("shared_attn",), 6),
+        BlockGroup(("mamba",), 2),
+    ),
+    rope="standard",
+    mlp_act="gelu",
+    ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, conv_width=4, chunk_len=64),
+    citation="arXiv:2411.15242",
+)

@@ -1,0 +1,130 @@
+"""Training-free Gaussian Naive Bayes head (paper Eq. 10-11, appendix Eq. 13-14).
+
+Shared-covariance Gaussian class-conditionals + class priors give a
+*linear* decision rule:
+
+    w_j = Σ⁻¹ μ^j
+    b_j = log π_j − ½ μ^jᵀ Σ⁻¹ μ^j
+
+(The paper's Eq. 11 prints ``b_j = log π_j − ½ μᵀ Σ μ`` — a typo; the
+appendix derivation Eq. 13 makes clear the quadratic form uses Σ⁻¹.
+We implement the correct form and verify against explicit Gaussian
+log-densities in tests.)
+
+Numerics: Σ is symmetrized and ridge-regularized (Σ + εI) before the
+solve; we use Cholesky (SPD) with an eigenvalue-floor fallback.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.statistics import GlobalStatistics
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LinearHead:
+    """W (C, d) + b (C,) — the classifier produced by FedCGS."""
+
+    W: Array
+    b: Array
+
+    def logits(self, features: Array) -> Array:
+        return features @ self.W.T + self.b
+
+    def predict(self, features: Array) -> Array:
+        return jnp.argmax(self.logits(features), axis=-1)
+
+    def accuracy(self, features: Array, labels: Array) -> Array:
+        return jnp.mean((self.predict(features) == labels).astype(jnp.float32))
+
+
+def _solve_spd(sigma: Array, rhs: Array, ridge: float) -> Array:
+    """Solve (Σ + ridge·I) x = rhs via Cholesky."""
+    d = sigma.shape[0]
+    sym = 0.5 * (sigma + sigma.T) + ridge * jnp.eye(d, dtype=sigma.dtype)
+    chol = jnp.linalg.cholesky(sym)
+    return jax.scipy.linalg.cho_solve((chol, True), rhs)
+
+
+def gnb_head(
+    stats: GlobalStatistics,
+    *,
+    ridge: Optional[float] = None,
+    prior_floor: float = 1e-30,
+) -> LinearHead:
+    """Configure the parameter-free classifier from global statistics.
+
+    Args:
+      stats: (μ, Σ, π) from :func:`repro.core.statistics.derive_global`.
+      ridge: Tikhonov term added to Σ. Defaults to 1e-4 · mean(diag Σ),
+        scale-invariant so the head works for any backbone's feature scale.
+    """
+    mu, sigma, pi = stats.mu, stats.sigma, stats.pi
+    if ridge is None:
+        ridge = 1e-4 * float(jnp.mean(jnp.diag(sigma)))
+        ridge = max(ridge, 1e-8)
+    # W = Σ⁻¹ μᵀ solved for all classes at once: (d, C)
+    Wt = _solve_spd(sigma, mu.T, ridge)
+    W = Wt.T  # (C, d)
+    # b_j = log π_j − ½ μ^jᵀ Σ⁻¹ μ^j ; the quadratic form reuses W.
+    quad = jnp.sum(mu * W, axis=1)  # μ^jᵀ Σ⁻¹ μ^j
+    b = jnp.log(jnp.maximum(pi, prior_floor)) - 0.5 * quad
+    return LinearHead(W=W, b=b)
+
+
+def gnb_log_posterior(
+    stats: GlobalStatistics, features: Array, *, ridge: Optional[float] = None
+) -> Array:
+    """Full log p(y|x) (Eq. 10) — softmax over the linear logits."""
+    head = gnb_head(stats, ridge=ridge)
+    return jax.nn.log_softmax(head.logits(features), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Reference implementation via explicit Gaussian log densities — used by
+# tests to confirm the closed-form W, b match Eq. 10 exactly.
+# ---------------------------------------------------------------------------
+
+
+def gaussian_posterior_reference(
+    stats: GlobalStatistics, features: Array, ridge: float
+) -> Array:
+    """log p(y=j | f) from N(f | μ^j, Σ) densities (numerically explicit)."""
+    d = stats.feature_dim
+    sigma = 0.5 * (stats.sigma + stats.sigma.T) + ridge * jnp.eye(d)
+    chol = jnp.linalg.cholesky(sigma)
+
+    def logpdf_one_class(mu_j):
+        diff = features - mu_j[None, :]  # (n, d)
+        z = jax.scipy.linalg.solve_triangular(chol, diff.T, lower=True)  # (d, n)
+        maha = jnp.sum(z * z, axis=0)
+        logdet = 2.0 * jnp.sum(jnp.log(jnp.diag(chol)))
+        return -0.5 * (maha + logdet + d * jnp.log(2 * jnp.pi))
+
+    logpdf = jax.vmap(logpdf_one_class)(stats.mu)  # (C, n)
+    log_prior = jnp.log(jnp.maximum(stats.pi, 1e-30))[:, None]
+    return jax.nn.log_softmax((logpdf + log_prior).T, axis=-1)  # (n, C)
+
+
+# ---------------------------------------------------------------------------
+# LM-stats head (beyond-paper, DESIGN.md §3): class = next-token id.
+# The same (A, B, N) over final hidden states with C = vocab yields a
+# training-free language-model head.  Only difference is scale (C up to
+# 256k), so the solve returns W sharded like an unembedding matrix.
+# ---------------------------------------------------------------------------
+
+
+def lm_head_from_stats(
+    stats: GlobalStatistics, *, ridge: Optional[float] = None
+) -> LinearHead:
+    """Alias with LM-appropriate defaults (no prior floor surprises:
+    unseen tokens get -inf-ish bias exactly like unseen classes)."""
+    return gnb_head(stats, ridge=ridge)

@@ -1,0 +1,68 @@
+"""Feature expansion (paper Fig. 3).
+
+A shared random projection with nonlinearity, injected between the
+frozen backbone and the statistics:  g(x) = act(f(x) @ R / √d).
+
+Every client uses the *same* R (derived from a public seed), so the
+expanded statistics still aggregate exactly.  d_out > d trades
+communication ((C+d)·d grows) for linear separability.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_ACTS = {
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "tanh": jnp.tanh,
+    "identity": lambda x: x,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureExpansion:
+    in_dim: int
+    out_dim: int
+    seed: int = 0
+    activation: str = "relu"
+    concat_identity: bool = True  # keep original features alongside
+
+    @property
+    def expanded_dim(self) -> int:
+        return self.out_dim + (self.in_dim if self.concat_identity else 0)
+
+    def projection(self) -> Array:
+        key = jax.random.key(self.seed)
+        return jax.random.normal(key, (self.in_dim, self.out_dim)) / jnp.sqrt(
+            float(self.in_dim)
+        )
+
+    def __call__(self, features: Array) -> Array:
+        return expand_features(
+            features,
+            self.projection(),
+            activation=self.activation,
+            concat_identity=self.concat_identity,
+        )
+
+
+@partial(jax.jit, static_argnames=("activation", "concat_identity"))
+def expand_features(
+    features: Array,
+    projection: Array,
+    *,
+    activation: str = "relu",
+    concat_identity: bool = True,
+) -> Array:
+    act = _ACTS[activation]
+    projected = act(features @ projection)
+    if concat_identity:
+        return jnp.concatenate([features, projected], axis=-1)
+    return projected

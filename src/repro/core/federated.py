@@ -1,0 +1,119 @@
+"""FedCGS aggregation as a mesh collective (DESIGN.md §3).
+
+The paper's server loop — "sum every client's (A_i, B_i, N_i)" — is an
+all-reduce over the client axis.  Here clients are assigned to the
+("pod", "data") mesh shards; each shard computes the statistics of ITS
+cohort's examples locally and a single ``psum`` realizes the server
+aggregation.  SecureAgg composes: masks cancel INSIDE the psum, so the
+reduction is literally the protocol's trusted aggregator.
+
+``distributed_client_stats`` is the shard_map entry point (explicit
+collectives — auditable); the jit path in ``launch.steps.stats_step``
+lets GSPMD insert the same psum implicitly.  Tests assert both agree
+with the centralized oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.statistics import FeatureStats
+
+Array = jax.Array
+
+
+def _local_stats(features: Array, labels: Array, num_classes: int) -> FeatureStats:
+    f = features.astype(jnp.float32)
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=jnp.float32)
+    return FeatureStats(A=onehot.T @ f, B=f.T @ f, N=jnp.sum(onehot, axis=0))
+
+
+def distributed_client_stats(
+    features: Array,
+    labels: Array,
+    num_classes: int,
+    mesh: Mesh,
+    *,
+    client_axes: Tuple[str, ...] = ("data",),
+) -> FeatureStats:
+    """Global (A, B, N) from batch-sharded (features, labels).
+
+    features: (n, d) sharded over ``client_axes``; labels: (n,).
+    Returns fully-replicated global statistics — every shard (every
+    "client") holds the aggregate, which is what the one-extra-download
+    personalization round distributes anyway.
+    """
+    axes = tuple(a for a in client_axes if a in mesh.axis_names)
+
+    def shard_fn(f_shard: Array, y_shard: Array) -> FeatureStats:
+        local = _local_stats(f_shard, y_shard, num_classes)
+        return jax.tree_util.tree_map(
+            lambda x: jax.lax.psum(x, axes), local
+        )
+
+    in_specs = (P(axes), P(axes))
+    out_specs = FeatureStats(A=P(), B=P(), N=P())
+    fn = jax.shard_map(
+        shard_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs
+    )
+    return fn(features, labels)
+
+
+def masked_distributed_stats(
+    features: Array,
+    labels: Array,
+    num_classes: int,
+    mesh: Mesh,
+    *,
+    base_seed: int = 0,
+    mask_scale: float = 1e3,
+    client_axes: Tuple[str, ...] = ("data",),
+) -> FeatureStats:
+    """SecureAgg-composed variant: each shard adds pairwise-cancelling
+    masks BEFORE the psum, so no unmasked per-shard statistic ever exists
+    outside its shard.  The psum output equals the unmasked aggregate up
+    to float associativity (tested)."""
+    axes = tuple(a for a in client_axes if a in mesh.axis_names)
+
+    def shard_fn(f_shard: Array, y_shard: Array) -> FeatureStats:
+        local = _local_stats(f_shard, y_shard, num_classes)
+        me = jax.lax.axis_index(axes[0]) if len(axes) == 1 else (
+            jax.lax.axis_index(axes[0]) * jax.lax.axis_size(axes[1])
+            + jax.lax.axis_index(axes[1])
+        )
+        n_shards = 1
+        for a in axes:
+            n_shards *= jax.lax.axis_size(a)
+
+        def add_pair_mask(stat, other):
+            key = jax.random.fold_in(
+                jax.random.fold_in(jax.random.key(base_seed), jnp.minimum(me, other)),
+                jnp.maximum(me, other),
+            )
+            leaves, treedef = jax.tree_util.tree_flatten(stat)
+            keys = jax.random.split(key, len(leaves))
+            sign = jnp.where(me < other, 1.0, -1.0)
+            masked = [
+                leaf + sign * mask_scale * jax.random.normal(k, leaf.shape, leaf.dtype)
+                for k, leaf in zip(keys, leaves)
+            ]
+            return jax.tree_util.tree_unflatten(treedef, masked)
+
+        def body(i, stat):
+            return jax.lax.cond(
+                i == me, lambda s: s, lambda s: add_pair_mask(s, i), stat
+            )
+
+        masked = jax.lax.fori_loop(0, n_shards, body, local)
+        return jax.tree_util.tree_map(lambda x: jax.lax.psum(x, axes), masked)
+
+    fn = jax.shard_map(
+        shard_fn, mesh=mesh, in_specs=(P(axes), P(axes)),
+        out_specs=FeatureStats(A=P(), B=P(), N=P()),
+    )
+    return fn(features, labels)

@@ -1,0 +1,97 @@
+"""Pairwise-mask Secure Aggregation (Bonawitz et al. 2017) for FedCGS.
+
+The paper (Algorithm 1 line 5 + §Privacy Discussion) notes that the
+server only ever needs the *sums* A, B, N — so clients can add pairwise
+cancelling masks before upload and the server learns nothing about any
+individual client's statistics.
+
+For every ordered client pair (i, j), i < j, both derive a shared mask
+``m_ij = PRG(seed_ij)`` shaped like the statistic tree.  Client i adds
+``+m_ij``, client j adds ``−m_ij``.  Summed over all clients the masks
+cancel exactly (up to float associativity, ~1e-6 relative — tested).
+
+This is a faithful *functional* model of the protocol: we implement the
+mask algebra and the seed agreement (here: hash of the pair), not the
+networking/dropout-recovery machinery (Shamir shares), which is
+orthogonal to the paper's claim.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _pair_seed(base_seed: int, i: int, j: int) -> jax.Array:
+    """Deterministic shared key for pair (i, j) — both sides can derive it."""
+    lo, hi = (i, j) if i < j else (j, i)
+    key = jax.random.key(base_seed)
+    return jax.random.fold_in(jax.random.fold_in(key, lo), hi)
+
+
+def _mask_like(key: jax.Array, tree: PyTree, scale: float) -> PyTree:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    masks = [
+        scale * jax.random.normal(k, leaf.shape, leaf.dtype)
+        for k, leaf in zip(keys, leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, masks)
+
+
+def mask_client_update(
+    update: PyTree,
+    client_id: int,
+    num_clients: int,
+    *,
+    base_seed: int = 0,
+    mask_scale: float = 1e3,
+) -> PyTree:
+    """Return ``update + Σ_{j>i} m_ij − Σ_{j<i} m_ji`` (client-side step)."""
+    masked = update
+    for other in range(num_clients):
+        if other == client_id:
+            continue
+        key = _pair_seed(base_seed, client_id, other)
+        mask = _mask_like(key, update, mask_scale)
+        sign = 1.0 if client_id < other else -1.0
+        masked = jax.tree_util.tree_map(lambda u, m: u + sign * m, masked, mask)
+    return masked
+
+
+def secure_sum(
+    updates: Sequence[PyTree], *, base_seed: int = 0, mask_scale: float = 1e3
+) -> PyTree:
+    """End-to-end SecureAgg: mask every client, sum at the server.
+
+    The server-side view is *only* the masked updates; the return value is
+    their sum, in which the masks cancel.  Tests assert both (a) the sum
+    matches the unmasked sum and (b) each individual masked update is
+    statistically far from the true update (mask_scale dominates).
+    """
+    masked: List[PyTree] = [
+        mask_client_update(
+            u, i, len(updates), base_seed=base_seed, mask_scale=mask_scale
+        )
+        for i, u in enumerate(updates)
+    ]
+    total = masked[0]
+    for m in masked[1:]:
+        total = jax.tree_util.tree_map(jnp.add, total, m)
+    return total
+
+
+def masked_views(
+    updates: Sequence[PyTree], *, base_seed: int = 0, mask_scale: float = 1e3
+) -> List[PyTree]:
+    """What the server actually receives per client (for privacy tests)."""
+    return [
+        mask_client_update(
+            u, i, len(updates), base_seed=base_seed, mask_scale=mask_scale
+        )
+        for i, u in enumerate(updates)
+    ]

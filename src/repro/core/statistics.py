@@ -1,0 +1,202 @@
+"""FedCGS sufficient statistics (paper §3, Eqs. 3-8).
+
+Each client computes, from frozen-backbone features ``F = f(D_i)``:
+
+- ``A_i[j] = Σ_{x∈D_i, y=j} f(x)``  — per-class feature sums, (C, d)
+- ``B_i   = Σ_{x∈D_i}  f(x)ᵀ f(x)`` — uncentred second moment,  (d, d)
+- ``N_i[j] = |D_i^j|``               — per-class counts,          (C,)
+
+The server aggregates by *summation only* (SecureAgg-compatible) and
+derives the exact global prototypes and shared covariance:
+
+    μ^j = A^j / N^j                                         (Eq. 6)
+    Σ   = (B − μ̄ᵀĀ − Āᵀμ̄ + N μ̄ᵀμ̄) / (N − 1)                (Eq. 7)
+
+where μ̄ = A / N is the global (class-agnostic) feature mean (Eq. 8).
+
+These are *algebraic identities* — the result is independent of how the
+data is partitioned across clients, which is the paper's central
+heterogeneity-resistance claim (Table 4).  ``tests/test_statistics.py``
+verifies partition-invariance with hypothesis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FeatureStats:
+    """The FedCGS sufficient-statistics triple (A, B, N).
+
+    A pytree, so it flows through jit / psum / tree arithmetic directly.
+    ``N`` is float so that SecureAgg masks (real-valued) apply uniformly.
+    """
+
+    A: Array  # (C, d) per-class feature sums
+    B: Array  # (d, d) uncentred second moment  Σ fᵀf
+    N: Array  # (C,)  per-class counts
+
+    @property
+    def num_classes(self) -> int:
+        return self.A.shape[0]
+
+    @property
+    def feature_dim(self) -> int:
+        return self.A.shape[1]
+
+    def __add__(self, other: "FeatureStats") -> "FeatureStats":
+        return FeatureStats(self.A + other.A, self.B + other.B, self.N + other.N)
+
+    @staticmethod
+    def zeros(num_classes: int, feature_dim: int, dtype=jnp.float32) -> "FeatureStats":
+        return FeatureStats(
+            A=jnp.zeros((num_classes, feature_dim), dtype),
+            B=jnp.zeros((feature_dim, feature_dim), dtype),
+            N=jnp.zeros((num_classes,), dtype),
+        )
+
+    def num_elements(self) -> int:
+        """Uploaded parameter count — the paper's (C+d)·d + C."""
+        C, d = self.A.shape
+        return (C + d) * d + C
+
+
+def client_statistics(
+    features: Array,
+    labels: Array,
+    num_classes: int,
+    *,
+    accum_dtype=jnp.float32,
+) -> FeatureStats:
+    """ClientStats(D_i) from Algorithm 1, reformulated for the MXU.
+
+    The per-class scatter-sum A is computed as ``onehot(y)ᵀ F`` and the
+    Gram matrix as ``Fᵀ F`` — both matmuls, no scatter (hardware
+    adaptation noted in DESIGN.md §6).
+
+    Args:
+      features: (n, d) frozen-backbone features for this client's data.
+      labels:   (n,) int class labels in [0, num_classes).
+    """
+    f = features.astype(accum_dtype)
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=accum_dtype)  # (n, C)
+    A = onehot.T @ f  # (C, d)
+    B = f.T @ f  # (d, d)
+    N = jnp.sum(onehot, axis=0)  # (C,)
+    return FeatureStats(A=A, B=B, N=N)
+
+
+def aggregate(stats: Iterable[FeatureStats]) -> FeatureStats:
+    """Server aggregation (Algorithm 1 lines 4-11): pure summation."""
+    stats = list(stats)
+    if not stats:
+        raise ValueError("aggregate() needs at least one client's statistics")
+    out = stats[0]
+    for s in stats[1:]:
+        out = out + s
+    return out
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GlobalStatistics:
+    """Derived global quantities: prototypes, shared covariance, priors."""
+
+    mu: Array  # (C, d) class prototypes μ^j
+    sigma: Array  # (d, d) shared empirical covariance Σ
+    pi: Array  # (C,)  class priors π_j = N^j / N
+    counts: Array  # (C,)  N^j (kept for personalization / diagnostics)
+
+    @property
+    def num_classes(self) -> int:
+        return self.mu.shape[0]
+
+    @property
+    def feature_dim(self) -> int:
+        return self.mu.shape[1]
+
+
+def derive_global(stats: FeatureStats, *, min_count: float = 1e-12) -> GlobalStatistics:
+    """Compute (μ, Σ, π) from aggregated (A, B, N) — Eqs. 6-8.
+
+    Classes with zero observed count get a zero prototype and -inf-safe
+    prior (π_j = 0); the GNB head gives them log π_j = -inf so they are
+    never predicted, matching the centralized behaviour.
+    """
+    A, B, N = stats.A, stats.B, stats.N
+    n_total = jnp.sum(N)
+    # Eq. 6 — per-class prototypes; guard empty classes.
+    mu = A / jnp.maximum(N, min_count)[:, None]
+    mu = jnp.where((N > 0)[:, None], mu, 0.0)
+    # Eq. 8 — global mean from the *summed* A (not the per-class means).
+    a_total = jnp.sum(A, axis=0)  # (d,)
+    mean = a_total / jnp.maximum(n_total, min_count)
+    # Eq. 7 — shared covariance.  μ̄ᵀĀ + Āᵀμ̄ = outer(mean, a) + outer(a, mean).
+    cross = jnp.outer(mean, a_total)
+    sigma = (B - cross - cross.T + n_total * jnp.outer(mean, mean)) / jnp.maximum(
+        n_total - 1.0, 1.0
+    )
+    pi = N / jnp.maximum(n_total, min_count)
+    return GlobalStatistics(mu=mu, sigma=sigma, pi=pi, counts=N)
+
+
+def centralized_statistics(
+    features: Array, labels: Array, num_classes: int
+) -> GlobalStatistics:
+    """Ground-truth (μ̂, Σ̂) computed on pooled data — the paper's Table 4
+    reference. Uses the direct definition (centered sum of outer products),
+    *not* the A/B identity, so the exactness test compares two genuinely
+    different computations."""
+    f = features.astype(jnp.float32)
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=jnp.float32)
+    N = jnp.sum(onehot, axis=0)
+    mu = (onehot.T @ f) / jnp.maximum(N, 1e-12)[:, None]
+    mean = jnp.mean(f, axis=0)
+    centered = f - mean[None, :]
+    sigma = (centered.T @ centered) / jnp.maximum(f.shape[0] - 1.0, 1.0)
+    pi = N / f.shape[0]
+    return GlobalStatistics(mu=mu, sigma=sigma, pi=pi, counts=N)
+
+
+def statistics_deviation(
+    ours: GlobalStatistics, ref: GlobalStatistics
+) -> tuple[Array, Array]:
+    """(Δμ, ΔΣ) L2 errors, the paper's Table 4 metric."""
+    dmu = jnp.linalg.norm(ours.mu - ref.mu)
+    dsigma = jnp.linalg.norm(ours.sigma - ref.sigma)
+    return dmu, dsigma
+
+
+# ---------------------------------------------------------------------------
+# Streaming / batched accumulation — clients with datasets too large for one
+# forward pass fold batches into a running FeatureStats.
+# ---------------------------------------------------------------------------
+
+
+def accumulate_batch(
+    running: FeatureStats, features: Array, labels: Array
+) -> FeatureStats:
+    """Fold one batch of (features, labels) into a running statistic."""
+    batch = client_statistics(features, labels, running.num_classes)
+    return running + batch
+
+
+def client_statistics_batched(
+    feature_batches: Sequence[Array],
+    label_batches: Sequence[Array],
+    num_classes: int,
+    feature_dim: Optional[int] = None,
+) -> FeatureStats:
+    d = feature_dim if feature_dim is not None else feature_batches[0].shape[-1]
+    out = FeatureStats.zeros(num_classes, d)
+    for f, y in zip(feature_batches, label_batches):
+        out = accumulate_batch(out, f, y)
+    return out

@@ -1,0 +1,24 @@
+from repro.data.synthetic import (
+    SyntheticSpec,
+    make_classification_data,
+    make_domain_shift_data,
+)
+from repro.data.partition import (
+    dirichlet_partition,
+    dominant_class_partition,
+    domain_partition,
+    uniform_partition,
+)
+from repro.data.tokens import TokenStream, synthetic_corpus
+
+__all__ = [
+    "SyntheticSpec",
+    "make_classification_data",
+    "make_domain_shift_data",
+    "dirichlet_partition",
+    "dominant_class_partition",
+    "domain_partition",
+    "uniform_partition",
+    "TokenStream",
+    "synthetic_corpus",
+]

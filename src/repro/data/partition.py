@@ -1,0 +1,115 @@
+"""Client partitioners — the paper's three data-heterogeneity settings.
+
+- :func:`dirichlet_partition` — label shift (Table 1): per-class Dirichlet(α)
+  proportions over clients; lower α = more heterogeneous.
+- :func:`domain_partition` — feature shift (Table 2): each training domain's
+  data is split uniformly over ``clients_per_domain`` clients.
+- :func:`dominant_class_partition` — the personalized-FL setting (Table 3):
+  every client owns s% uniform data + (100−s)% from its dominant classes,
+  all clients equal-sized.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+Partition = List[np.ndarray]  # per-client index arrays into the dataset
+
+
+def dirichlet_partition(
+    labels: np.ndarray,
+    num_clients: int,
+    alpha: float,
+    *,
+    seed: int = 0,
+    min_size: int = 1,
+) -> Partition:
+    """Per-class Dirichlet split (the standard non-IID FL benchmark split)."""
+    labels = np.asarray(labels)
+    rng = np.random.default_rng(seed)
+    classes = np.unique(labels)
+    for _ in range(100):  # retry until every client has >= min_size samples
+        buckets: List[List[int]] = [[] for _ in range(num_clients)]
+        for c in classes:
+            idx = np.flatnonzero(labels == c)
+            rng.shuffle(idx)
+            props = rng.dirichlet(np.full(num_clients, alpha))
+            cuts = (np.cumsum(props)[:-1] * len(idx)).astype(int)
+            for b, part in zip(buckets, np.split(idx, cuts)):
+                b.extend(part.tolist())
+        if min(len(b) for b in buckets) >= min_size:
+            break
+    return [np.array(sorted(b), dtype=np.int64) for b in buckets]
+
+
+def uniform_partition(n: int, num_clients: int, *, seed: int = 0) -> Partition:
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(n)
+    return [np.sort(part).astype(np.int64) for part in np.array_split(idx, num_clients)]
+
+
+def domain_partition(
+    domain_sizes: Sequence[int], clients_per_domain: int, *, seed: int = 0
+) -> List[Tuple[int, np.ndarray]]:
+    """Feature-shift split: returns [(domain_id, indices-into-that-domain)].
+
+    Data from a single domain may spread over several clients, but each
+    client belongs to exactly one domain (paper §Experiments).
+    """
+    out: List[Tuple[int, np.ndarray]] = []
+    for dom, n in enumerate(domain_sizes):
+        for part in uniform_partition(n, clients_per_domain, seed=seed + dom):
+            out.append((dom, part))
+    return out
+
+
+def dominant_class_partition(
+    labels: np.ndarray,
+    num_clients: int,
+    *,
+    uniform_fraction: float = 0.2,
+    dominant_classes_per_client: int = 2,
+    seed: int = 0,
+) -> Partition:
+    """Personalized-FL split: s% uniform + (1−s)% from dominant classes.
+
+    All clients end up the same size (paper: 20% uniform by default).
+    """
+    labels = np.asarray(labels)
+    n = len(labels)
+    rng = np.random.default_rng(seed)
+    per_client = n // num_clients
+    n_uni = int(per_client * uniform_fraction)
+    n_dom = per_client - n_uni
+
+    classes = np.unique(labels)
+    by_class = {c: list(rng.permutation(np.flatnonzero(labels == c))) for c in classes}
+    pool = list(rng.permutation(n))
+    taken = np.zeros(n, bool)
+
+    parts: Partition = []
+    for i in range(num_clients):
+        dom_classes = classes[
+            (i * dominant_classes_per_client + np.arange(dominant_classes_per_client))
+            % len(classes)
+        ]
+        mine: List[int] = []
+        # dominant part — round-robin over this client's dominant classes
+        for j in range(n_dom):
+            c = dom_classes[j % len(dom_classes)]
+            while by_class[c] and taken[by_class[c][-1]]:
+                by_class[c].pop()
+            if by_class[c]:
+                k = by_class[c].pop()
+                taken[k] = True
+                mine.append(int(k))
+        # uniform part — anything untaken
+        while len(mine) < per_client and pool:
+            k = pool.pop()
+            if not taken[k]:
+                taken[k] = True
+                mine.append(int(k))
+        parts.append(np.array(sorted(mine), dtype=np.int64))
+    return parts

@@ -1,0 +1,14 @@
+from repro.fl.backbone import Backbone, BACKBONES
+from repro.fl.fedcgs import (
+    FedCGSResult,
+    run_fedcgs,
+    run_fedcgs_personalized,
+)
+
+__all__ = [
+    "Backbone",
+    "BACKBONES",
+    "FedCGSResult",
+    "run_fedcgs",
+    "run_fedcgs_personalized",
+]

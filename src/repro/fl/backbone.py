@@ -1,0 +1,82 @@
+"""Frozen "pre-trained" feature extractors for the FL experiments.
+
+The paper uses ImageNet-pretrained CNNs (ResNet18/50, MobileNetV2,
+EfficientNetB0); offline we substitute fixed random-feature MLPs of
+varying width/depth (DESIGN.md §2).  Random-feature maps are a standard
+stand-in: they are deterministic functions of a public seed, frozen, and
+their quality ladder (wider/deeper => more separable features) mirrors
+the paper's Table 5 pre-trained-model ladder.
+
+Backbones are also *trainable* pytrees so the personalization
+experiments (fine-tune the whole model, Eq. 12) and FedAvg-style
+baselines can update them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Dict[str, Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Backbone:
+    """An MLP feature extractor f: R^input_dim -> R^feature_dim."""
+
+    name: str
+    input_dim: int
+    feature_dim: int
+    hidden: Tuple[int, ...] = (256,)
+    seed: int = 0
+
+    def init(self, seed: int | None = None) -> PyTree:
+        key = jax.random.key(self.seed if seed is None else seed)
+        dims = (self.input_dim,) + self.hidden + (self.feature_dim,)
+        params: PyTree = {}
+        for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+            key, k = jax.random.split(key)
+            params[f"w{i}"] = jax.random.normal(k, (din, dout)) / jnp.sqrt(din)
+            params[f"b{i}"] = jnp.zeros((dout,))
+        return params
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.hidden) + 1
+
+    def apply(self, params: PyTree, x: Array) -> Array:
+        h = x
+        for i in range(self.num_layers):
+            h = h @ params[f"w{i}"] + params[f"b{i}"]
+            if i < self.num_layers - 1:
+                h = jax.nn.gelu(h)
+        # final nonlinearity: pre-trained-CNN features are post-ReLU
+        return jax.nn.relu(h)
+
+    def features(self, x: Array, *, params: PyTree | None = None) -> Array:
+        return self.apply(self.init() if params is None else params, x)
+
+
+def make_backbone(name: str, input_dim: int) -> Backbone:
+    """The Table-5 ladder of 'pre-trained models'."""
+    ladder = {
+        # name:            (hidden,           feature_dim)
+        "resnet18-like": ((256, 256), 128),
+        "resnet50-like": ((512, 512, 512), 256),
+        "mobilenet-like": ((128,), 64),
+        "efficientnet-like": ((192, 192), 96),
+    }
+    hidden, feat = ladder[name]
+    return Backbone(name=name, input_dim=input_dim, feature_dim=feat, hidden=hidden)
+
+
+BACKBONES: List[str] = [
+    "resnet18-like",
+    "resnet50-like",
+    "mobilenet-like",
+    "efficientnet-like",
+]

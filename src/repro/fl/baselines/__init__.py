@@ -1,0 +1,23 @@
+from repro.fl.baselines.fedavg import (
+    run_ensemble,
+    run_fedavg_oneshot,
+    run_fedavg_ft,
+    run_fedavg_multiround,
+    run_local_only,
+)
+from repro.fl.baselines.fedpft import run_fedpft
+from repro.fl.baselines.ccvr import run_ccvr
+from repro.fl.baselines.dense_kd import run_dense
+from repro.fl.baselines.fedproto import run_fedproto
+
+__all__ = [
+    "run_fedavg_oneshot",
+    "run_fedavg_multiround",
+    "run_fedavg_ft",
+    "run_local_only",
+    "run_ensemble",
+    "run_fedpft",
+    "run_ccvr",
+    "run_dense",
+    "run_fedproto",
+]

@@ -1,0 +1,86 @@
+"""CCVR (Luo et al. 2021) — classifier calibration with virtual features.
+
+Clients upload class-wise (mean, covariance, count) of their features;
+the server combines them into global class-wise Gaussians, samples
+virtual features, and retrains the classifier.  The paper contrasts
+FedCGS against CCVR on three axes: CCVR uploads C covariance matrices
+(C·d² floats — huge), its combination rule is incompatible with
+SecureAgg (requires per-client moments), and sampled-feature retraining
+is configuration-sensitive.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.backbone import Backbone
+from repro.fl.baselines.fedpft import _train_linear_head
+
+Dataset = Tuple[np.ndarray, np.ndarray]
+
+
+def run_ccvr(
+    backbone: Backbone,
+    client_data: Sequence[Dataset],
+    num_classes: int,
+    test_data: Dataset,
+    *,
+    samples_per_class: int = 500,
+    epochs: int = 50,
+    seed: int = 0,
+) -> float:
+    rng = np.random.default_rng(seed)
+    d = backbone.feature_dim
+
+    # --- clients upload per-class first+second moments (NOT SecureAgg-able:
+    # the server needs every client's own mean to combine covariances)
+    mu_c = np.zeros((len(client_data), num_classes, d))
+    cov_c = np.zeros((len(client_data), num_classes, d, d))
+    n_c = np.zeros((len(client_data), num_classes), dtype=np.int64)
+    for i, (x, y) in enumerate(client_data):
+        feats = np.asarray(backbone.features(jnp.asarray(x)))
+        y = np.asarray(y)
+        for c in range(num_classes):
+            sel = feats[y == c]
+            n_c[i, c] = len(sel)
+            if len(sel) >= 1:
+                mu_c[i, c] = sel.mean(axis=0)
+            if len(sel) >= 2:
+                cov_c[i, c] = np.cov(sel, rowvar=False)
+
+    # --- server: combine into global class-wise Gaussians (CCVR Eq. 3-4)
+    synth_x, synth_y = [], []
+    for c in range(num_classes):
+        nc = n_c[:, c].sum()
+        if nc < 2:
+            continue
+        mu = (n_c[:, c : c + 1] * mu_c[:, c]).sum(axis=0) / nc
+        # law of total covariance over clients
+        ex_cov = sum(
+            (n_c[i, c] - 1) / (nc - 1) * cov_c[i, c] for i in range(len(client_data))
+        )
+        cov_mu = sum(
+            n_c[i, c] / (nc - 1) * np.outer(mu_c[i, c] - mu, mu_c[i, c] - mu)
+            for i in range(len(client_data))
+        )
+        cov = ex_cov + cov_mu
+        cov += 1e-4 * np.trace(cov) / d * np.eye(d)
+        samp = rng.multivariate_normal(mu, cov, size=samples_per_class)
+        synth_x.append(np.maximum(samp, 0.0))  # features are post-ReLU
+        synth_y.append(np.full(samples_per_class, c, dtype=np.int64))
+
+    feats = np.concatenate(synth_x)
+    labels = np.concatenate(synth_y)
+    w, b = _train_linear_head(feats, labels, num_classes, epochs=epochs, seed=seed)
+
+    xt = backbone.features(jnp.asarray(test_data[0]))
+    pred = jnp.argmax(xt @ w + b, axis=-1)
+    return float(jnp.mean((pred == jnp.asarray(test_data[1])).astype(jnp.float32)))
+
+
+def ccvr_upload_floats(d: int, num_classes: int) -> int:
+    """C·(d² + d + 1) — per-class covariance dominates."""
+    return num_classes * (d * d + d + 1)

@@ -1,0 +1,167 @@
+"""FedAvg-family baselines: one-shot FedAvg, multi-round FedAvg,
+FedAvg-FT, Local-only, and the Ensemble upper bound.
+
+All train (backbone + linear head) with SGD exactly as the paper's
+configuration (batch 128, momentum 0.9, lr 0.01, 50 local epochs for
+the one-shot setting).
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.backbone import Backbone
+from repro.fl.trainer import ClassifierModel, train_local
+from repro.optim import sgd
+
+Array = jax.Array
+PyTree = Any
+Dataset = Tuple[np.ndarray, np.ndarray]
+
+
+def _train_clients(
+    model: ClassifierModel,
+    client_data: Sequence[Dataset],
+    *,
+    epochs: int,
+    lr: float = 0.01,
+    momentum: float = 0.9,
+    seed: int = 0,
+    init_params: Optional[PyTree] = None,
+) -> List[PyTree]:
+    opt = sgd(lr, momentum=momentum)
+    out = []
+    for i, (x, y) in enumerate(client_data):
+        params = model.init(seed + i) if init_params is None else init_params
+        params, _ = train_local(
+            model, params, x, y, opt, epochs=epochs, seed=seed + i
+        )
+        out.append(params)
+    return out
+
+
+def _weighted_average(params_list: Sequence[PyTree], sizes: Sequence[int]) -> PyTree:
+    total = float(sum(sizes))
+    w = [s / total for s in sizes]
+    return jax.tree_util.tree_map(
+        lambda *leaves: sum(wi * l for wi, l in zip(w, leaves)), *params_list
+    )
+
+
+def run_fedavg_oneshot(
+    backbone: Backbone,
+    client_data: Sequence[Dataset],
+    num_classes: int,
+    test_data: Dataset,
+    *,
+    epochs: int = 50,
+    seed: int = 0,
+) -> float:
+    """ONE round: local training from a COMMON init, then parameter averaging."""
+    model = ClassifierModel(backbone=backbone, num_classes=num_classes)
+    common = model.init(seed)
+    locals_ = _train_clients(
+        model, client_data, epochs=epochs, seed=seed, init_params=common
+    )
+    avg = _weighted_average(locals_, [len(x) for x, _ in client_data])
+    return model.accuracy(avg, jnp.asarray(test_data[0]), jnp.asarray(test_data[1]))
+
+
+def run_fedavg_multiround(
+    backbone: Backbone,
+    client_data: Sequence[Dataset],
+    num_classes: int,
+    test_data: Dataset,
+    *,
+    rounds: int = 100,
+    local_epochs: int = 1,
+    seed: int = 0,
+    return_params: bool = False,
+):
+    """Classic FedAvg (the personalized-FL baseline: 100 rounds, 1 epoch)."""
+    model = ClassifierModel(backbone=backbone, num_classes=num_classes)
+    global_params = model.init(seed)
+    sizes = [len(x) for x, _ in client_data]
+    for r in range(rounds):
+        locals_ = _train_clients(
+            model, client_data, epochs=local_epochs, seed=seed + r,
+            init_params=global_params,
+        )
+        global_params = _weighted_average(locals_, sizes)
+    acc = model.accuracy(
+        global_params, jnp.asarray(test_data[0]), jnp.asarray(test_data[1])
+    )
+    if return_params:
+        return acc, model, global_params
+    return acc
+
+
+def run_fedavg_ft(
+    backbone: Backbone,
+    client_data: Sequence[Dataset],
+    client_test: Sequence[Dataset],
+    num_classes: int,
+    *,
+    rounds: int = 100,
+    ft_epochs: int = 10,
+    seed: int = 0,
+) -> List[float]:
+    """FedAvg + local fine-tuning (the strong personalized baseline)."""
+    model = ClassifierModel(backbone=backbone, num_classes=num_classes)
+    # train the global model on the union via multi-round FedAvg
+    _, model, global_params = run_fedavg_multiround(
+        backbone, client_data, num_classes,
+        (client_test[0][0], client_test[0][1]),
+        rounds=rounds, seed=seed, return_params=True,
+    )
+    opt = sgd(0.01, momentum=0.5, weight_decay=5e-4)
+    accs = []
+    for i, ((x, y), (xt, yt)) in enumerate(zip(client_data, client_test)):
+        params, _ = train_local(
+            model, global_params, x, y, opt, epochs=ft_epochs, seed=seed + i
+        )
+        accs.append(model.accuracy(params, jnp.asarray(xt), jnp.asarray(yt)))
+    return accs
+
+
+def run_local_only(
+    backbone: Backbone,
+    client_data: Sequence[Dataset],
+    client_test: Sequence[Dataset],
+    num_classes: int,
+    *,
+    epochs: int = 200,
+    seed: int = 0,
+) -> List[float]:
+    model = ClassifierModel(backbone=backbone, num_classes=num_classes)
+    locals_ = _train_clients(model, client_data, epochs=epochs, seed=seed)
+    return [
+        model.accuracy(p, jnp.asarray(xt), jnp.asarray(yt))
+        for p, (xt, yt) in zip(locals_, client_test)
+    ]
+
+
+def run_ensemble(
+    backbone: Backbone,
+    client_data: Sequence[Dataset],
+    num_classes: int,
+    test_data: Dataset,
+    *,
+    epochs: int = 50,
+    seed: int = 0,
+    return_models: bool = False,
+):
+    """Logit-ensemble of independently trained local models (upper bound
+    for DENSE; heavy server storage — the paper's stated drawback)."""
+    model = ClassifierModel(backbone=backbone, num_classes=num_classes)
+    locals_ = _train_clients(model, client_data, epochs=epochs, seed=seed)
+    xt, yt = jnp.asarray(test_data[0]), jnp.asarray(test_data[1])
+    logits = sum(jax.nn.softmax(model.logits(p, xt), axis=-1) for p in locals_)
+    acc = float(jnp.mean((jnp.argmax(logits, -1) == yt).astype(jnp.float32)))
+    if return_models:
+        return acc, model, locals_
+    return acc

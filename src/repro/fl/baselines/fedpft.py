@@ -1,0 +1,168 @@
+"""FedPFT (Beitollahi et al. 2024) — the paper's closest baseline.
+
+Each client fits a class-conditional diagonal-covariance GMM with K_g
+components on its frozen-backbone features and uploads (means, vars,
+weights, counts).  The server samples class-labelled synthetic features
+from every client's GMMs (count-proportional) and trains a linear head
+on them with SGD.
+
+Upload size per client: (2d + 1)·K_g·C floats (paper §Communication).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.backbone import Backbone
+
+Array = jax.Array
+Dataset = Tuple[np.ndarray, np.ndarray]
+
+
+@dataclasses.dataclass
+class GMM:
+    """Diagonal-covariance Gaussian mixture (one per client per class)."""
+
+    means: np.ndarray  # (K, d)
+    vars: np.ndarray  # (K, d)
+    weights: np.ndarray  # (K,)
+    count: int  # #samples this class had on this client
+
+
+def fit_gmm(
+    feats: np.ndarray, k: int, *, iters: int = 50, seed: int = 0, eps: float = 1e-4
+) -> GMM:
+    """Diagonal EM with k-means++-style seeding (numpy; small data)."""
+    rng = np.random.default_rng(seed)
+    n, d = feats.shape
+    k = min(k, n)
+    # -- init: distance-weighted center choice
+    centers = [feats[rng.integers(n)]]
+    for _ in range(1, k):
+        d2 = np.min(
+            [np.sum((feats - c) ** 2, axis=1) for c in centers], axis=0
+        )
+        p = d2 / max(d2.sum(), 1e-12)
+        centers.append(feats[rng.choice(n, p=p)])
+    means = np.stack(centers)
+    vars_ = np.full((k, d), feats.var(axis=0) + eps)
+    weights = np.full(k, 1.0 / k)
+
+    for _ in range(iters):
+        # E-step: responsibilities (log-domain)
+        log_w = np.log(weights + 1e-12)[None]  # (1, K)
+        diff = feats[:, None, :] - means[None]  # (n, K, d)
+        log_p = (
+            -0.5 * np.sum(diff**2 / vars_[None], axis=2)
+            - 0.5 * np.sum(np.log(2 * np.pi * vars_), axis=1)[None]
+        )
+        log_r = log_w + log_p
+        log_r -= log_r.max(axis=1, keepdims=True)
+        r = np.exp(log_r)
+        r /= r.sum(axis=1, keepdims=True)
+        # M-step
+        nk = r.sum(axis=0) + 1e-8  # (K,)
+        means = (r.T @ feats) / nk[:, None]
+        diff = feats[:, None, :] - means[None]
+        vars_ = np.einsum("nk,nkd->kd", r, diff**2) / nk[:, None] + eps
+        weights = nk / n
+    return GMM(means=means, vars=vars_, weights=weights, count=n)
+
+
+def gmm_sample(gmm: GMM, n: int, rng: np.random.Generator) -> np.ndarray:
+    comp = rng.choice(len(gmm.weights), size=n, p=gmm.weights / gmm.weights.sum())
+    return gmm.means[comp] + np.sqrt(gmm.vars[comp]) * rng.standard_normal(
+        (n, gmm.means.shape[1])
+    )
+
+
+def _train_linear_head(
+    feats: np.ndarray,
+    labels: np.ndarray,
+    num_classes: int,
+    *,
+    epochs: int = 50,
+    lr: float = 0.01,
+    momentum: float = 0.9,
+    batch: int = 128,
+    seed: int = 0,
+) -> Tuple[Array, Array]:
+    d = feats.shape[1]
+    key = jax.random.key(seed)
+    w = jax.random.normal(key, (d, num_classes)) / jnp.sqrt(d)
+    b = jnp.zeros((num_classes,))
+    mw, mb = jnp.zeros_like(w), jnp.zeros_like(b)
+
+    @jax.jit
+    def step(w, b, mw, mb, x, y):
+        def loss_fn(w, b):
+            logp = jax.nn.log_softmax(x @ w + b, axis=-1)
+            return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+        gw, gb = jax.grad(loss_fn, argnums=(0, 1))(w, b)
+        mw2, mb2 = momentum * mw + gw, momentum * mb + gb
+        return w - lr * mw2, b - lr * mb2, mw2, mb2
+
+    rng = np.random.default_rng(seed)
+    n = len(feats)
+    bs = min(batch, n)
+    xj, yj = jnp.asarray(feats, jnp.float32), jnp.asarray(labels)
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for s in range(0, n - bs + 1, bs):
+            idx = order[s : s + bs]
+            w, b, mw, mb = step(w, b, mw, mb, xj[idx], yj[idx])
+    return w, b
+
+
+def run_fedpft(
+    backbone: Backbone,
+    client_data: Sequence[Dataset],
+    num_classes: int,
+    test_data: Dataset,
+    *,
+    k_components: int = 10,
+    epochs: int = 50,
+    seed: int = 0,
+) -> float:
+    """Full FedPFT: per-(client, class) GMM upload -> sample -> train head."""
+    rng = np.random.default_rng(seed)
+    # --- clients: fit class-conditional GMMs on frozen features
+    gmms: List[List[Optional[GMM]]] = []
+    for ci, (x, y) in enumerate(client_data):
+        feats = np.asarray(backbone.features(jnp.asarray(x)))
+        per_class: List[Optional[GMM]] = []
+        for c in range(num_classes):
+            sel = feats[np.asarray(y) == c]
+            per_class.append(
+                fit_gmm(sel, k_components, seed=seed + 31 * ci + c)
+                if len(sel) >= 2
+                else None
+            )
+        gmms.append(per_class)
+
+    # --- server: count-matched sampling, then head training
+    synth_x, synth_y = [], []
+    for per_class in gmms:
+        for c, g in enumerate(per_class):
+            if g is None:
+                continue
+            synth_x.append(gmm_sample(g, g.count, rng))
+            synth_y.append(np.full(g.count, c, dtype=np.int64))
+    feats = np.concatenate(synth_x)
+    labels = np.concatenate(synth_y)
+    w, b = _train_linear_head(feats, labels, num_classes, epochs=epochs, seed=seed)
+
+    xt = backbone.features(jnp.asarray(test_data[0]))
+    pred = jnp.argmax(xt @ w + b, axis=-1)
+    return float(jnp.mean((pred == jnp.asarray(test_data[1])).astype(jnp.float32)))
+
+
+def fedpft_upload_floats(d: int, k: int, num_classes: int) -> int:
+    """(2d + 1)·K_g·C — the paper's communication accounting."""
+    return (2 * d + 1) * k * num_classes

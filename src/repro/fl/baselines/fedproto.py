@@ -1,0 +1,75 @@
+"""FedProto (Tan et al. 2022) — multi-round prototype-sharing pFL baseline.
+
+Each round: clients train locally with a prototype-alignment term toward
+the CURRENT global prototypes, then upload their class prototypes; the
+server re-averages them.  Contrast with FedCGS-personalized: FedCGS
+downloads FIXED exact global prototypes once (one-shot), FedProto needs
+``rounds`` communication rounds and its prototypes drift with training.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.backbone import Backbone
+from repro.fl.trainer import ClassifierModel, train_local
+from repro.optim import sgd
+
+Dataset = Tuple[np.ndarray, np.ndarray]
+
+
+def _client_prototypes(
+    model: ClassifierModel, params, x: np.ndarray, y: np.ndarray, num_classes: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    feats = np.asarray(model.features(params, jnp.asarray(x)))
+    y = np.asarray(y)
+    protos = np.zeros((num_classes, feats.shape[1]))
+    counts = np.zeros(num_classes)
+    for c in range(num_classes):
+        sel = feats[y == c]
+        counts[c] = len(sel)
+        if len(sel):
+            protos[c] = sel.mean(axis=0)
+    return protos, counts
+
+
+def run_fedproto(
+    backbone: Backbone,
+    client_data: Sequence[Dataset],
+    client_test: Sequence[Dataset],
+    num_classes: int,
+    *,
+    rounds: int = 100,
+    local_epochs: int = 1,
+    proto_lambda: float = 1.0,
+    lr: float = 0.01,
+    seed: int = 0,
+) -> List[float]:
+    model = ClassifierModel(backbone=backbone, num_classes=num_classes)
+    opt = sgd(lr, momentum=0.5, weight_decay=5e-4)
+    client_params = [model.init(seed + i) for i in range(len(client_data))]
+    global_protos: Optional[jnp.ndarray] = None
+
+    for r in range(rounds):
+        protos_sum = np.zeros((num_classes, backbone.feature_dim))
+        counts_sum = np.zeros(num_classes)
+        for i, (x, y) in enumerate(client_data):
+            client_params[i], _ = train_local(
+                model, client_params[i], x, y, opt,
+                epochs=local_epochs, seed=seed + 97 * r + i,
+                prototypes=global_protos, proto_lambda=proto_lambda if r else 0.0,
+            )
+            p, c = _client_prototypes(model, client_params[i], x, y, num_classes)
+            protos_sum += p * c[:, None]
+            counts_sum += c
+        global_protos = jnp.asarray(
+            protos_sum / np.maximum(counts_sum, 1.0)[:, None], jnp.float32
+        )
+
+    return [
+        model.accuracy(p, jnp.asarray(xt), jnp.asarray(yt))
+        for p, (xt, yt) in zip(client_params, client_test)
+    ]

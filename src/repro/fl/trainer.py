@@ -1,0 +1,117 @@
+"""Generic local trainer: (backbone [+ linear head]) x SGD x epochs.
+
+Shared by every backprop baseline (FedAvg, Ensemble, DENSE, FedPFT's
+server-side head training, FedAvg-FT, Local-only, FedProto, and
+FedCGS-personalized).  The jitted step is cached per (shapes, optimizer)
+so sweeping 10 clients retraces nothing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.backbone import Backbone
+from repro.optim import Optimizer, apply_updates
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassifierModel:
+    """backbone + linear head; the trainable unit of all baselines."""
+
+    backbone: Backbone
+    num_classes: int
+
+    def init(self, seed: int = 0) -> PyTree:
+        bp = self.backbone.init(seed)
+        key = jax.random.key(seed + 1)
+        head_w = jax.random.normal(
+            key, (self.backbone.feature_dim, self.num_classes)
+        ) / jnp.sqrt(self.backbone.feature_dim)
+        return {"backbone": bp, "head_w": head_w, "head_b": jnp.zeros((self.num_classes,))}
+
+    def features(self, params: PyTree, x: Array) -> Array:
+        return self.backbone.apply(params["backbone"], x)
+
+    def logits(self, params: PyTree, x: Array) -> Array:
+        return self.features(params, x) @ params["head_w"] + params["head_b"]
+
+    def accuracy(self, params: PyTree, x: Array, y: Array) -> float:
+        pred = jnp.argmax(self.logits(params, x), axis=-1)
+        return float(jnp.mean((pred == y).astype(jnp.float32)))
+
+
+def cross_entropy(logits: Array, labels: Array) -> Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_step(
+    model: ClassifierModel,
+    opt: Optimizer,
+    freeze_backbone: bool,
+    proto_lambda: float,
+):
+    def loss_fn(params, x, y, prototypes):
+        logits = model.logits(params, x)
+        loss = cross_entropy(logits, y)
+        if prototypes is not None and proto_lambda > 0.0:
+            feats = model.features(params, x)
+            mu_y = prototypes[y]  # (n, d)
+            loss = loss + proto_lambda * jnp.mean(
+                jnp.sum((feats - mu_y) ** 2, axis=-1)
+            )
+        return loss
+
+    @functools.partial(jax.jit, static_argnames=())
+    def step(params, opt_state, x, y, prototypes):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y, prototypes)
+        if freeze_backbone:
+            grads = dict(grads)
+            grads["backbone"] = jax.tree_util.tree_map(
+                jnp.zeros_like, grads["backbone"]
+            )
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state, loss
+
+    return step
+
+
+def train_local(
+    model: ClassifierModel,
+    params: PyTree,
+    x: np.ndarray,
+    y: np.ndarray,
+    opt: Optimizer,
+    *,
+    epochs: int = 10,
+    batch_size: int = 128,
+    seed: int = 0,
+    freeze_backbone: bool = False,
+    prototypes: Optional[Array] = None,
+    proto_lambda: float = 0.0,
+) -> Tuple[PyTree, float]:
+    """Mini-batch SGD on one client's data. Returns (params, last loss)."""
+    step = _jitted_step(model, opt, freeze_backbone, float(proto_lambda))
+    opt_state = opt.init(params)
+    n = len(x)
+    bs = min(batch_size, n)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    loss = jnp.zeros(())
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for start in range(0, n - bs + 1, bs):
+            idx = order[start : start + bs]
+            params, opt_state, loss = step(params, opt_state, x[idx], y[idx], prototypes)
+    return params, float(loss)

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the FedCGS compute hot-spots (DESIGN.md §6).
+
+- ``stats_kernel``      — Gram matrix B = FᵀF and class-sum A = onehot(y)ᵀF
+                          as MXU matmuls with f32 VMEM accumulation.
+- ``classifier_kernel`` — fused GNB logits F·Wᵀ + b.
+- ``expansion_kernel``  — fused feature expansion act(F·R).
+
+``ops`` holds the jit'd public wrappers; ``ref`` the pure-jnp oracles the
+tests sweep against.  Kernels target TPU (BlockSpec / VMEM) and are
+validated with ``interpret=True`` on CPU.
+"""
+
+from repro.kernels.ops import client_stats, gnb_logits, expand_features, flash_attention
+
+__all__ = ["client_stats", "gnb_logits", "expand_features", "flash_attention"]

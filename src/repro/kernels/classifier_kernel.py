@@ -1,0 +1,67 @@
+"""Fused GNB-head logits kernel: logits = F · Wᵀ + b.
+
+Grid (i, j, k) over (row tiles, class tiles, d chunks); f32 VMEM
+accumulator; the bias joins on the LAST k step so the add is fused with
+the final accumulation (no separate elementwise pass over (n, C)).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+BLOCK_N = 256
+BLOCK_C = 128
+BLOCK_K = 512
+
+
+def _logits_kernel(f_ref, w_ref, b_ref, out_ref):
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jax.lax.dot_general(
+        f_ref[...],
+        w_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),  # (n, dk) x (C, dk)ᵀ
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _bias():
+        out_ref[...] += b_ref[...]  # (1, bc) broadcasts over rows
+
+
+def gnb_logits_kernel(
+    features: Array,
+    w: Array,
+    b: Array,
+    *,
+    block_n: int = BLOCK_N,
+    block_c: int = BLOCK_C,
+    block_k: int = BLOCK_K,
+    interpret: bool = False,
+) -> Array:
+    """features (n, d), w (C, d), b (1, C) — all pre-padded to blocks."""
+    n, d = features.shape
+    c = w.shape[0]
+    assert n % block_n == 0 and d % block_k == 0 and c % block_c == 0
+    grid = (n // block_n, c // block_c, d // block_k)
+    return pl.pallas_call(
+        _logits_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_c, block_k), lambda i, j, k: (j, k)),
+            pl.BlockSpec((1, block_c), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_c), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, c), jnp.float32),
+        interpret=interpret,
+    )(features, w, b)

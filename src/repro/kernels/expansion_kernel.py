@@ -1,0 +1,74 @@
+"""Fused feature-expansion kernel: g = act(F · R)  (paper Fig. 3).
+
+Same (i, j, k) tiling as the classifier head; the nonlinearity is
+applied on the LAST k step, so the activation fuses with the matmul
+epilogue instead of a second pass over the (n, d_out) output.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+BLOCK_N = 256
+BLOCK_O = 128
+BLOCK_K = 512
+
+_ACTS = {
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "gelu": jax.nn.gelu,
+    "tanh": jnp.tanh,
+    "identity": lambda x: x,
+}
+
+
+def _expand_kernel(f_ref, r_ref, out_ref, *, activation: str):
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jax.lax.dot_general(
+        f_ref[...],
+        r_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _act():
+        out_ref[...] = _ACTS[activation](out_ref[...])
+
+
+def expand_kernel(
+    features: Array,
+    projection: Array,
+    *,
+    activation: str = "relu",
+    block_n: int = BLOCK_N,
+    block_o: int = BLOCK_O,
+    block_k: int = BLOCK_K,
+    interpret: bool = False,
+) -> Array:
+    n, d = features.shape
+    d2, o = projection.shape
+    assert d == d2 and n % block_n == 0 and d % block_k == 0 and o % block_o == 0
+    grid = (n // block_n, o // block_o, d // block_k)
+    return pl.pallas_call(
+        functools.partial(_expand_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_o), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_o), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, o), jnp.float32),
+        interpret=interpret,
+    )(features, projection)

@@ -1,0 +1,149 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+The wrappers own all shape hygiene: inputs are zero-padded to block
+multiples (padded rows carry label ``-1`` so they match no class and
+contribute zeros to every statistic), outputs are sliced back.  On a
+CPU-only host (no TPU) they transparently run in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import classifier_kernel, expansion_kernel, flash_kernel, stats_kernel
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: Array, axis: int, multiple: int, value=0) -> Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_classes", "interpret", "block_d", "block_n")
+)
+def client_stats(
+    features: Array,
+    labels: Array,
+    num_classes: int,
+    *,
+    interpret: bool | None = None,
+    block_d: int = stats_kernel.BLOCK_D,
+    block_n: int = stats_kernel.BLOCK_N,
+) -> Tuple[Array, Array, Array]:
+    """FedCGS ClientStats via the Pallas kernels: returns (A, B, N).
+
+    features: (n, d) any float dtype; labels: (n,) int32.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    n, d = features.shape
+    f = _pad_to(_pad_to(features, 0, block_n), 1, block_d)
+    # padded rows get label -1 => match no class => zero contribution
+    y = _pad_to(labels.astype(jnp.int32)[:, None], 0, block_n, value=-1)
+    c_pad = max(block_d, ((num_classes + block_d - 1) // block_d) * block_d)
+
+    B = stats_kernel.gram(f, block_d=block_d, block_n=block_n, interpret=interpret)
+    A = stats_kernel.class_sum(
+        f, y, c_pad, block_c=block_d, block_d=block_d, block_n=block_n,
+        interpret=interpret,
+    )
+    N = jnp.sum(
+        jax.nn.one_hot(labels, num_classes, dtype=jnp.float32), axis=0
+    )  # (C,) — O(n·C), not a hot-spot
+    return A[:num_classes, :d], B[:d, :d], N
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gnb_logits(
+    features: Array, w: Array, b: Array, *, interpret: bool | None = None
+) -> Array:
+    """logits = features · wᵀ + b via the fused head kernel."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    n, d = features.shape
+    c = w.shape[0]
+    bn, bc, bk = (
+        classifier_kernel.BLOCK_N,
+        classifier_kernel.BLOCK_C,
+        classifier_kernel.BLOCK_K,
+    )
+    f = _pad_to(_pad_to(features, 0, bn), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bc), 1, bk)
+    bp = _pad_to(b[None, :], 1, bc)
+    out = classifier_kernel.gnb_logits_kernel(f, wp, bp, interpret=interpret)
+    return out[:n, :c]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def flash_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    interpret: bool | None = None,
+) -> Array:
+    """Fused attention. q: (B, Sq, Hq, d); k, v: (B, Skv, Hkv, d).
+
+    GQA broadcast + (batch·heads) flattening + block padding happen here;
+    padded KV rows are masked out via -inf scores (zero-valued K would
+    otherwise attend).
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    if hkv != hq:
+        k = jnp.repeat(k, hq // hkv, axis=2)
+        v = jnp.repeat(v, hq // hkv, axis=2)
+    block_q = min(flash_kernel.BLOCK_Q, sq)
+    block_k = min(flash_kernel.BLOCK_K, skv)
+    qf = jnp.moveaxis(q, 2, 1).reshape(b * hq, sq, d)
+    kf = jnp.moveaxis(k, 2, 1).reshape(b * hq, skv, d)
+    vf = jnp.moveaxis(v, 2, 1).reshape(b * hq, skv, d)
+    qf = _pad_to(qf, 1, block_q)
+    kf = _pad_to(kf, 1, block_k)
+    vf = _pad_to(vf, 1, block_k)
+    out = flash_kernel.flash_attention(
+        qf, kf, vf, causal=causal, kv_len=skv,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    out = out[:, :sq].reshape(b, hq, sq, d)
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "interpret"))
+def expand_features(
+    features: Array,
+    projection: Array,
+    *,
+    activation: str = "relu",
+    interpret: bool | None = None,
+) -> Array:
+    """g = act(features · projection) via the fused expansion kernel."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    n, d = features.shape
+    o = projection.shape[1]
+    bn, bo, bk = (
+        expansion_kernel.BLOCK_N,
+        expansion_kernel.BLOCK_O,
+        expansion_kernel.BLOCK_K,
+    )
+    f = _pad_to(_pad_to(features, 0, bn), 1, bk)
+    r = _pad_to(_pad_to(projection, 0, bk), 1, bo)
+    out = expansion_kernel.expand_kernel(
+        f, r, activation=activation, interpret=interpret
+    )
+    return out[:n, :o]

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every kernel (the tests' ground truth)."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def client_stats_ref(
+    features: Array, labels: Array, num_classes: int
+) -> Tuple[Array, Array, Array]:
+    """(A, B, N): class-sums, Gram matrix, class counts — f32 accumulation."""
+    f = features.astype(jnp.float32)
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=jnp.float32)
+    return onehot.T @ f, f.T @ f, jnp.sum(onehot, axis=0)
+
+
+def gnb_logits_ref(features: Array, w: Array, b: Array) -> Array:
+    """features (n, d) · w (C, d)ᵀ + b (C,) in f32."""
+    return features.astype(jnp.float32) @ w.astype(jnp.float32).T + b.astype(
+        jnp.float32
+    )
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array, *, causal: bool) -> Array:
+    """Dense softmax attention over (BH, S, d) — the flash kernel's oracle."""
+    d = q.shape[-1]
+    s = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    if causal:
+        sq, skv = q.shape[1], k.shape[1]
+        mask = jnp.arange(skv)[None, :] <= jnp.arange(sq)[:, None]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+
+
+def expand_features_ref(features: Array, projection: Array, activation: str) -> Array:
+    h = features.astype(jnp.float32) @ projection.astype(jnp.float32)
+    if activation == "relu":
+        return jax.nn.relu(h)
+    if activation == "gelu":
+        return jax.nn.gelu(h)
+    if activation == "tanh":
+        return jnp.tanh(h)
+    if activation == "identity":
+        return h
+    raise ValueError(activation)

@@ -1,0 +1,124 @@
+"""FedCGS statistics kernels: Gram matrix + per-class feature sums.
+
+TPU adaptation (DESIGN.md §6): a GPU implementation would scatter-add
+``A[y[i]] += f[i]``; scatters are hostile to the TPU's systolic MXU, so
+both statistics are reformulated as tiled matmuls:
+
+    B = Fᵀ F               (d, d)   Gram / uncentred second moment
+    A = onehot(y)ᵀ F       (C, d)   per-class sums
+
+Tiling: grid (i, j, k) over (rows-of-output, cols-of-output, n-chunks).
+Each step loads an (nk, bi) and (nk, bj) feature block into VMEM,
+multiplies on the MXU and accumulates into the (bi, bj) f32 output
+block, which stays resident in VMEM across the k-sweep (output
+index_map ignores k).  All dims padded to block multiples by ``ops``.
+
+The one-hot block for A is built IN-KERNEL from a (nk, 1) label block
+via ``broadcasted_iota`` comparison — no (n, C) one-hot ever hits HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+# hardware-aligned defaults: MXU is 128x128, VMEM ~16 MiB/core.
+BLOCK_D = 128  # output tile (both dims)
+BLOCK_N = 512  # row-chunk per grid step
+
+
+def _gram_kernel(f_i_ref, f_j_ref, out_ref):
+    """One (i, j, k) step: out[bi, bj] += f_i[nk, bi]ᵀ @ f_j[nk, bj]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jax.lax.dot_general(
+        f_i_ref[...],
+        f_j_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),  # contract over rows
+        preferred_element_type=jnp.float32,
+    )
+
+
+def gram(
+    features: Array,
+    *,
+    block_d: int = BLOCK_D,
+    block_n: int = BLOCK_N,
+    interpret: bool = False,
+) -> Array:
+    """B = FᵀF. features: (n, d) padded to (block_n, block_d) multiples."""
+    n, d = features.shape
+    assert n % block_n == 0 and d % block_d == 0, (n, d)
+    grid = (d // block_d, d // block_d, n // block_n)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_d), lambda i, j, k: (k, i)),
+            pl.BlockSpec((block_n, block_d), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_d, block_d), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, d), jnp.float32),
+        interpret=interpret,
+    )(features, features)
+
+
+def _classsum_kernel(labels_ref, f_ref, out_ref, *, block_c: int):
+    """One (i, j, k) step: out[ci, dj] += onehot(labels[nk])ᵀ @ f[nk, dj].
+
+    The (nk, bc) one-hot block is built in-register from the label chunk:
+    onehot[r, c] = (labels[r] == ci*block_c + c).
+    """
+    i, k = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    labels = labels_ref[...]  # (nk, 1) int32
+    class_base = i * block_c
+    cls = class_base + jax.lax.broadcasted_iota(jnp.int32, (1, block_c), 1)
+    onehot = (labels == cls).astype(jnp.float32)  # (nk, bc)
+    out_ref[...] += jax.lax.dot_general(
+        onehot,
+        f_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def class_sum(
+    features: Array,
+    labels: Array,
+    num_classes: int,
+    *,
+    block_c: int = BLOCK_D,
+    block_d: int = BLOCK_D,
+    block_n: int = BLOCK_N,
+    interpret: bool = False,
+) -> Array:
+    """A = onehot(labels)ᵀ F. labels: (n, 1) int32; dims pre-padded."""
+    n, d = features.shape
+    assert labels.shape == (n, 1)
+    assert n % block_n == 0 and d % block_d == 0 and num_classes % block_c == 0
+    grid = (num_classes // block_c, d // block_d, n // block_n)
+    return pl.pallas_call(
+        functools.partial(_classsum_kernel, block_c=block_c),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, 1), lambda i, j, k: (k, 0)),
+            pl.BlockSpec((block_n, block_d), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_c, block_d), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((num_classes, d), jnp.float32),
+        interpret=interpret,
+    )(labels, features)

@@ -1,0 +1,2 @@
+# Launch layer: production mesh, input specs, jit-able steps, dry-run
+# driver, training and serving entry points.

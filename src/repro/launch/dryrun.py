@@ -1,0 +1,334 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) combo.
+
+MUST be the very first lines — jax locks the device count on first init:
+"""
+
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import PUBLIC_IDS, get_config
+from repro.launch import hlo_analysis, io_specs, steps
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import transformer as T
+from repro.models.common import spec_shapes
+from repro.models.config import INPUT_SHAPES, REDUCED_SHAPES, ModelConfig
+from repro.optim import adamw, sgd
+from repro.sharding import tree_shardings
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _pick_optimizer(cfg: ModelConfig, name: str):
+    if name == "auto":
+        # 400B-scale: f32 AdamW moments (8 bytes/param) exceed v5e HBM at
+        # 256 chips; momentum-SGD (4 bytes/param) is the deployable choice.
+        name = "sgd" if cfg.name.startswith("llama4") else "adamw"
+    if name == "sgd":
+        return sgd(1e-2, momentum=0.9), name
+    return adamw(3e-4), name
+
+
+def build_step_and_inputs(
+    cfg: ModelConfig,
+    shape_name: str,
+    mesh,
+    *,
+    optimizer: str = "auto",
+    step_kind: Optional[str] = None,
+    shapes: Optional[Dict[str, Any]] = None,
+    rules=None,
+    remat: Any = True,
+    moe_dispatch: int = 1,
+    stats_fold_dtype=jnp.float32,
+):
+    """Returns (wrapped jitted step, example kwargs of ShapeDtypeStructs,
+    static metadata) for one (arch, shape).
+
+    ``rules`` / ``remat`` are the §Perf hillclimbing knobs: a logical-axis
+    rule-table override and the activation-checkpoint policy.
+    """
+    shape = (shapes or INPUT_SHAPES)[shape_name]
+    cfg = io_specs.config_for_shape(cfg, shape)
+    specs = T.build_specs(cfg)
+    param_shapes = spec_shapes(specs, dtype=jnp.bfloat16)
+    param_sh = tree_shardings(specs, mesh, rules)
+    kind = step_kind or shape.kind
+
+    meta: Dict[str, Any] = {"kind": kind}
+    if kind == "train":
+        opt, opt_name = _pick_optimizer(cfg, optimizer)
+        meta["optimizer"] = opt_name
+        opt_shapes = jax.eval_shape(opt.init, param_shapes)
+        opt_sh = steps.opt_state_shardings(opt, specs, param_sh, mesh)
+        batch = io_specs.train_inputs(cfg, shape)
+        batch_sh = io_specs.batch_shardings(batch, mesh)
+        fn = steps.jit_step(
+            steps.make_train_step(
+                cfg, opt, remat=remat, moe_dispatch_shards=moe_dispatch
+            ),
+            mesh,
+            (param_sh, opt_sh, batch_sh),
+            donate_argnums=(0, 1),
+            rules=rules,
+        )
+        args = (param_shapes, opt_shapes, batch)
+        tokens = shape.tokens
+        model_flops = 3 * T.model_flops(cfg, tokens, shape.seq_len)
+    elif kind == "prefill":
+        batch = io_specs.prefill_inputs(cfg, shape)
+        batch_sh = io_specs.batch_shardings(batch, mesh)
+        fn = steps.jit_step(
+            steps.make_prefill_step(cfg, moe_dispatch_shards=moe_dispatch),
+            mesh, (param_sh, batch_sh), rules=rules,
+        )
+        args = (param_shapes, batch)
+        model_flops = T.model_flops(cfg, shape.tokens, shape.seq_len)
+    elif kind == "decode":
+        inputs = io_specs.decode_inputs(cfg, shape)
+        in_sh = io_specs.decode_shardings(cfg, inputs, mesh)
+        fn = steps.jit_step(
+            steps.make_serve_step(cfg),
+            mesh,
+            (param_sh, in_sh),
+            donate_argnums=(1,),
+            rules=rules,
+        )
+        args = (param_shapes, inputs)
+        model_flops = T.model_flops(
+            cfg, shape.global_batch, shape.seq_len, decode=True
+        )
+    elif kind == "stats":
+        table = shapes or INPUT_SHAPES
+        base_shape = table["prefill_32k"] if shape.kind == "decode" else shape
+        batch = io_specs.stats_inputs(cfg, base_shape)
+        batch_sh = io_specs.batch_shardings(batch, mesh)
+        fn = steps.jit_step(
+            steps.make_stats_step(
+                cfg, moe_dispatch_shards=moe_dispatch, fold_dtype=stats_fold_dtype
+            ),
+            mesh, (param_sh, batch_sh), rules=rules,
+        )
+        args = (param_shapes, batch)
+        model_flops = T.model_flops(cfg, base_shape.tokens, base_shape.seq_len)
+    else:
+        raise ValueError(kind)
+    meta["model_flops"] = model_flops
+    meta["config_variant"] = cfg.name + (
+        f"+sw{cfg.sliding_window}" if cfg.sliding_window else ""
+    )
+    return fn, args, meta
+
+
+def run_one(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    optimizer: str = "auto",
+    step_kind: Optional[str] = None,
+    verbose: bool = True,
+    reduced: bool = False,
+    act_shard: str = "replicated",
+    mesh_shape: Optional[str] = None,
+    remat: Any = True,
+    moe_dispatch: int = 1,
+    stats_fold: str = "f32",
+    attn_chunks: Optional[str] = None,
+    weight_layout: str = "fsdp",
+) -> Dict[str, Any]:
+    """One lower+compile+analyze run.
+
+    §Perf knobs: ``act_shard`` ∈ {replicated, model} re-maps the
+    layer-boundary "act_embed" axis; ``mesh_shape`` re-tiles the 256/512
+    chips (e.g. "32x8"); ``remat`` picks the checkpoint policy
+    (True="full", "dots", "none").
+    """
+    cfg = get_config(arch, reduced=reduced)
+    if attn_chunks:
+        qc, kc = (int(x) for x in attn_chunks.split("x"))
+        cfg = dataclasses.replace(cfg, attn_q_chunk=qc, attn_kv_chunk=kc)
+    shapes = REDUCED_SHAPES if reduced else INPUT_SHAPES
+    shape = shapes[shape_name]
+    if not io_specs.supported(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "enc-dec audio model; no sub-quadratic variant (DESIGN.md §Skips)"}
+
+    if reduced:
+        n = len(jax.devices())
+        mesh = make_host_mesh(2 if n % 2 == 0 and n > 1 else 1)
+    elif mesh_shape:
+        dims = tuple(int(d) for d in mesh_shape.split("x"))
+        axes = ("pod", "data", "model") if len(dims) == 3 else ("data", "model")
+        mesh = jax.make_mesh(
+            dims, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(dims)
+        )
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+
+    from repro.sharding import DEFAULT_RULES, SERVE_RULES, merge_rules
+
+    base_rules = SERVE_RULES if weight_layout == "serve" else DEFAULT_RULES
+    rules = None
+    if act_shard == "model":
+        rules = merge_rules(base_rules, act_embed=("model",))
+    elif weight_layout == "serve":
+        rules = base_rules
+
+    chips = mesh.devices.size
+    t0 = time.time()
+    if moe_dispatch == -1:  # auto: one dispatch shard per (pod, data) slice
+        moe_dispatch = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                moe_dispatch *= mesh.shape[a]
+    fn, args, meta = build_step_and_inputs(
+        cfg, shape_name, mesh, optimizer=optimizer, step_kind=step_kind,
+        shapes=shapes, rules=rules, remat=remat, moe_dispatch=moe_dispatch,
+        stats_fold_dtype=jnp.bfloat16 if stats_fold == "bf16" else jnp.float32,
+    )
+    meta["variant"] = (
+        f"act_shard={act_shard},mesh={mesh_shape or 'default'},remat={remat},"
+        f"moe_dispatch={moe_dispatch},stats_fold={stats_fold}"
+    )
+    lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_dict = {
+        k: int(getattr(mem, k))
+        for k in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "generated_code_size_in_bytes",
+        )
+        if hasattr(mem, k)
+    }
+    from repro.launch import hlo_parse
+
+    costs = hlo_parse.analyze(compiled.as_text())
+    roof = hlo_analysis.Roofline(
+        hlo_flops=float(costs.flops),
+        hlo_bytes=float(costs.bytes),
+        collective_bytes_per_chip=float(costs.total_collective_bytes),
+        chips=chips,
+        model_flops=meta.get("model_flops"),
+    )
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "skipped": False,
+        **meta,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem_dict,
+        "roofline": roof.as_dict(),
+        "collectives": {
+            "bytes_by_kind": costs.collective_bytes,
+            "count_by_kind": costs.collective_count,
+        },
+    }
+    if verbose:
+        print(json.dumps(result, indent=2))
+    return result
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", required=True, choices=PUBLIC_IDS + ["all"])
+    p.add_argument("--shape", required=True, choices=list(INPUT_SHAPES) + ["all"])
+    p.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    p.add_argument("--step", default=None, choices=[None, "train", "prefill", "decode", "stats"])
+    p.add_argument("--optimizer", default="auto", choices=["auto", "sgd", "adamw"])
+    p.add_argument("--out", default=None, help="directory for JSON artifacts")
+    p.add_argument(
+        "--reduced", action="store_true",
+        help="reduced configs + shapes on a host-sized mesh (smoke mode)",
+    )
+    p.add_argument("--act-shard", default="replicated", choices=["replicated", "model"])
+    p.add_argument("--mesh-shape", default=None, help='e.g. "32x8" or "2x32x8"')
+    p.add_argument("--remat", default="full", choices=["full", "dots", "none"])
+    p.add_argument(
+        "--moe-dispatch", type=int, default=1,
+        help="MoE dispatch shards (1=global baseline, -1=one per data slice)",
+    )
+    p.add_argument("--stats-fold", default="f32", choices=["f32", "bf16"])
+    p.add_argument("--attn-chunks", default=None, help='e.g. "1024x4096" (QxKV)')
+    p.add_argument(
+        "--weight-layout", default="fsdp", choices=["fsdp", "serve"],
+        help="serve = replicate weights over data (kills per-token gathers)",
+    )
+    p.add_argument("--suffix", default=None, help="artifact filename suffix")
+    args = p.parse_args(argv)
+
+    archs = PUBLIC_IDS if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch}|{shape}|{'multi' if multi else 'single'}"
+                try:
+                    res = run_one(
+                        arch, shape, multi_pod=multi,
+                        optimizer=args.optimizer, step_kind=args.step,
+                        verbose=(args.out is None), reduced=args.reduced,
+                        act_shard=args.act_shard, mesh_shape=args.mesh_shape,
+                        remat=args.remat, moe_dispatch=args.moe_dispatch,
+                        stats_fold=args.stats_fold, attn_chunks=args.attn_chunks,
+                        weight_layout=args.weight_layout,
+                    )
+                    if args.out:
+                        os.makedirs(args.out, exist_ok=True)
+                        fname = f"{arch.replace('.', 'p')}__{shape}__{'multi' if multi else 'single'}"
+                        if args.step:
+                            fname += f"__{args.step}"
+                        if args.suffix:
+                            fname += f"__{args.suffix}"
+                        with open(os.path.join(args.out, fname + ".json"), "w") as f:
+                            json.dump(res, f, indent=2)
+                        status = "SKIP" if res.get("skipped") else "OK"
+                        extra = ""
+                        if not res.get("skipped"):
+                            extra = (
+                                f" compile={res['compile_s']:.0f}s"
+                                f" dominant={res['roofline']['dominant']}"
+                            )
+                        print(f"[{status}] {tag}{extra}", flush=True)
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    failures.append((tag, repr(e)))
+                    print(f"[FAIL] {tag}: {e!r}", flush=True)
+    if failures:
+        print(f"{len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(f"  {tag}: {err[:200]}")
+        return 1
+    print("all dry-runs passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,183 @@
+"""ShapeDtypeStruct stand-ins + shardings for every model input.
+
+``input_specs(cfg, shape)`` builds the exact argument tree each step
+function consumes — weak-type-correct, shardable, ZERO device
+allocation — so the dry-run can lower a 400B training step on a laptop.
+
+Sharding policy for inputs:
+- batch dims shard over ("pod", "data") when divisible, else replicate
+  (long_500k has batch 1);
+- KV-cache slabs prefer kv-head sharding over "model"; when the arch's
+  kv_heads don't divide the axis (GQA kv=8 on a 16-way axis) the CACHE
+  SEQUENCE dim is sharded instead — attention over a seq-sharded cache
+  is a partial-softmax reduce that GSPMD handles with an all-reduce;
+- SSM decode states shard over heads ("model") with batch over data.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import InputShape, ModelConfig
+from repro.models import transformer as T
+
+PyTree = Any
+
+# the sub-quadratic variant window used by dense archs on long_500k
+LONG_CONTEXT_WINDOW = 8192
+
+
+def config_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Arch variant actually lowered for this input shape.
+
+    Dense/MoE/VLM archs get a sliding-window attention variant for the
+    500k-token decode (explicitly flagged; DESIGN.md §4).  SSM/hybrid
+    archs run long_500k natively.
+    """
+    if shape.name == "long_500k" and not cfg.attention_free and cfg.family != "hybrid":
+        if cfg.is_encdec:
+            raise ValueError(f"{cfg.name} skips long_500k (DESIGN.md §Skips)")
+        return cfg.with_sliding_window(LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def supported(cfg: ModelConfig, shape: InputShape) -> bool:
+    """The 39-of-40 support matrix (whisper-tiny × long_500k is the skip)."""
+    if shape.name == "long_500k" and cfg.is_encdec:
+        return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# spec builders
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_inputs(cfg: ModelConfig, shape: InputShape) -> Dict[str, PyTree]:
+    b, s = shape.global_batch, shape.seq_len
+    batch: Dict[str, PyTree] = {
+        "tokens": _sds((b, s), jnp.int32),
+        "targets": _sds((b, s), jnp.int32),
+    }
+    if cfg.rope == "mrope":
+        batch["positions"] = _sds((3, b, s), jnp.int32)
+    if cfg.vision_tokens:
+        batch["patches"] = _sds((b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.is_encdec:
+        batch["frames"] = _sds((b, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def prefill_inputs(cfg: ModelConfig, shape: InputShape) -> Dict[str, PyTree]:
+    batch = train_inputs(cfg, shape)
+    del batch["targets"]
+    return batch
+
+
+def decode_inputs(
+    cfg: ModelConfig, shape: InputShape, cache_dtype=jnp.bfloat16
+) -> Dict[str, PyTree]:
+    """ONE new token + a seq_len KV cache (index = seq_len - 1 valid)."""
+    b, s = shape.global_batch, shape.seq_len
+    return {
+        "token": _sds((b,), jnp.int32),
+        "cache": T.cache_specs(cfg, b, s, cache_dtype),
+    }
+
+
+def stats_inputs(cfg: ModelConfig, shape: InputShape) -> Dict[str, PyTree]:
+    """The FedCGS ClientStats pass at scale: tokens + running (A, B, N)."""
+    batch = train_inputs(cfg, shape)
+    d, v = cfg.d_model, cfg.vocab_size
+    batch["stats"] = {
+        "A": _sds((v, d), jnp.float32),
+        "B": _sds((d, d), jnp.float32),
+        "N": _sds((v,), jnp.float32),
+    }
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+
+
+def _batch_axes(mesh: Mesh, size: int) -> Optional[Tuple[str, ...]]:
+    cand = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    total = 1
+    for a in cand:
+        total *= mesh.shape[a]
+    return cand if size % total == 0 else None
+
+
+def batch_shardings(batch: PyTree, mesh: Mesh) -> PyTree:
+    """Shardings for a train/prefill input tree (leading dim = batch,
+    except mrope positions where batch is dim 1)."""
+
+    def shard(path, leaf):
+        names = [getattr(p, "key", "") for p in path]
+        if "positions" in names:  # (3, B, S)
+            axes = _batch_axes(mesh, leaf.shape[1])
+            return NamedSharding(mesh, P(None, axes, None))
+        if "stats" in names:
+            return stats_shardings_one(names[-1], leaf, mesh)
+        axes = _batch_axes(mesh, leaf.shape[0])
+        return NamedSharding(mesh, P(axes, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map_with_path(shard, batch)
+
+
+def stats_shardings_one(name: str, leaf, mesh: Mesh) -> NamedSharding:
+    """(A, B, N): A like an unembedding (vocab over model), B row-sharded."""
+    model_ok = lambda dim: "model" in mesh.axis_names and dim % mesh.shape["model"] == 0
+    if name == "A":  # (V, d)
+        return NamedSharding(
+            mesh, P("model" if model_ok(leaf.shape[0]) else None, None)
+        )
+    if name == "B":  # (d, d)
+        return NamedSharding(
+            mesh, P("model" if model_ok(leaf.shape[0]) else None, None)
+        )
+    return NamedSharding(mesh, P(None))  # N
+
+
+def cache_shardings(cfg: ModelConfig, cache: PyTree, mesh: Mesh) -> PyTree:
+    """Sharding tree matching cache_specs' structure (policy in module doc)."""
+    model = mesh.shape.get("model", 1)
+
+    def shard(path, leaf):
+        names = [getattr(p, "key", "") for p in path]
+        if leaf.ndim == 0 or "positions" in names or "index" in names:
+            return NamedSharding(mesh, P())
+        batch_axes = _batch_axes(mesh, leaf.shape[1])
+        if "ssm" in names:  # (R, B, H, P, N)
+            heads = "model" if leaf.shape[2] % model == 0 else None
+            return NamedSharding(mesh, P(None, batch_axes, heads, None, None))
+        if "conv" in names:  # (R, B, W-1, CH)
+            ch = "model" if leaf.shape[3] % model == 0 else None
+            return NamedSharding(mesh, P(None, batch_axes, None, ch))
+        # kv slabs: (R, B, S_c, Hkv, Dh)
+        if leaf.shape[3] % model == 0:
+            return NamedSharding(mesh, P(None, batch_axes, None, "model", None))
+        if leaf.shape[2] % model == 0:
+            return NamedSharding(mesh, P(None, batch_axes, "model", None, None))
+        return NamedSharding(mesh, P(None, batch_axes, None, None, None))
+
+    return jax.tree_util.tree_map_with_path(shard, cache)
+
+
+def decode_shardings(cfg: ModelConfig, inputs: PyTree, mesh: Mesh) -> PyTree:
+    token_axes = _batch_axes(mesh, inputs["token"].shape[0])
+    return {
+        "token": NamedSharding(mesh, P(token_axes)),
+        "cache": cache_shardings(cfg, inputs["cache"], mesh),
+    }

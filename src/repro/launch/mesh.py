@@ -1,0 +1,33 @@
+"""Production mesh definitions (DESIGN.md §3).
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before any
+device query; smoke tests must keep seeing 1 device).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+SINGLE_POD = (16, 16)  # 256 chips (TPU v5e pod slice)
+MULTI_POD = (2, 16, 16)  # 2 pods = 512 chips
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(model_axis: int = 1) -> Mesh:
+    """Tiny mesh over whatever devices the host actually has (tests)."""
+    n = len(jax.devices())
+    assert n % model_axis == 0
+    return jax.make_mesh(
+        (n // model_axis, model_axis), ("data", "model"), axis_types=_auto(2)
+    )

@@ -1,0 +1,419 @@
+"""Grouped-query attention with RoPE variants, KV cache and sliding window.
+
+Covers the attention needs of all assigned architectures:
+
+- GQA with arbitrary ``num_kv_heads`` (incl. MQA kv=1 for gemma-2b).
+- RoPE variants: ``standard`` (llama-style), ``2d`` (chatglm3: rotary on
+  half of head_dim, the other half untouched), ``mrope`` (qwen2-vl:
+  3-section temporal/height/width rotary driven by (3, B, S) position
+  ids), ``none``/``learned`` (whisper uses learned absolute positions,
+  added at embedding time, so attention sees ``none``).
+- Sliding-window causal masking (the sub-quadratic long-context variant
+  for dense archs; window W => decode cache is a W-slot ring buffer).
+- Decode path: one new token against a pre-filled cache.
+
+The (B, S, H, D) layout keeps heads in their own dim so the sharding
+rule engine can shard heads over "model" with a single constraint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float, dtype=jnp.float32) -> Array:
+    """Inverse frequencies for rotary dims (head_dim must be even)."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=dtype) / head_dim
+    return 1.0 / (theta ** exponents)  # (head_dim/2,)
+
+
+def _rotate(x: Array, angles: Array) -> Array:
+    """Apply rotation by ``angles`` to interleaved pairs of ``x``.
+
+    x: (..., S, H, D) with D even; angles: broadcastable to (..., S, 1, D/2).
+    """
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(
+    q: Array,
+    k: Array,
+    positions: Array,
+    *,
+    mode: str,
+    theta: float,
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24),
+) -> Tuple[Array, Array]:
+    """Rotate q, k by position-dependent angles.
+
+    Args:
+      q: (B, S, Hq, D); k: (B, S, Hkv, D).
+      positions: (B, S) int for standard/2d; (3, B, S) for mrope.
+      mode: standard | 2d | mrope | none.
+    """
+    if mode in ("none", "learned"):
+        return q, k
+    head_dim = q.shape[-1]
+    compute = jnp.float32
+
+    if mode == "standard":
+        freqs = rope_frequencies(head_dim, theta)  # (D/2,)
+        ang = positions[..., None, None].astype(compute) * freqs  # (B,S,1,D/2)
+        return (
+            _rotate(q.astype(compute), ang).astype(q.dtype),
+            _rotate(k.astype(compute), ang).astype(k.dtype),
+        )
+
+    if mode == "2d":
+        # chatglm-style: rotary on the first half of head_dim only.
+        rot = head_dim // 2
+        freqs = rope_frequencies(rot, theta)
+        ang = positions[..., None, None].astype(compute) * freqs
+
+        def half(x):
+            xr, xp = x[..., :rot], x[..., rot:]
+            xr = _rotate(xr.astype(compute), ang).astype(x.dtype)
+            return jnp.concatenate([xr, xp], axis=-1)
+
+        return half(q), half(k)
+
+    if mode == "mrope":
+        # qwen2-vl multimodal rope: the D/2 frequency slots are split into
+        # (temporal, height, width) sections, each driven by its own
+        # position stream. positions: (3, B, S).
+        if positions.ndim == 2:  # text-only fallback: reuse 1d positions
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        freqs = rope_frequencies(head_dim, theta)  # (D/2,)
+        sec = _mrope_sections(head_dim // 2, mrope_sections)
+        section_id = jnp.repeat(
+            jnp.arange(3), jnp.array(sec), total_repeat_length=head_dim // 2
+        )  # (D/2,) in {0,1,2}
+        # pos_per_slot: (B, S, D/2) — pick the stream per frequency slot.
+        pos = jnp.moveaxis(positions, 0, -1).astype(compute)  # (B,S,3)
+        pos_slot = jnp.take_along_axis(
+            pos, jnp.broadcast_to(section_id, pos.shape[:-1] + section_id.shape)[
+                ..., : head_dim // 2
+            ].astype(jnp.int32),
+            axis=-1,
+        )  # (B,S,D/2)
+        ang = pos_slot[..., None, :] * freqs  # (B,S,1,D/2)
+        return (
+            _rotate(q.astype(compute), ang).astype(q.dtype),
+            _rotate(k.astype(compute), ang).astype(k.dtype),
+        )
+
+    raise ValueError(f"unknown rope mode {mode!r}")
+
+
+def _mrope_sections(half_dim: int, sections: Tuple[int, int, int]) -> Tuple[int, int, int]:
+    """Scale the canonical (16,24,24) section split to this head_dim."""
+    total = sum(sections)
+    a = max(1, half_dim * sections[0] // total)
+    b = max(1, half_dim * sections[1] // total)
+    c = half_dim - a - b
+    return (a, b, max(1, c)) if c > 0 else (a, max(1, half_dim - a - 1), 1)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class KVCache:
+    """Per-group stacked KV cache.
+
+    k, v: (L, B, S_cache, Hkv, D) — L = attention layers in the scan group.
+    index: () int32 — number of tokens already written (same for all
+    layers of a group).  For sliding-window caches S_cache == window and
+    writes wrap (ring buffer).
+    """
+
+    k: Array
+    v: Array
+    index: Array  # scalar int32
+
+    @property
+    def cache_len(self) -> int:
+        return self.k.shape[2]
+
+    @staticmethod
+    def zeros(
+        layers: int, batch: int, cache_len: int, kv_heads: int, head_dim: int,
+        dtype=jnp.bfloat16,
+    ) -> "KVCache":
+        shape = (layers, batch, cache_len, kv_heads, head_dim)
+        return KVCache(
+            k=jnp.zeros(shape, dtype),
+            v=jnp.zeros(shape, dtype),
+            index=jnp.zeros((), jnp.int32),
+        )
+
+
+def cache_update_prefill(cache_k: Array, cache_v: Array, k: Array, v: Array) -> Tuple[Array, Array]:
+    """Write a full prefill segment at the start of (B, S_cache, H, D) slabs."""
+    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, 0, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, 0, 0, 0))
+    return ck, cv
+
+
+def cache_update_decode(
+    cache_k: Array, cache_v: Array, k: Array, v: Array, index: Array
+) -> Tuple[Array, Array]:
+    """Write one token at position ``index % cache_len`` (ring for windows)."""
+    slot = index % cache_k.shape[1]
+    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, slot, 0, 0))
+    return ck, cv
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+
+def _repeat_kv(k: Array, num_q_heads: int) -> Array:
+    """(B, S, Hkv, D) -> (B, S, Hq, D) by repetition (GQA broadcast)."""
+    hkv = k.shape[2]
+    if hkv == num_q_heads:
+        return k
+    return jnp.repeat(k, num_q_heads // hkv, axis=2)
+
+
+def attend(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool,
+    q_offset: Optional[Array] = None,
+    kv_valid_len: Optional[Array] = None,
+    kv_positions: Optional[Array] = None,
+    sliding_window: Optional[int] = None,
+    logit_softcap: Optional[float] = None,
+) -> Array:
+    """Scaled-dot-product attention with GQA + masking.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D).
+    q_offset: scalar — absolute position of q[:, 0] (decode: index).
+    kv_valid_len: scalar — #valid cache slots (decode against a
+      partially-filled cache).
+    kv_positions: (Skv,) absolute positions of cache slots (ring buffers
+      have out-of-order slots); defaults to arange.
+    """
+    b, sq, hq, d = q.shape
+    skv = k.shape[1]
+    k = _repeat_kv(k, hq)
+    v = _repeat_kv(v, hq)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if logit_softcap:
+        logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+
+    q_pos = jnp.arange(sq)
+    if q_offset is not None:
+        q_pos = q_pos + q_offset
+    k_pos = kv_positions if kv_positions is not None else jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if sliding_window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - sliding_window
+    if kv_valid_len is not None:
+        mask &= (jnp.arange(skv) < kv_valid_len)[None, :]
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Sequence-parallel decode attention ("flash-decode").
+#
+# When kv_heads don't divide the model axis (GQA kv=8 on a 16-way mesh)
+# the KV cache is SEQUENCE-sharded. GSPMD cannot see that softmax over
+# the sharded seq dim is a partial reduction and ALL-GATHERS the whole
+# cache every token (measured: 2 x 34 GB x 32 layers/chip/token on
+# minitron-8b decode_32k). This shard_map computes local (m, l, acc)
+# per seq shard and combines with one pmax + two psums of
+# (B, H, 1[, D])-sized tensors — the textbook TPU flash-decode.
+# ---------------------------------------------------------------------------
+
+
+def attend_decode_seq_sharded(
+    q: Array,  # (B, 1, Hq, D) — replicated over the model axis
+    ck: Array,  # (B, S_c, Hkv, D) — sharded over S_c on "model"
+    cv: Array,
+    kv_positions: Array,  # (S_c,) absolute slot positions (sharded)
+    q_offset: Array,  # () — the decoded token's position
+    *,
+    mesh,
+    sliding_window: Optional[int] = None,
+    logit_softcap: Optional[float] = None,
+    axis: str = "model",
+) -> Array:
+    from jax.sharding import PartitionSpec as P
+
+    hq = q.shape[2]
+
+    def local(q, k, v, pos, q_offset):
+        # GQA WITHOUT materializing repeated KV heads: fold the q-head
+        # group dim into the einsum (k/v are read once at their native
+        # head count — repeating 8->32 heads would 4x the cache traffic)
+        b, _, hq_, d = q.shape
+        hkv = k.shape[2]
+        g = hq_ // hkv
+        qg = q.astype(jnp.float32).reshape(b, 1, hkv, g, d)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+        logits = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32)
+        ) * scale  # (b, hkv, g, 1, S_loc)
+        if logit_softcap:
+            logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+        mask = pos[None, :] <= q_offset  # causal (+ invalid-slot sentinel)
+        if sliding_window is not None:
+            mask &= pos[None, :] > q_offset - sliding_window
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m = jnp.max(logits, axis=-1)  # (b, hkv, g, 1)
+        gm = jax.lax.pmax(m, axis)
+        p = jnp.exp(logits - gm[..., None])
+        l = jax.lax.psum(jnp.sum(p, axis=-1), axis)
+        acc = jax.lax.psum(
+            jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32)), axis
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (b, hkv, g, 1, d)
+        return jnp.einsum("bhgqd->bqhgd", out).reshape(b, 1, hq_, d)
+
+    fn = jax.shard_map(
+        local,
+        mesh=mesh,
+        # q_offset is an explicit replicated arg: a traced scalar must
+        # not be CLOSED OVER by shard_map (silent mis-broadcast)
+        in_specs=(P(), P(None, axis), P(None, axis), P(axis), P()),
+        out_specs=P(),
+        axis_names={axis},
+    )
+    return fn(q, ck, cv, kv_positions, jnp.asarray(q_offset)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention for long sequences.
+#
+# The naive path materializes (B, H, Sq, Skv) logits — 32k×32k is ~4 GB
+# *per head*, so prefill_32k / train_4k would never fit.  This version
+# scans over KV chunks with an online-softmax accumulator (running max m,
+# normalizer l, weighted sum acc), exactly the FlashAttention recurrence,
+# expressed in pure jnp so it lowers on any backend.  A Pallas TPU kernel
+# with the same math lives in repro/kernels/flash_kernel.py; this is the
+# portable oracle the dry-run compiles.
+# ---------------------------------------------------------------------------
+
+
+def attend_chunked(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool,
+    sliding_window: Optional[int] = None,
+    logit_softcap: Optional[float] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> Array:
+    """Memory-bounded attention: O(Sq·kv_chunk) live logits.
+
+    Same semantics as :func:`attend` for the full-sequence (no-cache)
+    case.  Ragged lengths are zero-padded internally (padded KV rows are
+    masked out; padded Q rows are sliced off).
+    """
+    b, sq_in, hq, d = q.shape
+    skv_in = k.shape[1]
+    k = _repeat_kv(k, hq)
+    v = _repeat_kv(v, hq)
+    q_chunk = min(q_chunk, sq_in)
+    kv_chunk = min(kv_chunk, skv_in)
+    pad_q = (-sq_in) % q_chunk
+    pad_k = (-skv_in) % kv_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    sq, skv = sq_in + pad_q, skv_in + pad_k
+    nq, nk = sq // q_chunk, skv // kv_chunk
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    # Pre-transpose ONCE into dot-friendly (b, h, ...) layouts.  Leaving
+    # the (b, s, h, d) layout to per-block einsums makes XLA re-transpose
+    # every K/V block per (q-chunk x kv-chunk) pair — measured at 57% of
+    # the stats-step HBM traffic (EXPERIMENTS.md §Perf iteration 3).
+    qc = jnp.einsum("bqhd->bhqd", q.astype(jnp.float32)) * scale
+    qc = qc.reshape(b, hq, nq, q_chunk, d)
+    kT = jnp.einsum("bkhd->bhdk", k.astype(jnp.float32))  # (b, h, d, skv)
+    kc = kT.reshape(b, hq, d, nk, kv_chunk)
+    vc = jnp.einsum("bkhd->bhkd", v.astype(jnp.float32)).reshape(
+        b, hq, nk, kv_chunk, d
+    )
+
+    def per_q_chunk(qi, q_blk):
+        # q_blk: (b, h, q_chunk, d)
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, blk):
+            m, l, acc = carry
+            kj, k_blk, v_blk = blk  # (b,h,d,kv_chunk), (b,h,kv_chunk,d)
+            s = jnp.einsum("bhqd,bhdk->bhqk", q_blk, k_blk)
+            if logit_softcap:
+                s = logit_softcap * jnp.tanh(s / logit_softcap)
+            k_pos = kj * kv_chunk + jnp.arange(kv_chunk)
+            mask = jnp.broadcast_to(
+                (k_pos < skv_in)[None, :], (q_chunk, kv_chunk)
+            )  # padded KV rows never attend
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if sliding_window is not None:
+                mask &= k_pos[None, :] > q_pos[:, None] - sliding_window
+            s = jnp.where(mask[None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + jnp.sum(p, axis=-1)
+            acc_new = alpha[..., None] * acc + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, v_blk
+            )
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, hq, q_chunk), -jnp.inf, jnp.float32),
+            jnp.zeros((b, hq, q_chunk), jnp.float32),
+            jnp.zeros((b, hq, q_chunk, d), jnp.float32),
+        )
+        kv_idx = jnp.arange(nk)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init,
+            (kv_idx, jnp.moveaxis(kc, 3, 0), jnp.moveaxis(vc, 2, 0)),
+        )
+        return acc / jnp.maximum(l, 1e-30)[..., None]  # (b, h, q_chunk, d)
+
+    outs = jax.lax.map(
+        lambda args: per_q_chunk(*args),
+        (jnp.arange(nq), jnp.moveaxis(qc, 2, 0)),
+    )  # (nq, b, h, q_chunk, d)
+    out = jnp.einsum("nbhqd->bnqhd", outs).reshape(b, sq, hq, d)
+    return out[:, :sq_in].astype(q.dtype)

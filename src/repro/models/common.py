@@ -1,0 +1,135 @@
+"""Spec-based parameter system.
+
+Every parameter is declared as a :class:`ParamSpec` (shape + logical axis
+names + initializer).  Declaring specs separately from materialization is
+what lets the multi-pod dry-run build ``jax.ShapeDtypeStruct`` stand-ins for
+a 400B-parameter model without ever allocating it, while smoke tests
+materialize the same tree at reduced size.
+
+Logical axis names are resolved to mesh axes by the rule engine in
+``repro.launch.sharding``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declaration of a single parameter tensor."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis name per dim (None = replicated)
+    init: str = "normal"  # normal | zeros | ones | scaled | embed | conv
+    scale: Optional[float] = None  # stddev override for normal/scaled
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(
+                f"ParamSpec rank mismatch: shape={self.shape} axes={self.axes}"
+            )
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    # for stacked (layer-major) params the leading 'layers' dim is not a fan-in
+    if len(shape) >= 3:
+        return int(np.prod(shape[1:-1])) if len(shape) > 2 else shape[0]
+    if len(shape) == 2:
+        return shape[0]
+    return max(1, shape[0] if shape else 1)
+
+
+def init_param(key: jax.Array, spec: ParamSpec) -> jax.Array:
+    """Materialize one parameter from its spec."""
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init in ("normal", "scaled", "embed", "conv"):
+        if spec.scale is not None:
+            std = spec.scale
+        elif spec.init == "embed":
+            std = 1.0
+        else:
+            std = 1.0 / math.sqrt(_fan_in(spec.shape))
+        return std * jax.random.normal(key, spec.shape, spec.dtype)
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def init_params(specs: PyTree, key: jax.Array) -> PyTree:
+    """Materialize a whole tree of ParamSpecs with independent keys."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    vals = [init_param(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def spec_shapes(specs: PyTree, dtype=None) -> PyTree:
+    """ShapeDtypeStruct tree for dry-run lowering (no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype or s.dtype),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def spec_axes(specs: PyTree) -> PyTree:
+    """Tree of logical-axis tuples, same structure as the param tree."""
+    return jax.tree_util.tree_map(
+        lambda s: s.axes, specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+def param_count(specs: PyTree) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+def param_bytes(specs: PyTree, bytes_per_el: int = 2) -> int:
+    return param_count(specs) * bytes_per_el
+
+
+def cast_tree(tree: PyTree, dtype) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )
+
+
+# ---------------------------------------------------------------------------
+# activation checkpoint policies used by the model stacks
+# ---------------------------------------------------------------------------
+
+REMAT_POLICIES: Dict[str, Optional[Callable]] = {
+    "none": None,  # no remat
+    "full": lambda *_, **__: False,  # save nothing; recompute everything
+    "dots": None,  # filled lazily below (needs jax)
+}
+
+
+def remat_policy(name: str):
+    import jax.ad_checkpoint as adc
+
+    if name == "none":
+        return "none"
+    if name == "full":
+        return adc.checkpoint_policies.nothing_saveable
+    if name == "dots":
+        return adc.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    if name == "save_anything":
+        return adc.checkpoint_policies.everything_saveable
+    raise ValueError(f"unknown remat policy {name}")

@@ -1,0 +1,259 @@
+"""Unified model configuration covering all ten assigned architectures.
+
+One configurable decoder/enc-dec family expresses dense, MoE, SSM,
+hybrid, VLM and audio backbones.  The stack is declared as a list of
+:class:`BlockGroup`s — each group is a repeating *pattern* of block
+kinds that is executed under one ``jax.lax.scan`` with layer-stacked
+parameters.  This keeps the HLO size bounded (critical for compiling
+48-layer models for 512 SPMD partitions on the CPU backend) while still
+expressing heterogeneous stacks:
+
+- llama4 MoE-interleave-2 -> pattern ("dense", "moe") x 24
+- zamba2 hybrid           -> pattern ("mamba",)*6 + ("shared_attn",) x 6
+                             + a tail group of 2 mamba blocks
+- whisper enc-dec         -> encoder groups + decoder groups with
+                             cross-attention blocks
+
+Block kinds:
+  dense        attn + dense MLP
+  moe          attn + mixture-of-experts MLP (optionally + shared experts)
+  mamba        Mamba2 SSD mixer (no MLP when d_ff == 0)
+  shared_attn  a weight-TIED attention block (zamba2); parameters are
+               declared once at stack level, not per group repeat
+  encdec       self-attn + cross-attn + dense MLP (whisper decoder)
+  enc          bidirectional attn + dense MLP (whisper encoder)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+BLOCK_KINDS = ("dense", "moe", "mamba", "shared_attn", "encdec", "enc")
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    expert_d_ff: int
+    num_shared_experts: int = 0
+    shared_d_ff: int = 0  # d_ff of the always-on shared expert block
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01  # load-balance loss weight
+    router_z_weight: float = 1e-3
+
+    def without_shared(self) -> "MoEConfig":
+        return dataclasses.replace(self, num_shared_experts=0, shared_d_ff=0)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int  # N, the SSM state size per head
+    head_dim: int = 64  # P, channels per SSD head
+    expand: int = 2  # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk_len: int = 64  # SSD chunk length (training/prefill)
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def num_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockGroup:
+    """``repeat`` x ``pattern`` executed under one lax.scan."""
+
+    pattern: Tuple[str, ...]
+    repeat: int
+
+    def __post_init__(self):
+        for k in self.pattern:
+            if k not in BLOCK_KINDS:
+                raise ValueError(f"unknown block kind {k!r}")
+
+    @property
+    def layers(self) -> int:
+        return len(self.pattern) * self.repeat
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    d_model: int
+    num_layers: int  # informative total (sum over groups must match)
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None  # default d_model // num_heads
+    groups: Tuple[BlockGroup, ...] = ()
+    # --- positional encoding ---
+    rope: str = "standard"  # standard | 2d | mrope | none | learned
+    rope_theta: float = 10000.0
+    max_seq_len: int = 1 << 20
+    # --- MLP ---
+    mlp_act: str = "silu"  # silu (SwiGLU) | geglu | gelu (plain 2-mat)
+    # --- attention variants ---
+    causal: bool = True
+    sliding_window: Optional[int] = None  # None = full attention
+    attn_logit_softcap: Optional[float] = None
+    # chunked-attention tile sizes (§Perf knob; VMEM-bounded on TPU)
+    attn_q_chunk: int = 512
+    attn_kv_chunk: int = 1024
+    # --- mixtures / ssm ---
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # --- enc-dec (audio) ---
+    encoder_layers: int = 0
+    encoder_seq_len: int = 0  # frames after the (stubbed) conv frontend
+    # --- multimodal stub ---
+    vision_tokens: int = 0  # >0 => input_specs add patch embeddings
+    # --- norms / misc ---
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    citation: str = ""
+
+    def __post_init__(self):
+        if self.groups:
+            total = sum(g.layers for g in self.groups)
+            # shared_attn blocks are "extra" relative to the advertised
+            # layer count for zamba2 (38 mamba layers + tied attn blocks)
+            main = sum(
+                g.repeat * sum(1 for k in g.pattern if k != "shared_attn")
+                for g in self.groups
+            )
+            if main != self.num_layers:
+                raise ValueError(
+                    f"{self.name}: groups give {main} main layers "
+                    f"(+{total - main} shared) but num_layers={self.num_layers}"
+                )
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.num_heads
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def attention_free(self) -> bool:
+        return all(
+            k == "mamba" for g in self.groups for k in g.pattern
+        )
+
+    @property
+    def subquadratic(self) -> bool:
+        """Can this config serve a 500k-token context?"""
+        if self.attention_free:
+            return True
+        if self.family == "hybrid":
+            # zamba2's attention blocks get a sliding window in long mode
+            return True
+        return self.sliding_window is not None
+
+    def with_sliding_window(self, window: int) -> "ModelConfig":
+        return dataclasses.replace(self, sliding_window=window)
+
+    def reduced(
+        self,
+        *,
+        d_model: int = 256,
+        num_layers: Optional[int] = None,
+        vocab_size: int = 512,
+        max_experts: int = 4,
+        seq_len_cap: int = 128,
+    ) -> "ModelConfig":
+        """Smoke-test variant of the SAME family: <=2-ish layers,
+        d_model<=512, <=4 experts, tiny vocab.  The group structure is
+        preserved (one repeat of each distinct pattern) so the smoke test
+        exercises the real heterogeneous stack."""
+        groups = tuple(BlockGroup(g.pattern, 1) for g in self.groups[:2]) or (
+            BlockGroup(("dense",), 2),
+        )
+        main = sum(
+            g.repeat * sum(1 for k in g.pattern if k != "shared_attn")
+            for g in groups
+        )
+        heads = max(2, min(self.num_heads, 4))
+        kv = max(1, min(self.num_kv_heads, heads))
+        while heads % kv:
+            kv -= 1
+        head_dim = max(16, d_model // heads)
+        moe = None
+        if self.moe is not None:
+            moe = dataclasses.replace(
+                self.moe,
+                num_experts=min(self.moe.num_experts, max_experts),
+                top_k=min(self.moe.top_k, min(self.moe.num_experts, max_experts)),
+                expert_d_ff=max(32, d_model // 2),
+                num_shared_experts=min(self.moe.num_shared_experts, 1),
+                shared_d_ff=max(32, d_model // 2) if self.moe.num_shared_experts else 0,
+            )
+        ssm = None
+        if self.ssm is not None:
+            ssm = dataclasses.replace(
+                self.ssm, state_dim=min(self.ssm.state_dim, 16), head_dim=32,
+                chunk_len=16,
+            )
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            d_model=d_model,
+            num_layers=main,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=head_dim,
+            d_ff=0 if self.d_ff == 0 else max(64, d_model * 2),
+            vocab_size=vocab_size,
+            groups=groups,
+            moe=moe,
+            ssm=ssm,
+            encoder_layers=min(self.encoder_layers, 2),
+            encoder_seq_len=min(self.encoder_seq_len, 32),
+            vision_tokens=min(self.vision_tokens, 16),
+            sliding_window=(
+                min(self.sliding_window, seq_len_cap // 2)
+                if self.sliding_window
+                else None
+            ),
+            max_seq_len=seq_len_cap * 4,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Input shapes assigned to this paper.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+# shrunken counterparts (same kinds) used by smoke tests / --reduced runs
+REDUCED_SHAPES = {
+    "train_4k": InputShape("train_4k", 256, 8, "train"),
+    "prefill_32k": InputShape("prefill_32k", 512, 4, "prefill"),
+    "decode_32k": InputShape("decode_32k", 512, 8, "decode"),
+    "long_500k": InputShape("long_500k", 2_048, 1, "decode"),
+}

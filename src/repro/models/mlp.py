@@ -1,0 +1,65 @@
+"""Dense MLP variants + RMSNorm.
+
+- ``silu``  : SwiGLU   out = (silu(x Wg) * (x Wu)) Wd     (llama family)
+- ``geglu`` : GeGLU    out = (gelu(x Wg) * (x Wu)) Wd     (gemma)
+- ``gelu``  : plain    out = gelu(x Wu) Wd                (whisper)
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+
+Array = jax.Array
+
+GATED = {"silu", "geglu"}
+
+
+def mlp_specs(d_model: int, d_ff: int, act: str, *, prefix_layers: int = 0) -> Dict[str, ParamSpec]:
+    """Parameter specs for one (possibly layer-stacked) MLP.
+
+    prefix_layers > 0 prepends a stacked 'layers' dim (for lax.scan).
+    """
+    L = (prefix_layers,) if prefix_layers else ()
+    lax_ = ("layers",) if prefix_layers else ()
+    specs = {
+        "w_up": ParamSpec(L + (d_model, d_ff), lax_ + ("embed", "mlp")),
+        "w_down": ParamSpec(L + (d_ff, d_model), lax_ + ("mlp", "embed")),
+    }
+    if act in GATED:
+        specs["w_gate"] = ParamSpec(L + (d_model, d_ff), lax_ + ("embed", "mlp"))
+    return specs
+
+
+def mlp_apply(params: Dict[str, Array], x: Array, act: str) -> Array:
+    if act == "silu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    elif act == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"]) * (x @ params["w_up"])
+    elif act == "gelu":
+        h = jax.nn.gelu(x @ params["w_up"])
+    else:
+        raise ValueError(f"unknown mlp act {act!r}")
+    return h @ params["w_down"]
+
+
+def mlp_flops(d_model: int, d_ff: int, act: str, tokens: int) -> int:
+    mats = 3 if act in GATED else 2
+    return 2 * mats * tokens * d_model * d_ff
+
+
+def rmsnorm(x: Array, scale: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def norm_spec(d_model: int, *, prefix_layers: int = 0) -> ParamSpec:
+    L = (prefix_layers,) if prefix_layers else ()
+    lax_ = ("layers",) if prefix_layers else ()
+    return ParamSpec(L + (d_model,), lax_ + ("embed",), init="zeros")

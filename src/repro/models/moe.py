@@ -1,0 +1,286 @@
+"""Mixture-of-Experts layer with sort-based capacity dispatch.
+
+Design choice (DESIGN.md §5): we deliberately avoid the dense one-hot
+dispatch einsum ``(T, E, C) x (T, d) -> (E, C, d)`` used by some JAX MoE
+implementations — its FLOP count scales with TOTAL experts and would
+poison the roofline's MODEL_FLOPS/HLO_FLOPs ratio.  Instead tokens are
+ranked within their expert via an argsort + searchsorted pass (O(Tk log
+Tk) scalar work, no matmul FLOPs) and scattered into an (E, capacity, d)
+buffer, so the expert matmuls are batched matmuls over ACTIVE tokens
+only — exactly the paper-style 6·N_active·D accounting.
+
+Routing: softmax router, top-k, probabilities renormalized over the
+selected k (llama4 top-1 degenerates to its raw gate).  Shared experts
+(qwen2-moe) run as an always-on dense MLP fused over the shared group.
+Aux losses (load-balance + router-z) are returned for the train step.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+from repro.models.config import MoEConfig
+from repro.models.mlp import GATED, mlp_apply, mlp_specs
+
+Array = jax.Array
+
+
+def moe_specs(
+    d_model: int, cfg: MoEConfig, act: str, *, prefix_layers: int = 0
+) -> Dict[str, ParamSpec]:
+    L = (prefix_layers,) if prefix_layers else ()
+    lax_ = ("layers",) if prefix_layers else ()
+    E, ff = cfg.num_experts, cfg.expert_d_ff
+    specs = {
+        "router": ParamSpec(L + (d_model, E), lax_ + ("embed", None), scale=0.02),
+        "w_up": ParamSpec(L + (E, d_model, ff), lax_ + ("expert", "embed", "expert_mlp")),
+        "w_down": ParamSpec(L + (E, ff, d_model), lax_ + ("expert", "expert_mlp", "embed")),
+    }
+    if act in GATED:
+        specs["w_gate"] = ParamSpec(
+            L + (E, d_model, ff), lax_ + ("expert", "embed", "expert_mlp")
+        )
+    if cfg.num_shared_experts:
+        shared_ff = cfg.shared_d_ff * cfg.num_shared_experts
+        specs["shared"] = mlp_specs(d_model, shared_ff, act, prefix_layers=prefix_layers)
+    return specs
+
+
+def _zero_metrics() -> Dict[str, Array]:
+    z = jnp.zeros((), jnp.float32)
+    return {"aux_loss": z, "router_z_loss": z, "dropped_fraction": z}
+
+
+def expert_capacity(tokens: int, cfg: MoEConfig) -> int:
+    """Static per-expert capacity, rounded up to a multiple of 8."""
+    cap = math.ceil(tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(8, (cap + 7) // 8 * 8)
+
+
+def moe_apply(
+    params: Dict[str, Array],
+    x: Array,
+    cfg: MoEConfig,
+    act: str,
+    *,
+    dispatch_shards: int = 1,
+) -> Tuple[Array, Dict[str, Array]]:
+    """Apply the MoE block to flattened tokens.
+
+    Args:
+      x: (T, d) tokens (batch*seq already flattened by the caller).
+      dispatch_shards: §Perf optimization — dispatch per data-shard
+        instead of globally. The global-T capacity buffer (E, cap, d)
+        is O(T·k·capacity_factor·d) and at train_4k shapes reaches
+        tens of TB, forcing XLA into cross-mesh reshards; slicing the
+        token stream into mesh-aligned shards makes ranking/scatter
+        local and shrinks the live buffer by the shard count. 1 = the
+        paper-faithful global dispatch (baseline).
+    Returns:
+      (T, d) output and {"aux_loss", "router_z_loss", "dropped_fraction"}.
+    """
+    T, d = x.shape
+    if dispatch_shards > 1 and T % dispatch_shards == 0:
+        return _moe_apply_sharded(params, x, cfg, act, dispatch_shards)
+
+    E, k = cfg.num_experts, cfg.top_k
+    cap = expert_capacity(T, cfg)
+
+    router_logits = x.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(router_logits, axis=-1)  # (T, E)
+    top_probs, top_idx = jax.lax.top_k(probs, k)  # (T, k)
+    top_probs = top_probs / jnp.maximum(top_probs.sum(-1, keepdims=True), 1e-9)
+
+    # ---- rank each (token, choice) within its expert (sort-based) ----
+    flat_e = top_idx.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat_e)  # stable
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank_sorted = jnp.arange(T * k) - first
+    rank = jnp.zeros((T * k,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    keep = rank < cap
+
+    # ---- dispatch: scatter kept tokens into (E, cap, d) ----
+    tok = jnp.arange(T * k) // k
+    safe_e = jnp.where(keep, flat_e, 0)
+    safe_r = jnp.where(keep, rank, 0)
+    x_flat = x[tok] * keep[:, None].astype(x.dtype)
+    buf = jnp.zeros((E, cap, d), x.dtype).at[safe_e, safe_r].add(
+        x_flat, mode="drop"
+    )
+
+    # ---- expert computation: batched matmuls over ACTIVE tokens ----
+    if "w_gate" in params:
+        gate_act = jax.nn.gelu if act == "geglu" else jax.nn.silu
+        h = gate_act(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"]))
+        h = h * jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, params["w_up"]))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])  # (E, cap, d)
+
+    # ---- combine: gather back, weight by router prob, sum over k ----
+    gathered = out_buf[safe_e, safe_r]  # (T*k, d)
+    weights = (top_probs.reshape(-1) * keep).astype(x.dtype)
+    out = (gathered * weights[:, None]).reshape(T, k, d).sum(axis=1)
+
+    if cfg.num_shared_experts:
+        out = out + mlp_apply(params["shared"], x, act)
+
+    # ---- aux losses ----
+    mean_probs = probs.mean(axis=0)  # (E,)
+    assign = jnp.zeros((E,)).at[flat_e].add(1.0) / (T * k)
+    aux = E * jnp.sum(mean_probs * assign) * cfg.router_aux_weight
+    zloss = jnp.mean(jax.scipy.special.logsumexp(router_logits, axis=-1) ** 2)
+    metrics = {
+        "aux_loss": aux,
+        "router_z_loss": cfg.router_z_weight * zloss,
+        "dropped_fraction": 1.0 - keep.mean(),
+    }
+    return out, metrics
+
+
+# ---------------------------------------------------------------------------
+# §Perf: per-shard dispatch (DESIGN.md §5 / EXPERIMENTS.md §Perf).
+#
+# The global sort-based dispatch above builds an (E, cap, d) buffer with
+# cap ∝ GLOBAL tokens — tens of TB at train_4k — and GSPMD cannot shard a
+# global scatter, so the buffer lands replicated. Here ONLY the
+# token-local stages (ranking, scatter, combine-gather) run inside a
+# shard_map over the batch axes; the expert matmuls run OUTSIDE on the
+# capacity-sharded buffer, so the auto-sharded expert weights never cross
+# the manual boundary (passing them through in_specs trips an XLA-CPU
+# AllReducePromotion bug, and would defeat their model-axis sharding).
+# ---------------------------------------------------------------------------
+
+
+def _rank_within_expert(flat_e: Array, k_total: int) -> Array:
+    """rank[i] = #earlier (token,choice) pairs routed to the same expert."""
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank_sorted = jnp.arange(k_total) - first
+    return jnp.zeros((k_total,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+
+
+def _moe_apply_sharded(
+    params: Dict[str, Array],
+    x: Array,
+    cfg: MoEConfig,
+    act: str,
+    shards: int,
+) -> Tuple[Array, Dict[str, Array]]:
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding import active_mesh, constrain
+
+    T, d = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    t_loc = T // shards
+    cap = expert_capacity(t_loc, cfg)
+
+    # ---- routing: global elementwise, shards trivially ----
+    router_logits = x.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    top_probs, top_idx = jax.lax.top_k(probs, k)
+    top_probs = top_probs / jnp.maximum(top_probs.sum(-1, keepdims=True), 1e-9)
+
+    # ---- local dispatch: scatter each shard's tokens into its own
+    #      (E, cap, d) block; blocks concatenate along the cap dim ----
+    def dispatch_local(x_l, idx_l):
+        flat_e = idx_l.reshape(-1)
+        rank = _rank_within_expert(flat_e, t_loc * k)
+        keep = rank < cap
+        tok = jnp.arange(t_loc * k) // k
+        safe_e = jnp.where(keep, flat_e, 0)
+        safe_r = jnp.where(keep, rank, 0)
+        x_flat = x_l[tok] * keep[:, None].astype(x_l.dtype)
+        buf = jnp.zeros((E, cap, d), x_l.dtype).at[safe_e, safe_r].add(
+            x_flat, mode="drop"
+        )
+        return buf, safe_e, safe_r, keep
+
+    def combine_local(out_buf_l, safe_e, safe_r, keep, w_flat):
+        gathered = out_buf_l[safe_e, safe_r]  # (t_loc*k, d)
+        w = (w_flat * keep).astype(gathered.dtype)
+        return (gathered * w[:, None]).reshape(t_loc, k, d).sum(axis=1)
+
+    mesh = active_mesh()
+    axes = tuple(
+        a for a in ("pod", "data")
+        if mesh is not None and a in mesh.axis_names and mesh.shape[a] > 1
+    )
+    if axes:
+        sm = lambda fn, ins, outs: jax.shard_map(
+            fn, mesh=mesh, in_specs=ins, out_specs=outs, axis_names=set(axes)
+        )
+        buf, safe_e, safe_r, keep = sm(
+            dispatch_local,
+            (P(axes), P(axes)),
+            (P(None, axes), P(axes), P(axes), P(axes)),
+        )(x, top_idx)
+    else:  # host tests: emulate the shard split with vmap
+        xs = x.reshape(shards, t_loc, d)
+        idxs = top_idx.reshape(shards, t_loc, k)
+        buf, safe_e, safe_r, keep = jax.vmap(dispatch_local)(xs, idxs)
+        buf = jnp.moveaxis(buf, 0, 1).reshape(E, shards * cap, d)
+        safe_e, safe_r, keep = (
+            safe_e.reshape(-1), safe_r.reshape(-1), keep.reshape(-1),
+        )
+
+    # ---- expert matmuls OUTSIDE the manual region: buf's cap dim is
+    #      sharded over the batch axes, weights keep their auto layout ----
+    buf = constrain(buf, None, "act_dispatch", None)
+    if "w_gate" in params:
+        gate_act = jax.nn.gelu if act == "geglu" else jax.nn.silu
+        h = gate_act(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"]))
+        h = h * jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, params["w_up"]))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    out_buf = constrain(out_buf, None, "act_dispatch", None)
+
+    w_flat = top_probs.reshape(-1)
+    if axes:
+        out = sm(
+            combine_local,
+            (P(None, axes), P(axes), P(axes), P(axes), P(axes)),
+            P(axes),
+        )(out_buf, safe_e, safe_r, keep, w_flat)
+    else:
+        out = jax.vmap(combine_local)(
+            jnp.moveaxis(out_buf.reshape(E, shards, cap, d), 1, 0),
+            safe_e.reshape(shards, -1),
+            safe_r.reshape(shards, -1),
+            keep.reshape(shards, -1),
+            w_flat.reshape(shards, -1),
+        ).reshape(T, d)
+
+    if cfg.num_shared_experts:
+        out = out + mlp_apply(params["shared"], x, act)
+
+    flat_e = top_idx.reshape(-1)
+    mean_probs = probs.mean(axis=0)
+    assign = jnp.zeros((E,)).at[flat_e].add(1.0) / (T * k)
+    aux = E * jnp.sum(mean_probs * assign) * cfg.router_aux_weight
+    zloss = jnp.mean(jax.scipy.special.logsumexp(router_logits, axis=-1) ** 2)
+    metrics = {
+        "aux_loss": aux,
+        "router_z_loss": cfg.router_z_weight * zloss,
+        "dropped_fraction": 1.0 - keep.astype(jnp.float32).mean(),
+    }
+    return out, metrics
+
+
+def moe_flops(d_model: int, cfg: MoEConfig, act: str, tokens: int) -> int:
+    """ACTIVE-parameter FLOPs (what the roofline's MODEL_FLOPS uses)."""
+    mats = 3 if act in GATED else 2
+    per_tok = 2 * mats * d_model * cfg.expert_d_ff * cfg.top_k
+    per_tok += 2 * d_model * cfg.num_experts  # router
+    if cfg.num_shared_experts:
+        per_tok += 2 * mats * d_model * cfg.shared_d_ff * cfg.num_shared_experts
+    return per_tok * tokens

@@ -1,0 +1,355 @@
+"""Mamba2 SSD (state-space duality) mixer — arXiv:2405.21060.
+
+Implements the chunked SSD algorithm: within a chunk the recurrence is
+computed as attention-like dense matmuls (MXU-friendly), across chunks a
+``jax.lax.associative_scan`` propagates the (decay, state) pair.  A naive
+token-by-token recurrence lives in ``ssd_reference`` and is what the
+tests compare against.
+
+Recurrence (per head h, channels P=head_dim, state N=state_dim):
+
+    h_t = exp(Δ_t a) · h_{t-1} + Δ_t · B_t ⊗ x_t           (B_t ∈ R^N, x_t ∈ R^P)
+    y_t = C_tᵀ h_t + D · x_t
+
+with a = −exp(A_log) < 0 and Δ_t = softplus(dt_t + dt_bias).
+
+Decode serving keeps ``(ssm_state, conv_state)`` caches and advances one
+token in O(H·P·N) — this is what makes mamba2/zamba2 the native
+long_500k architectures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+from repro.models.config import SSMConfig
+from repro.models.mlp import rmsnorm
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+
+def mamba_specs(
+    d_model: int, cfg: SSMConfig, *, prefix_layers: int = 0
+) -> Dict[str, ParamSpec]:
+    """One (optionally layer-stacked) Mamba2 mixer's parameters.
+
+    in_proj emits [z (d_in), x (d_in), B (N), C (N), dt (H)] in one matmul;
+    a depthwise causal conv runs over the concatenated (x, B, C) channels.
+    """
+    d_in = cfg.d_inner(d_model)
+    H = cfg.num_heads(d_model)
+    N = cfg.state_dim
+    conv_ch = d_in + 2 * N
+    L = (prefix_layers,) if prefix_layers else ()
+    lx = ("layers",) if prefix_layers else ()
+    return {
+        "in_proj": ParamSpec(
+            L + (d_model, 2 * d_in + 2 * N + H), lx + ("embed", "inner")
+        ),
+        "conv_w": ParamSpec(L + (cfg.conv_width, conv_ch), lx + (None, "inner")),
+        "conv_b": ParamSpec(L + (conv_ch,), lx + ("inner",), init="zeros"),
+        "A_log": ParamSpec(L + (H,), lx + (None,), init="zeros"),
+        "dt_bias": ParamSpec(L + (H,), lx + (None,), init="zeros"),
+        "D": ParamSpec(L + (H,), lx + (None,), init="ones"),
+        "norm": ParamSpec(L + (d_in,), lx + ("inner",), init="zeros"),
+        "out_proj": ParamSpec(L + (d_in, d_model), lx + ("inner", "embed")),
+    }
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SSMCache:
+    """Decode-time state for a stack of mamba layers.
+
+    ssm_state: (L, B, H, P, N); conv_state: (L, B, W-1, conv_ch).
+    """
+
+    ssm_state: Array
+    conv_state: Array
+
+    @staticmethod
+    def zeros(
+        layers: int, batch: int, d_model: int, cfg: SSMConfig, dtype=jnp.float32
+    ) -> "SSMCache":
+        d_in = cfg.d_inner(d_model)
+        H = cfg.num_heads(d_model)
+        conv_ch = d_in + 2 * cfg.state_dim
+        return SSMCache(
+            ssm_state=jnp.zeros(
+                (layers, batch, H, cfg.head_dim, cfg.state_dim), dtype
+            ),
+            conv_state=jnp.zeros((layers, batch, cfg.conv_width - 1, conv_ch), dtype),
+        )
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal conv
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over (B, S, CH) with taps (W, CH)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for tap in range(width):  # width is 4 — unrolled adds, no conv primitive
+        out = out + pad[:, tap : tap + x.shape[1], :] * w[tap]
+    return out + b
+
+
+def causal_conv_step(
+    x_t: Array, conv_state: Array, w: Array, b: Array
+) -> Tuple[Array, Array]:
+    """One-token conv using the (B, W-1, CH) tail state; returns new state."""
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B, W, CH)
+    out = jnp.einsum("bwc,wc->bc", window, w) + b
+    return out, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(
+    x: Array,
+    dt: Array,
+    A_log: Array,
+    B: Array,
+    C: Array,
+    *,
+    chunk: int,
+    initial_state: Optional[Array] = None,
+) -> Tuple[Array, Array]:
+    """Chunked SSD forward.
+
+    Args:
+      x:  (b, s, H, P) input heads.
+      dt: (b, s, H) post-softplus step sizes.
+      A_log: (H,) — a = −exp(A_log).
+      B, C: (b, s, N) shared across heads (n_groups = 1).
+      chunk: chunk length Q (s must be divisible by Q; callers pad).
+      initial_state: optional (b, H, P, N) carried state (decode-continuation).
+
+    Returns:
+      y: (b, s, H, P) outputs (without the D·x skip — caller adds it),
+      final_state: (b, H, P, N).
+    """
+    b, s, H, P = x.shape
+    N = B.shape[-1]
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    nc, q = s // chunk, chunk
+    f32 = jnp.float32
+
+    xc = x.reshape(b, nc, q, H, P).astype(f32)
+    dtc = dt.reshape(b, nc, q, H).astype(f32)
+    Bc = B.reshape(b, nc, q, N).astype(f32)
+    Cc = C.reshape(b, nc, q, N).astype(f32)
+    a = -jnp.exp(A_log.astype(f32))  # (H,)
+    dA = dtc * a  # (b, nc, q, H)  (negative)
+    cum = jnp.cumsum(dA, axis=2)  # (b, nc, q, H)
+
+    # ---- intra-chunk (diagonal blocks): attention-like matmuls ----
+    # Contribution of step j's input to step i's output decays by
+    # exp(Σ_{j<t≤i} dA_t) = exp(cum_i − cum_j); the dt_j factor applies
+    # separately.  This matches the recurrence where step j's own decay
+    # multiplies the PREVIOUS state, not its own input.
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,i,j,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    Lmat = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # (b,nc,q,q)
+    w = scores[..., None] * Lmat * dtc[:, :, None, :, :]  # (b,nc,i,j,H)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", w, xc)
+
+    # ---- chunk summary states ----
+    # S_c = Σ_j exp(cum_last − cum_j) · dt_j · B_j ⊗ x_j   (b,nc,H,P,N)
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)  # (b,nc,q,H)
+    S = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Bc, dtc * decay_out, xc)
+
+    # ---- inter-chunk recurrence over nc via associative scan ----
+    g = jnp.exp(cum[:, :, -1, :])  # (b,nc,H) whole-chunk decay
+    if initial_state is None:
+        init = jnp.zeros((b, H, P, N), f32)
+    else:
+        init = initial_state.astype(f32)
+
+    def combine(left, right):
+        g1, s1 = left
+        g2, s2 = right
+        return g1 * g2, g2[..., None, None] * s1 + s2
+
+    gs, states = jax.lax.associative_scan(combine, (g, S), axis=1)
+    # states[c] = state AFTER chunk c assuming zero init; fold init in:
+    states = states + gs[..., None, None] * init[:, None]
+    final_state = states[:, -1]
+    # h_prev[c] = state BEFORE chunk c
+    h_prev = jnp.concatenate([init[:, None], states[:, :-1]], axis=1)
+
+    # ---- off-diagonal: y_off[i] = exp(cum_i)·C_i · h_prev ----
+    decay_in = jnp.exp(cum)  # (b,nc,q,H)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc, h_prev, decay_in)
+
+    y = (y_diag + y_off).reshape(b, s, H, P)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_step(
+    x_t: Array,
+    dt_t: Array,
+    A_log: Array,
+    B_t: Array,
+    C_t: Array,
+    state: Array,
+) -> Tuple[Array, Array]:
+    """One-token recurrence. x_t: (b,H,P); dt_t: (b,H); B_t/C_t: (b,N);
+    state: (b,H,P,N). Returns (y_t, new_state)."""
+    f32 = jnp.float32
+    a = -jnp.exp(A_log.astype(f32))
+    decay = jnp.exp(dt_t.astype(f32) * a)  # (b,H)
+    upd = (
+        dt_t.astype(f32)[..., None, None]
+        * x_t.astype(f32)[..., None]
+        * B_t.astype(f32)[:, None, None, :]
+    )
+    new_state = decay[..., None, None] * state.astype(f32) + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C_t.astype(f32))
+    return y.astype(x_t.dtype), new_state
+
+
+def ssd_reference(
+    x: Array, dt: Array, A_log: Array, B: Array, C: Array,
+    initial_state: Optional[Array] = None,
+) -> Tuple[Array, Array]:
+    """Naive O(s) sequential oracle for tests."""
+    b, s, H, P = x.shape
+    N = B.shape[-1]
+    state = (
+        jnp.zeros((b, H, P, N), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(state, inp):
+        x_t, dt_t, B_t, C_t = inp
+        y_t, state = ssd_step(x_t, dt_t, A_log, B_t, C_t, state)
+        return state, y_t
+
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(B, 1, 0),
+        jnp.moveaxis(C, 1, 0),
+    )
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+# ---------------------------------------------------------------------------
+# full mixer (in_proj → conv → SSD → gated norm → out_proj)
+# ---------------------------------------------------------------------------
+
+
+def _split_proj(z_all: Array, d_in: int, N: int, H: int):
+    z, xBC, dt = jnp.split(z_all, [d_in, d_in + d_in + 2 * N], axis=-1)
+    return z, xBC, dt
+
+
+def mamba_mixer(
+    params: Dict[str, Array],
+    x: Array,
+    cfg: SSMConfig,
+    d_model: int,
+    *,
+    initial_state: Optional[Array] = None,
+    return_conv_tail: bool = False,
+) -> Tuple[Array, Array] | Tuple[Array, Array, Array]:
+    """Sequence forward. x: (B, S, d_model) -> (B, S, d_model), final SSD state.
+
+    With ``return_conv_tail`` also returns the last (conv_width-1) raw
+    xBC channels — the conv state a decode continuation needs.
+    """
+    b, s, _ = x.shape
+    d_in = cfg.d_inner(d_model)
+    H = cfg.num_heads(d_model)
+    N = cfg.state_dim
+
+    z_all = x @ params["in_proj"]  # (b, s, 2*d_in + 2N + H)
+    z, xBC_raw, dt = _split_proj(z_all, d_in, N, H)
+    xBC = jax.nn.silu(causal_conv(xBC_raw, params["conv_w"], params["conv_b"]))
+    xs, B, C = jnp.split(xBC, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(dt + params["dt_bias"])  # (b, s, H)
+
+    xh = xs.reshape(b, s, H, cfg.head_dim)
+    pad = (-s) % cfg.chunk_len
+    if pad:
+        padder = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        xh, dt, B, C = padder(xh), padder(dt), padder(B), padder(C)
+    y, final_state = ssd_chunked(
+        xh, dt, params["A_log"], B, C, chunk=cfg.chunk_len,
+        initial_state=initial_state,
+    )
+    if pad:
+        y = y[:, :s]
+        dt = dt[:, :s]
+    y = y + params["D"][None, None, :, None] * xs.reshape(b, s, H, cfg.head_dim)
+    y = y.reshape(b, s, d_in)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"])
+    out = y @ params["out_proj"]
+    if return_conv_tail:
+        w1 = cfg.conv_width - 1
+        tail = xBC_raw[:, -w1:, :]
+        if s < w1:  # left-pad with zeros (cold conv state)
+            tail = jnp.pad(xBC_raw, ((0, 0), (w1 - s, 0), (0, 0)))
+        return out, final_state, tail
+    return out, final_state
+
+
+def mamba_mixer_step(
+    params: Dict[str, Array],
+    x_t: Array,
+    ssm_state: Array,
+    conv_state: Array,
+    cfg: SSMConfig,
+    d_model: int,
+) -> Tuple[Array, Array, Array]:
+    """Single-token decode. x_t: (B, d_model). Returns (y, ssm_state, conv_state)."""
+    b, _ = x_t.shape
+    d_in = cfg.d_inner(d_model)
+    H = cfg.num_heads(d_model)
+    N = cfg.state_dim
+
+    z_all = x_t @ params["in_proj"]
+    z, xBC, dt = _split_proj(z_all, d_in, N, H)
+    xBC, conv_state = causal_conv_step(xBC, conv_state, params["conv_w"], params["conv_b"])
+    xBC = jax.nn.silu(xBC)
+    xs, B, C = jnp.split(xBC, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(dt + params["dt_bias"])  # (b, H)
+
+    xh = xs.reshape(b, H, cfg.head_dim)
+    y, ssm_state = ssd_step(xh, dt, params["A_log"], B, C, ssm_state)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(b, d_in)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"])
+    return y @ params["out_proj"], ssm_state, conv_state
+
+
+def mamba_flops(d_model: int, cfg: SSMConfig, tokens: int) -> int:
+    """Model FLOPs per the SSD recurrence (matmul-dominated terms)."""
+    d_in = cfg.d_inner(d_model)
+    H = cfg.num_heads(d_model)
+    N = cfg.state_dim
+    proj = 2 * tokens * d_model * (2 * d_in + 2 * N + H) + 2 * tokens * d_in * d_model
+    conv = 2 * tokens * (d_in + 2 * N) * cfg.conv_width
+    # state update + readout per token: H·P·N MACs each
+    ssd = 2 * tokens * H * cfg.head_dim * N * 2
+    return proj + conv + ssd

@@ -1,0 +1,834 @@
+"""The unified backbone stack: dense / MoE / SSM / hybrid / VLM / audio.
+
+A model is a list of :class:`BlockGroup`s; each group is ``repeat`` copies
+of a block ``pattern`` executed under ONE ``jax.lax.scan`` with
+layer-stacked parameters (bounded HLO size — critical when compiling a
+48-layer model for 512 SPMD partitions on the CPU backend).
+
+Three entry points per architecture (DESIGN.md §3):
+
+- :func:`forward`       — full-sequence forward (train / prefill / stats).
+- :func:`prefill`       — forward + KV/SSM cache build.
+- :func:`decode_step`   — ONE token against a pre-filled cache.
+
+Caches are plain nested dicts (pytrees) so `jax.jit` shardings and
+`tree_map` apply without ceremony:
+
+    cache = {
+      "groups": [ { "p<i>": {"k","v"} | {"ssm","conv"} | {...,"xk","xv"} } ],
+      "index":      ()        int32   — #valid tokens,
+      "positions":  (S_c,)    int32   — absolute position held by each
+                                        self-attn cache slot (ring-aware),
+    }
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import ssm as ssm_lib
+from repro.models.common import ParamSpec, init_params
+from repro.models.config import BlockGroup, ModelConfig
+from repro.models.mlp import GATED, mlp_apply, mlp_flops, mlp_specs, norm_spec, rmsnorm
+from repro.models.moe import moe_apply, moe_flops, moe_specs
+from repro.sharding import constrain
+
+Array = jax.Array
+PyTree = Any
+
+_NEG_BIG = jnp.int32(1 << 30)  # sentinel "invalid slot" position (fails causal mask)
+
+# Sequences at or above this switch to flash-style chunked attention
+# (attend_chunked) so (S, S) logits are never materialized.
+_CHUNKED_ATTN_THRESHOLD = 1024
+
+
+# ===========================================================================
+# parameter specs
+# ===========================================================================
+
+
+def _attn_specs(cfg: ModelConfig, *, prefix_layers: int = 0) -> Dict[str, ParamSpec]:
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    L = (prefix_layers,) if prefix_layers else ()
+    lx = ("layers",) if prefix_layers else ()
+    return {
+        "wq": ParamSpec(L + (d, hq * dh), lx + ("embed", "heads")),
+        "wk": ParamSpec(L + (d, hkv * dh), lx + ("embed", "kv_heads")),
+        "wv": ParamSpec(L + (d, hkv * dh), lx + ("embed", "kv_heads")),
+        "wo": ParamSpec(L + (hq * dh, d), lx + ("heads", "embed")),
+    }
+
+
+def _block_specs(kind: str, cfg: ModelConfig, repeat: int) -> Dict[str, PyTree]:
+    """Spec subtree for one pattern position, stacked over ``repeat``."""
+    R = repeat
+    if kind in ("dense", "enc"):
+        return {
+            "norm1": norm_spec(cfg.d_model, prefix_layers=R),
+            "attn": _attn_specs(cfg, prefix_layers=R),
+            "norm2": norm_spec(cfg.d_model, prefix_layers=R),
+            "mlp": mlp_specs(cfg.d_model, cfg.d_ff, cfg.mlp_act, prefix_layers=R),
+        }
+    if kind == "moe":
+        assert cfg.moe is not None
+        return {
+            "norm1": norm_spec(cfg.d_model, prefix_layers=R),
+            "attn": _attn_specs(cfg, prefix_layers=R),
+            "norm2": norm_spec(cfg.d_model, prefix_layers=R),
+            "moe": moe_specs(cfg.d_model, cfg.moe, cfg.mlp_act, prefix_layers=R),
+        }
+    if kind == "mamba":
+        assert cfg.ssm is not None
+        return {
+            "norm1": norm_spec(cfg.d_model, prefix_layers=R),
+            "mixer": ssm_lib.mamba_specs(cfg.d_model, cfg.ssm, prefix_layers=R),
+        }
+    if kind == "shared_attn":
+        # weight-TIED: params declared once at stack level; the group only
+        # owns a per-invocation norm (cheap, keeps scan xs non-empty).
+        return {"norm1": norm_spec(cfg.d_model, prefix_layers=R)}
+    if kind == "encdec":
+        return {
+            "norm1": norm_spec(cfg.d_model, prefix_layers=R),
+            "attn": _attn_specs(cfg, prefix_layers=R),
+            "norm_x": norm_spec(cfg.d_model, prefix_layers=R),
+            "xattn": _attn_specs(cfg, prefix_layers=R),
+            "norm2": norm_spec(cfg.d_model, prefix_layers=R),
+            "mlp": mlp_specs(cfg.d_model, cfg.d_ff, cfg.mlp_act, prefix_layers=R),
+        }
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def _group_specs(group: BlockGroup, cfg: ModelConfig) -> Dict[str, PyTree]:
+    return {
+        f"p{i}": _block_specs(kind, cfg, group.repeat)
+        for i, kind in enumerate(group.pattern)
+    }
+
+
+def build_specs(cfg: ModelConfig) -> Dict[str, PyTree]:
+    """The full parameter-spec tree for one architecture."""
+    d, v = cfg.d_model, cfg.vocab_size
+    specs: Dict[str, PyTree] = {
+        "embed": ParamSpec((v, d), ("vocab", "embed"), init="embed", scale=0.02),
+        "groups": [_group_specs(g, cfg) for g in cfg.groups],
+        "final_norm": norm_spec(d),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((d, v), ("embed", "vocab"), scale=0.02)
+    if any("shared_attn" in g.pattern for g in cfg.groups):
+        specs["shared_attn"] = {
+            "attn": _attn_specs(cfg),
+            "norm2": norm_spec(d),
+            "mlp": mlp_specs(d, cfg.d_ff, cfg.mlp_act),
+        }
+    if cfg.is_encdec:
+        enc_group = BlockGroup(("enc",), cfg.encoder_layers)
+        specs["encoder"] = {
+            "pos": ParamSpec(
+                (cfg.encoder_seq_len, d), (None, "embed"), init="embed", scale=0.02
+            ),
+            "groups": [_group_specs(enc_group, cfg)],
+            "final_norm": norm_spec(d),
+        }
+        specs["dec_pos"] = ParamSpec(
+            (min(cfg.max_seq_len, 32768), d),
+            (None, "embed"),
+            init="embed",
+            scale=0.02,
+        )
+    return specs
+
+
+def init_model(cfg: ModelConfig, key: jax.Array) -> PyTree:
+    return init_params(build_specs(cfg), key)
+
+
+# ===========================================================================
+# context threaded through block application
+# ===========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class Ctx:
+    cfg: ModelConfig
+    positions: Array  # (B, S) or (3, B, S) for mrope
+    enc_out: Optional[Array] = None  # (B, S_enc, d) whisper encoder states
+    moe_dispatch_shards: int = 1  # §Perf: per-shard MoE dispatch
+    # decode-only fields
+    index: Optional[Array] = None  # () — #tokens already in the cache
+    cache_positions: Optional[Array] = None  # (S_c,) absolute slot positions
+
+
+def _zero_aux() -> Dict[str, Array]:
+    return {
+        "aux_loss": jnp.zeros((), jnp.float32),
+        "router_z_loss": jnp.zeros((), jnp.float32),
+        "dropped_fraction": jnp.zeros((), jnp.float32),
+    }
+
+
+def _acc_aux(a: Dict[str, Array], b: Dict[str, Array]) -> Dict[str, Array]:
+    return {k: a[k] + b[k] for k in a}
+
+
+# ===========================================================================
+# per-block sequence application (train / prefill / stats)
+# ===========================================================================
+
+
+def _attn_seq(
+    p: Dict[str, Array], x: Array, ctx: Ctx, *, causal: bool
+) -> Tuple[Array, Tuple[Array, Array]]:
+    cfg = ctx.cfg
+    b, s, d = x.shape
+    dh, hq, hkv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+    q = constrain((x @ p["wq"]).reshape(b, s, hq, dh), "act_batch", None, "act_heads", None)
+    k = (x @ p["wk"]).reshape(b, s, hkv, dh)
+    v = (x @ p["wv"]).reshape(b, s, hkv, dh)
+    q, k = attn_lib.apply_rope(
+        q, k, ctx.positions, mode=cfg.rope, theta=cfg.rope_theta
+    )
+    if s >= _CHUNKED_ATTN_THRESHOLD:
+        out = attn_lib.attend_chunked(
+            q, k, v,
+            causal=causal,
+            sliding_window=cfg.sliding_window,
+            logit_softcap=cfg.attn_logit_softcap,
+            q_chunk=cfg.attn_q_chunk,
+            kv_chunk=cfg.attn_kv_chunk,
+        )
+    else:
+        out = attn_lib.attend(
+            q, k, v,
+            causal=causal,
+            sliding_window=cfg.sliding_window,
+            logit_softcap=cfg.attn_logit_softcap,
+        )
+    out = out.reshape(b, s, hq * dh) @ p["wo"]
+    return constrain(out, "act_batch", "act_seq", "act_embed"), (k, v)
+
+
+def _xattn_seq(p: Dict[str, Array], x: Array, ctx: Ctx) -> Tuple[Array, Tuple[Array, Array]]:
+    """Cross-attention onto the (stubbed) encoder output."""
+    cfg = ctx.cfg
+    b, s, d = x.shape
+    dh, hq, hkv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+    enc = ctx.enc_out
+    q = (x @ p["wq"]).reshape(b, s, hq, dh)
+    k = (enc @ p["wk"]).reshape(b, enc.shape[1], hkv, dh)
+    v = (enc @ p["wv"]).reshape(b, enc.shape[1], hkv, dh)
+    if s >= _CHUNKED_ATTN_THRESHOLD:
+        out = attn_lib.attend_chunked(q, k, v, causal=False, kv_chunk=500)
+    else:
+        out = attn_lib.attend(q, k, v, causal=False)
+    return out.reshape(b, s, hq * dh) @ p["wo"], (k, v)
+
+
+def _apply_seq(
+    kind: str,
+    p: Dict[str, PyTree],
+    shared: Optional[Dict[str, PyTree]],
+    x: Array,
+    ctx: Ctx,
+) -> Tuple[Array, Dict[str, Array], Dict[str, Array]]:
+    """Returns (x, cache_contrib, aux)."""
+    cfg = ctx.cfg
+    aux = _zero_aux()
+    cache: Dict[str, Array] = {}
+    if kind in ("dense", "moe", "enc"):
+        h, (k, v) = _attn_seq(p["attn"], rmsnorm(x, p["norm1"], cfg.norm_eps), ctx,
+                              causal=cfg.causal and kind != "enc")
+        x = x + h
+        hin = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        if kind == "moe":
+            t = hin.reshape(-1, cfg.d_model)
+            out, aux_m = moe_apply(
+                p["moe"], t, cfg.moe, cfg.mlp_act,
+                dispatch_shards=ctx.moe_dispatch_shards,
+            )
+            x = x + out.reshape(x.shape)
+            aux = _acc_aux(aux, {k2: aux_m[k2] for k2 in aux})
+        else:
+            x = x + mlp_apply(p["mlp"], hin, cfg.mlp_act)
+        cache = {"k": k, "v": v}
+    elif kind == "mamba":
+        h, state, conv_tail = ssm_lib.mamba_mixer(
+            p["mixer"], rmsnorm(x, p["norm1"], cfg.norm_eps), cfg.ssm, cfg.d_model,
+            return_conv_tail=True,
+        )
+        x = x + h
+        cache = {"ssm": state, "conv": conv_tail}
+    elif kind == "shared_attn":
+        sp = shared
+        h, (k, v) = _attn_seq(sp["attn"], rmsnorm(x, p["norm1"], cfg.norm_eps), ctx,
+                              causal=cfg.causal)
+        x = x + h
+        x = x + mlp_apply(sp["mlp"], rmsnorm(x, sp["norm2"], cfg.norm_eps), cfg.mlp_act)
+        cache = {"k": k, "v": v}
+    elif kind == "encdec":
+        h, (k, v) = _attn_seq(p["attn"], rmsnorm(x, p["norm1"], cfg.norm_eps), ctx,
+                              causal=True)
+        x = x + h
+        hx, (xk, xv) = _xattn_seq(p["xattn"], rmsnorm(x, p["norm_x"], cfg.norm_eps), ctx)
+        x = x + hx
+        x = x + mlp_apply(p["mlp"], rmsnorm(x, p["norm2"], cfg.norm_eps), cfg.mlp_act)
+        cache = {"k": k, "v": v, "xk": xk, "xv": xv}
+    else:
+        raise ValueError(kind)
+    return x, cache, aux
+
+
+def _group_forward(
+    group: BlockGroup,
+    gp: Dict[str, PyTree],
+    shared: Optional[Dict[str, PyTree]],
+    x: Array,
+    ctx: Ctx,
+    *,
+    collect_cache: bool,
+    remat: bool,
+) -> Tuple[Array, Optional[Dict[str, PyTree]], Dict[str, Array]]:
+    """Run ``repeat`` iterations of the pattern under one lax.scan."""
+
+    def body(carry, layer_params):
+        x = carry
+        caches: Dict[str, PyTree] = {}
+        aux = _zero_aux()
+        for i, kind in enumerate(group.pattern):
+            x, c, a = _apply_seq(kind, layer_params[f"p{i}"], shared, x, ctx)
+            # layer-boundary residual sharding: "act_embed" defaults to
+            # replicated; the §Perf act-shard knob remaps it to "model".
+            # Skipped for hybrid stacks — the alternating mamba/attn
+            # pattern re-shards across the constraint (+15% measured,
+            # EXPERIMENTS.md §Perf full-table notes).
+            if ctx.cfg.family != "hybrid":
+                x = constrain(x, "act_batch", "act_seq", "act_embed")
+            aux = _acc_aux(aux, a)
+            if collect_cache:
+                caches[f"p{i}"] = c
+        outs = (caches, aux) if collect_cache else (None, aux)
+        return x, outs
+
+    if remat and remat != "none":
+        from repro.models.common import remat_policy as _policy
+
+        name = remat if isinstance(remat, str) else "full"
+        body = jax.checkpoint(body, policy=_policy(name))
+    x, (caches, aux_stack) = jax.lax.scan(body, x, gp)
+    aux = jax.tree_util.tree_map(lambda a: jnp.sum(a, axis=0), aux_stack)
+    return x, caches, aux
+
+
+# ===========================================================================
+# embeddings / full-sequence forward
+# ===========================================================================
+
+
+def _default_positions(cfg: ModelConfig, batch: int, seq: int) -> Array:
+    pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (batch, seq))
+    if cfg.rope == "mrope":
+        return jnp.broadcast_to(pos[None], (3, batch, seq))
+    return pos
+
+
+def embed_tokens(
+    params: PyTree,
+    cfg: ModelConfig,
+    tokens: Array,
+    *,
+    patches: Optional[Array] = None,
+) -> Array:
+    """Token embeddings (+ VLM patch splice, + whisper learned positions)."""
+    x = jnp.take(params["embed"], tokens, axis=0)  # (B, S, d)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    if patches is not None and cfg.vision_tokens:
+        # splice pre-computed patch embeddings over the first V positions
+        x = jax.lax.dynamic_update_slice(x, patches.astype(x.dtype), (0, 0, 0))
+    if cfg.is_encdec:
+        s = tokens.shape[1]
+        x = x + params["dec_pos"][:s][None]
+    return x
+
+
+def encode_frames(params: PyTree, cfg: ModelConfig, frames: Array) -> Array:
+    """Whisper encoder over stubbed (B, S_enc, d) frame embeddings."""
+    enc = params["encoder"]
+    x = frames + enc["pos"][None, : frames.shape[1]]
+    ctx = Ctx(cfg=cfg, positions=_default_positions(cfg, x.shape[0], x.shape[1]))
+    group = BlockGroup(("enc",), cfg.encoder_layers)
+    x, _, _ = _group_forward(
+        group, enc["groups"][0], None, x, ctx, collect_cache=False, remat=False
+    )
+    return rmsnorm(x, enc["final_norm"], cfg.norm_eps)
+
+
+def forward(
+    params: PyTree,
+    cfg: ModelConfig,
+    tokens: Array,
+    *,
+    positions: Optional[Array] = None,
+    patches: Optional[Array] = None,
+    frames: Optional[Array] = None,
+    remat: bool = False,
+    moe_dispatch_shards: int = 1,
+) -> Tuple[Array, Dict[str, Array]]:
+    """Full-sequence forward to final-norm hidden states.
+
+    Returns (hidden (B, S, d), aux-loss dict).
+    """
+    b, s = tokens.shape
+    x = embed_tokens(params, cfg, tokens, patches=patches)
+    x = constrain(x, "act_batch", None, None)
+    enc_out = encode_frames(params, cfg, frames) if cfg.is_encdec else None
+    ctx = Ctx(
+        cfg=cfg,
+        positions=positions if positions is not None else _default_positions(cfg, b, s),
+        enc_out=enc_out,
+        moe_dispatch_shards=moe_dispatch_shards,
+    )
+    aux = _zero_aux()
+    shared = params.get("shared_attn")
+    for group, gp in zip(cfg.groups, params["groups"]):
+        x, _, a = _group_forward(
+            group, gp, shared, x, ctx, collect_cache=False, remat=remat
+        )
+        aux = _acc_aux(aux, a)
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def unembed(params: PyTree, cfg: ModelConfig, hidden: Array) -> Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = hidden @ w.astype(hidden.dtype)
+    return constrain(logits, "act_batch", None, "act_vocab")
+
+
+# ===========================================================================
+# caches
+# ===========================================================================
+
+
+def cache_len_for(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.bfloat16
+) -> Dict[str, PyTree]:
+    """Zero cache with capacity ``cache_len_for(cfg, seq_len)``."""
+    s_c = cache_len_for(cfg, seq_len)
+    dh, hkv = cfg.resolved_head_dim, cfg.num_kv_heads
+    groups: List[Dict[str, PyTree]] = []
+    for g in cfg.groups:
+        gd: Dict[str, PyTree] = {}
+        for i, kind in enumerate(g.pattern):
+            R = g.repeat
+            if kind in ("dense", "moe", "shared_attn", "enc"):
+                gd[f"p{i}"] = {
+                    "k": jnp.zeros((R, batch, s_c, hkv, dh), dtype),
+                    "v": jnp.zeros((R, batch, s_c, hkv, dh), dtype),
+                }
+            elif kind == "mamba":
+                ssm = cfg.ssm
+                h = ssm.num_heads(cfg.d_model)
+                conv_ch = ssm.d_inner(cfg.d_model) + 2 * ssm.state_dim
+                gd[f"p{i}"] = {
+                    "ssm": jnp.zeros((R, batch, h, ssm.head_dim, ssm.state_dim), jnp.float32),
+                    "conv": jnp.zeros((R, batch, ssm.conv_width - 1, conv_ch), dtype),
+                }
+            elif kind == "encdec":
+                gd[f"p{i}"] = {
+                    "k": jnp.zeros((R, batch, s_c, hkv, dh), dtype),
+                    "v": jnp.zeros((R, batch, s_c, hkv, dh), dtype),
+                    "xk": jnp.zeros((R, batch, cfg.encoder_seq_len, hkv, dh), dtype),
+                    "xv": jnp.zeros((R, batch, cfg.encoder_seq_len, hkv, dh), dtype),
+                }
+        groups.append(gd)
+    return {
+        "groups": groups,
+        "index": jnp.zeros((), jnp.int32),
+        "positions": jnp.full((s_c,), _NEG_BIG, jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree matching :func:`init_cache` (dry-run input)."""
+    return jax.eval_shape(lambda: init_cache(cfg, batch, seq_len, dtype))
+
+
+def cache_logical_axes(tree: PyTree) -> PyTree:
+    """Logical axes for every cache leaf (for dry-run shardings)."""
+
+    def leaf_axes(path, leaf) -> Tuple[Optional[str], ...]:
+        names = [getattr(p, "key", None) for p in path]
+        if leaf.ndim == 0 or "positions" in names:
+            return (None,) * leaf.ndim
+        if "ssm" in names:  # (R, B, H, P, N)
+            return ("layers", "act_batch", "act_heads", None, None)
+        if "conv" in names:  # (R, B, W-1, CH)
+            return ("layers", "act_batch", None, "act_inner")
+        # kv slabs: (R, B, S_c, Hkv, Dh)
+        return ("layers", "act_batch", None, "act_heads", None)
+
+    return jax.tree_util.tree_map_with_path(leaf_axes, tree)
+
+
+# ===========================================================================
+# prefill
+# ===========================================================================
+
+
+def prefill(
+    params: PyTree,
+    cfg: ModelConfig,
+    tokens: Array,
+    *,
+    positions: Optional[Array] = None,
+    patches: Optional[Array] = None,
+    frames: Optional[Array] = None,
+    cache_dtype=jnp.bfloat16,
+    cache_len: Optional[int] = None,
+    moe_dispatch_shards: int = 1,
+) -> Tuple[Array, Dict[str, PyTree]]:
+    """Forward + cache build. Returns (final hidden (B, S, d), cache).
+
+    ``cache_len`` sets the cache capacity (default: just the prompt);
+    pass ``s + max_new_tokens`` to leave head-room for decoding.
+    """
+    b, s = tokens.shape
+    s_c = cache_len_for(cfg, cache_len if cache_len is not None else s)
+    x = embed_tokens(params, cfg, tokens, patches=patches)
+    enc_out = encode_frames(params, cfg, frames) if cfg.is_encdec else None
+    ctx = Ctx(
+        cfg=cfg,
+        positions=positions if positions is not None else _default_positions(cfg, b, s),
+        enc_out=enc_out,
+        moe_dispatch_shards=moe_dispatch_shards,
+    )
+    shared = params.get("shared_attn")
+    groups_cache: List[Dict[str, PyTree]] = []
+    for group, gp in zip(cfg.groups, params["groups"]):
+        x, caches, _ = _group_forward(
+            group, gp, shared, x, ctx, collect_cache=True, remat=False
+        )
+        gd: Dict[str, PyTree] = {}
+        for i, kind in enumerate(group.pattern):
+            c = caches[f"p{i}"]
+            if kind == "mamba":
+                gd[f"p{i}"] = {
+                    "ssm": c["ssm"],
+                    "conv": c["conv"].astype(cache_dtype),
+                }
+            else:
+                # keep the LAST s_c tokens, placed at slot p % s_c (ring)
+                k, v = c["k"], c["v"]
+                if s_c < s:
+                    # keep the last s_c tokens; token p lands at slot p % s_c
+                    k, v = k[:, :, s - s_c :], v[:, :, s - s_c :]
+                    k = jnp.roll(k, s % s_c, axis=2)
+                    v = jnp.roll(v, s % s_c, axis=2)
+                elif s_c > s:  # head-room for decode: zero-pad the tail
+                    padw = [(0, 0), (0, 0), (0, s_c - s), (0, 0), (0, 0)]
+                    k, v = jnp.pad(k, padw), jnp.pad(v, padw)
+                entry = {"k": k.astype(cache_dtype), "v": v.astype(cache_dtype)}
+                if kind == "encdec":
+                    entry["xk"] = c["xk"].astype(cache_dtype)
+                    entry["xv"] = c["xv"].astype(cache_dtype)
+                gd[f"p{i}"] = entry
+        groups_cache.append(gd)
+
+    n_keep = min(s, s_c)
+    pos_abs = jnp.arange(s - n_keep, s, dtype=jnp.int32)
+    slot_pos = jnp.full((s_c,), _NEG_BIG, jnp.int32).at[pos_abs % s_c].set(pos_abs)
+    cache = {
+        "groups": groups_cache,
+        "index": jnp.asarray(s, jnp.int32),
+        "positions": slot_pos,
+    }
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps), cache
+
+
+# ===========================================================================
+# decode
+# ===========================================================================
+
+
+def _attn_decode(
+    p: Dict[str, Array],
+    x_t: Array,
+    kv: Dict[str, Array],
+    ctx: Ctx,
+) -> Tuple[Array, Dict[str, Array]]:
+    """One-token attention against a (B, S_c, Hkv, Dh) cache slice."""
+    cfg = ctx.cfg
+    b, d = x_t.shape
+    dh, hq, hkv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+    idx = ctx.index
+    q = (x_t @ p["wq"]).reshape(b, 1, hq, dh)
+    k = (x_t @ p["wk"]).reshape(b, 1, hkv, dh)
+    v = (x_t @ p["wv"]).reshape(b, 1, hkv, dh)
+    pos = ctx.positions
+    q, k = attn_lib.apply_rope(q, k, pos, mode=cfg.rope, theta=cfg.rope_theta)
+    s_c = kv["k"].shape[1]
+    slot = idx % s_c
+    ck = jax.lax.dynamic_update_slice(kv["k"], k.astype(kv["k"].dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(kv["v"], v.astype(kv["v"].dtype), (0, slot, 0, 0))
+    kv_pos = ctx.cache_positions.at[slot].set(idx)
+    # seq-sharded caches (kv_heads don't divide "model") need the
+    # explicit flash-decode combine — GSPMD would all-gather the cache
+    from repro.sharding import active_mesh
+
+    mesh = active_mesh()
+    model = mesh.shape.get("model", 1) if mesh is not None else 1
+    if model > 1 and hkv % model != 0 and s_c % model == 0:
+        out = attn_lib.attend_decode_seq_sharded(
+            q, ck, cv, kv_pos, idx,
+            mesh=mesh,
+            sliding_window=cfg.sliding_window,
+            logit_softcap=cfg.attn_logit_softcap,
+        )
+    else:
+        out = attn_lib.attend(
+            q, ck, cv,
+            causal=True,
+            q_offset=idx,
+            kv_positions=kv_pos,
+            sliding_window=cfg.sliding_window,
+            logit_softcap=cfg.attn_logit_softcap,
+        )
+    out = out.reshape(b, hq * dh) @ p["wo"]
+    return out, {"k": ck, "v": cv}
+
+
+def _apply_decode(
+    kind: str,
+    p: Dict[str, PyTree],
+    shared: Optional[Dict[str, PyTree]],
+    x_t: Array,
+    c: Dict[str, Array],
+    ctx: Ctx,
+) -> Tuple[Array, Dict[str, Array]]:
+    cfg = ctx.cfg
+    if kind in ("dense", "moe"):
+        h, nc = _attn_decode(p["attn"], rmsnorm(x_t, p["norm1"], cfg.norm_eps), c, ctx)
+        x_t = x_t + h
+        hin = rmsnorm(x_t, p["norm2"], cfg.norm_eps)
+        if kind == "moe":
+            out, _ = moe_apply(p["moe"], hin, cfg.moe, cfg.mlp_act)
+            x_t = x_t + out
+        else:
+            x_t = x_t + mlp_apply(p["mlp"], hin, cfg.mlp_act)
+        return x_t, nc
+    if kind == "mamba":
+        h, ssm_state, conv_state = ssm_lib.mamba_mixer_step(
+            p["mixer"], rmsnorm(x_t, p["norm1"], cfg.norm_eps),
+            c["ssm"], c["conv"].astype(jnp.float32), cfg.ssm, cfg.d_model,
+        )
+        x_t = x_t + h.astype(x_t.dtype)  # f32 conv state must not promote the carry
+        return x_t, {"ssm": ssm_state, "conv": conv_state.astype(c["conv"].dtype)}
+    if kind == "shared_attn":
+        sp = shared
+        h, nc = _attn_decode(sp["attn"], rmsnorm(x_t, p["norm1"], cfg.norm_eps), c, ctx)
+        x_t = x_t + h
+        x_t = x_t + mlp_apply(sp["mlp"], rmsnorm(x_t, sp["norm2"], cfg.norm_eps), cfg.mlp_act)
+        return x_t, nc
+    if kind == "encdec":
+        h, nc = _attn_decode(p["attn"], rmsnorm(x_t, p["norm1"], cfg.norm_eps), c, ctx)
+        x_t = x_t + h
+        # cross-attention against the cached encoder K/V (no causal mask)
+        b, d = x_t.shape
+        dh, hq = cfg.resolved_head_dim, cfg.num_heads
+        hx = rmsnorm(x_t, p["norm_x"], cfg.norm_eps)
+        q = (hx @ p["xattn"]["wq"]).reshape(b, 1, hq, dh)
+        out = attn_lib.attend(q, c["xk"], c["xv"], causal=False)
+        x_t = x_t + out.reshape(b, hq * dh) @ p["xattn"]["wo"]
+        x_t = x_t + mlp_apply(p["mlp"], rmsnorm(x_t, p["norm2"], cfg.norm_eps), cfg.mlp_act)
+        nc = dict(nc)
+        nc["xk"], nc["xv"] = c["xk"], c["xv"]
+        return x_t, nc
+    raise ValueError(kind)
+
+
+def decode_step(
+    params: PyTree,
+    cfg: ModelConfig,
+    token: Array,
+    cache: Dict[str, PyTree],
+    *,
+    positions: Optional[Array] = None,
+) -> Tuple[Array, Dict[str, PyTree]]:
+    """ONE new token. token: (B,) int32. Returns (hidden (B, d), new cache)."""
+    b = token.shape[0]
+    idx = cache["index"]
+    x = jnp.take(params["embed"], token, axis=0)  # (B, d)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    if cfg.is_encdec:
+        x = x + jnp.take(params["dec_pos"], jnp.minimum(idx, params["dec_pos"].shape[0] - 1), axis=0)[None]
+    if positions is None:
+        pos = jnp.broadcast_to(idx[None, None], (b, 1)).astype(jnp.int32)
+        if cfg.rope == "mrope":
+            pos = jnp.broadcast_to(pos[None], (3, b, 1))
+    else:
+        pos = positions
+    ctx = Ctx(
+        cfg=cfg, positions=pos, index=idx, cache_positions=cache["positions"],
+    )
+    shared = params.get("shared_attn")
+
+    # NOTE: decode unrolls the layer loop instead of lax.scan. Decode
+    # bodies are tiny (one token), so HLO size is a non-issue — and a
+    # compiled scan over a sequence-sharded KV cache miscompiles on
+    # XLA-CPU SPMD (verified: a LENGTH-1 scan whose body is correct
+    # returns wrong values; the unrolled body is correct). Unrolling
+    # also lets XLA pipeline per-layer collectives during serving.
+    new_groups: List[Dict[str, PyTree]] = []
+    for group, gp, gc in zip(cfg.groups, params["groups"], cache["groups"]):
+        has_attn = any(k != "mamba" for k in group.pattern)
+        if has_attn:
+            # unrolled path (see note above): KV caches present
+            layer_caches: List[Dict[str, PyTree]] = []
+            for r in range(group.repeat):
+                layer_params = jax.tree_util.tree_map(lambda a: a[r], gp)
+                layer_cache = jax.tree_util.tree_map(lambda a: a[r], gc)
+                ncs: Dict[str, PyTree] = {}
+                for i, kind in enumerate(group.pattern):
+                    x, nc = _apply_decode(
+                        kind, layer_params[f"p{i}"], shared, x,
+                        layer_cache[f"p{i}"], ctx,
+                    )
+                    ncs[f"p{i}"] = nc
+                layer_caches.append(ncs)
+            new_gc = jax.tree_util.tree_map(
+                lambda *ls: jnp.stack(ls), *layer_caches
+            )
+        else:
+            # attention-free (pure mamba) groups keep the scan: no KV
+            # cache to trip the SPMD bug, and batch-1 SSM decode regresses
+            # ~6x when unrolled (per-layer op overheads, EXPERIMENTS §Perf)
+
+            def body(carry, xs):
+                x_t = carry
+                layer_params, layer_cache = xs
+                ncs: Dict[str, PyTree] = {}
+                for i, kind in enumerate(group.pattern):
+                    x_t, nc = _apply_decode(
+                        kind, layer_params[f"p{i}"], shared, x_t,
+                        layer_cache[f"p{i}"], ctx,
+                    )
+                    ncs[f"p{i}"] = nc
+                return x_t, ncs
+
+            x, new_gc = jax.lax.scan(body, x, (gp, gc))
+        new_groups.append(new_gc)
+
+    s_c = cache["positions"].shape[0]
+    new_cache = {
+        "groups": new_groups,
+        "index": idx + 1,
+        "positions": cache["positions"].at[idx % s_c].set(idx),
+    }
+    hidden = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return hidden, new_cache
+
+
+# ===========================================================================
+# losses / steps (pure functions; the launcher jits them with shardings)
+# ===========================================================================
+
+
+def lm_loss(
+    params: PyTree,
+    cfg: ModelConfig,
+    tokens: Array,
+    targets: Array,
+    *,
+    positions: Optional[Array] = None,
+    patches: Optional[Array] = None,
+    frames: Optional[Array] = None,
+    remat: bool = True,
+    prototypes: Optional[Array] = None,
+    proto_lambda: float = 0.0,
+    moe_dispatch_shards: int = 1,
+) -> Tuple[Array, Dict[str, Array]]:
+    """Next-token cross-entropy (+ optional FedCGS prototype regularizer).
+
+    ``prototypes`` is the downloaded global μ (C, d): the personalized
+    one-shot FL objective (paper Eq. 12) adds
+    λ · mean_t ‖h_t − μ^{y_t}‖² over the batch.
+    """
+    hidden, aux = forward(
+        params, cfg, tokens, positions=positions, patches=patches, frames=frames,
+        remat=remat, moe_dispatch_shards=moe_dispatch_shards,
+    )
+    logits = unembed(params, cfg, hidden).astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(logz - tgt)
+    loss = nll + aux["aux_loss"] + aux["router_z_loss"]
+    metrics = {"nll": nll, **aux}
+    if prototypes is not None and proto_lambda > 0.0:
+        mu_y = jnp.take(prototypes, targets, axis=0)  # (B, S, d)
+        reg = jnp.mean(jnp.sum((hidden.astype(jnp.float32) - mu_y) ** 2, axis=-1))
+        loss = loss + proto_lambda * reg
+        metrics["proto_reg"] = reg
+    return loss, metrics
+
+
+# ===========================================================================
+# model-FLOPs accounting (roofline's MODEL_FLOPS)
+# ===========================================================================
+
+
+def model_flops(cfg: ModelConfig, tokens: int, seq_len: int, *, decode: bool = False) -> int:
+    """6·N·D-style accounting with per-block active parameters.
+
+    For decode, attention score FLOPs use the cache length; matmul terms
+    use the single new token.
+    """
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    total = 0
+    # embeddings: lookup is bandwidth; unembed matmul counts
+    total += 2 * tokens * d * cfg.vocab_size
+    # decode attends over the cache; sliding windows bound the context
+    attn_ctx = seq_len
+    if cfg.sliding_window is not None:
+        attn_ctx = min(attn_ctx, cfg.sliding_window)
+    for g in cfg.groups:
+        for kind in g.pattern:
+            reps = g.repeat
+            if kind in ("dense", "moe", "enc", "encdec", "shared_attn"):
+                proj = 2 * tokens * d * (hq * dh + 2 * hkv * dh) + 2 * tokens * hq * dh * d
+                scores = 2 * tokens * hq * dh * attn_ctx * 2  # qk + pv
+                if not decode:
+                    scores //= 2  # causal halves the realized score work
+                total += reps * (proj + scores)
+                if kind == "dense" or kind == "enc":
+                    total += reps * mlp_flops(d, cfg.d_ff, cfg.mlp_act, tokens)
+                elif kind == "shared_attn":
+                    total += reps * mlp_flops(d, cfg.d_ff, cfg.mlp_act, tokens)
+                elif kind == "encdec":
+                    total += reps * mlp_flops(d, cfg.d_ff, cfg.mlp_act, tokens)
+                    total += reps * (
+                        2 * tokens * d * 2 * hkv * dh
+                        + 2 * tokens * hq * dh * cfg.encoder_seq_len * 2
+                    )
+                elif kind == "moe":
+                    total += reps * moe_flops(d, cfg.moe, cfg.mlp_act, tokens)
+            elif kind == "mamba":
+                total += reps * ssm_lib.mamba_flops(d, cfg.ssm, tokens)
+    return total

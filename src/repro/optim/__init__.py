@@ -1,0 +1,3 @@
+from repro.optim.optimizers import Optimizer, adamw, sgd, apply_updates, global_norm
+
+__all__ = ["Optimizer", "adamw", "sgd", "apply_updates", "global_norm"]

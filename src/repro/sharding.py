@@ -1,0 +1,209 @@
+"""Logical-axis sharding rule engine (MaxText-style, DESIGN.md §5).
+
+Every parameter/activation dimension carries a *logical* name; a rule
+table maps logical names to an ordered list of mesh-axis candidates.
+Resolution walks the candidates and picks the first whose mesh extent
+divides the dimension — so ONE code path serves architectures whose
+dims don't all divide the mesh (e.g. qwen2-moe's 60 experts on a
+16-way model axis fall back to replication while its 1408 expert_mlp
+shards instead).
+
+Candidates may be joint tuples: ``("pod", "data")`` shards a dim over
+the product of both axes (used for the global batch).  Axes already
+consumed by an earlier dim of the same tensor are skipped.
+
+A process-global context (set by :func:`use_mesh`) lets model code call
+:func:`constrain` unconditionally; outside a mesh context it's a no-op,
+so single-device smoke tests need zero ceremony.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+Candidate = Union[str, Tuple[str, ...]]
+
+
+# ---------------------------------------------------------------------------
+# rule tables
+# ---------------------------------------------------------------------------
+
+# fmt: off
+DEFAULT_RULES: Dict[str, Tuple[Candidate, ...]] = {
+    # ---- parameters ----
+    "vocab":      ("model",),            # embedding / unembedding vocab dim
+    "embed":      ("data",),             # FSDP: weight d_model dim over data
+    "heads":      ("model",),            # fused Hq*head_dim projection dim
+    "kv_heads":   ("model",),
+    "mlp":        ("model",),
+    "expert":     ("model", "data"),     # falls back when E % axis != 0
+    "expert_mlp": ("data", "model"),
+    "inner":      ("model",),            # mamba d_inner-derived dims
+    "layers":     (),                    # stacked-scan dim: never sharded
+    "state":      (),
+    # ---- activations ----
+    "act_batch":  (("pod", "data"),),
+    "act_seq":    (),
+    "act_embed":  (),
+    "act_heads":  ("model",),
+    "act_mlp":    ("model",),
+    "act_vocab":  ("model",),
+    "act_expert": ("model", "data"),
+    "act_inner":  ("model",),
+    "act_classes": ("model",),           # FedCGS statistics: A's class dim
+    "act_feature": (),                   # FedCGS statistics: feature dim
+    "act_dispatch": (("pod", "data"),),  # MoE per-shard dispatch dim (§Perf)
+}
+# fmt: on
+
+
+# Serving layout (§Perf): FSDP's data-sharded weights are right for
+# training (grads reduce where they live) but force a full weight
+# all-gather EVERY DECODED TOKEN. For decode, weights replicate over
+# data/pod and shard only over "model" — per-chip weight memory rises
+# (params/model_axis instead of params/all_chips) but the per-token
+# collective drops to the TP partial-sum all-reduces only.
+SERVE_RULES: Dict[str, Tuple[Candidate, ...]] = {
+    **DEFAULT_RULES,
+    "embed": (),  # weight d_model dim: replicated (no FSDP)
+}
+
+
+def merge_rules(
+    base: Dict[str, Tuple[Candidate, ...]], **overrides: Tuple[Candidate, ...]
+) -> Dict[str, Tuple[Candidate, ...]]:
+    out = dict(base)
+    out.update(overrides)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# resolution
+# ---------------------------------------------------------------------------
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def resolve_spec(
+    axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Optional[Dict[str, Tuple[Candidate, ...]]] = None,
+) -> P:
+    """Logical axis names + concrete shape -> PartitionSpec."""
+    rules = rules if rules is not None else DEFAULT_RULES
+    used: set = set()
+    entries = []
+    for name, size in zip(axes, shape):
+        if name is None:
+            entries.append(None)
+            continue
+        cands = rules.get(name)
+        if cands is None:
+            raise KeyError(f"no sharding rule for logical axis {name!r}")
+        chosen: Optional[Tuple[str, ...]] = None
+        for cand in cands:
+            cand_axes = (cand,) if isinstance(cand, str) else tuple(cand)
+            cand_axes = tuple(
+                a for a in cand_axes if a in mesh.axis_names and a not in used
+            )
+            if not cand_axes:
+                continue
+            total = math.prod(_axis_size(mesh, a) for a in cand_axes)
+            if total > 1 and size % total == 0:
+                chosen = cand_axes
+                break
+        if chosen is None:
+            entries.append(None)
+        else:
+            used.update(chosen)
+            entries.append(chosen if len(chosen) > 1 else chosen[0])
+    return P(*entries)
+
+
+def named_sharding(
+    axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules=None,
+) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(axes, shape, mesh, rules))
+
+
+def tree_shardings(spec_tree: PyTree, mesh: Mesh, rules=None) -> PyTree:
+    """ParamSpec tree -> NamedSharding tree (for jit in_shardings)."""
+    from repro.models.common import ParamSpec  # local import, avoids cycle
+
+    return jax.tree_util.tree_map(
+        lambda s: named_sharding(s.axes, s.shape, mesh, rules),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+# ---------------------------------------------------------------------------
+# global context + constrain()
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _ShardingCtx:
+    mesh: Optional[Mesh] = None
+    rules: Optional[Dict[str, Tuple[Candidate, ...]]] = None
+
+
+_TLS = threading.local()
+
+
+def _ctx() -> _ShardingCtx:
+    if not hasattr(_TLS, "ctx"):
+        _TLS.ctx = _ShardingCtx()
+    return _TLS.ctx
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: Optional[Dict[str, Tuple[Candidate, ...]]] = None):
+    """Activate (mesh, rules) for all :func:`constrain` calls in scope."""
+    ctx = _ctx()
+    prev = (ctx.mesh, ctx.rules)
+    ctx.mesh, ctx.rules = mesh, rules if rules is not None else DEFAULT_RULES
+    try:
+        yield
+    finally:
+        ctx.mesh, ctx.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ctx().mesh
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint via logical names; no-op without a mesh."""
+    ctx = _ctx()
+    if ctx.mesh is None:
+        return x
+    spec = resolve_spec(axes, x.shape, ctx.mesh, ctx.rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def batch_sharding(mesh: Mesh, ndim: int, rules=None) -> NamedSharding:
+    """Sharding for a (global_batch, ...) input: batch over (pod, data)."""
+    axes = ["act_batch"] + [None] * (ndim - 1)
+    # shape values don't matter for None dims; batch divisibility is the
+    # caller's responsibility (use resolve for exactness when known).
+    rules = rules if rules is not None else DEFAULT_RULES
+    cand = rules["act_batch"][0]
+    cand_axes = (cand,) if isinstance(cand, str) else tuple(
+        a for a in cand if a in mesh.axis_names
+    )
+    return NamedSharding(mesh, P(cand_axes if len(cand_axes) > 1 else cand_axes[0], *([None] * (ndim - 1))))

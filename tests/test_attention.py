@@ -1,0 +1,103 @@
+"""Attention: chunked-vs-dense equivalence, RoPE variants, GQA, ring cache."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+
+
+def _qkv(b, sq, skv, hq, hkv, d, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    return (
+        jax.random.normal(k1, (b, sq, hq, d)),
+        jax.random.normal(k2, (b, skv, hkv, d)),
+        jax.random.normal(k3, (b, skv, hkv, d)),
+    )
+
+
+@pytest.mark.parametrize("hkv", [1, 2, 4])
+@pytest.mark.parametrize("causal", [True, False])
+def test_chunked_matches_dense(hkv, causal):
+    q, k, v = _qkv(2, 512, 512, 4, hkv, 32)
+    ref = A.attend(q, k, v, causal=causal)
+    out = A.attend_chunked(q, k, v, causal=causal, q_chunk=128, kv_chunk=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_chunked_sliding_window():
+    q, k, v = _qkv(1, 1024, 1024, 2, 2, 16, seed=1)
+    ref = A.attend(q, k, v, causal=True, sliding_window=100)
+    out = A.attend_chunked(
+        q, k, v, causal=True, sliding_window=100, q_chunk=256, kv_chunk=256
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_softcap():
+    q, k, v = _qkv(1, 256, 256, 2, 2, 16, seed=2)
+    ref = A.attend(q, k, v, causal=True, logit_softcap=20.0)
+    out = A.attend_chunked(q, k, v, causal=True, logit_softcap=20.0, q_chunk=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("mode", ["standard", "2d", "mrope"])
+def test_rope_preserves_norm_and_relativity(mode):
+    b, s, h, d = 2, 16, 2, 32
+    key = jax.random.key(0)
+    q = jax.random.normal(key, (b, s, h, d))
+    k = q + 0.0
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    if mode == "mrope":
+        pos = jnp.broadcast_to(pos[None], (3, b, s))
+    q1, k1 = A.apply_rope(q, k, pos, mode=mode, theta=1e4)
+    # rotations preserve vector norms
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(q1), axis=-1),
+        np.linalg.norm(np.asarray(q), axis=-1),
+        rtol=1e-5,
+    )
+    # shifting all positions by a constant leaves q·k (same offset) invariant
+    q2, k2 = A.apply_rope(
+        q, k, pos + 7, mode=mode, theta=1e4
+    )
+    dot1 = np.einsum("bshd,bshd->bsh", np.asarray(q1), np.asarray(k1))
+    dot2 = np.einsum("bshd,bshd->bsh", np.asarray(q2), np.asarray(k2))
+    np.testing.assert_allclose(dot1, dot2, atol=1e-4)
+
+
+def test_decode_against_ring_cache_positions():
+    """attend() with explicit kv_positions handles out-of-order ring slots."""
+    b, h, d, w = 1, 2, 16, 8
+    key = jax.random.key(3)
+    ks = jax.random.normal(key, (b, 16, h, d))
+    vs = jax.random.normal(jax.random.key(4), (b, 16, h, d))
+    q = jax.random.normal(jax.random.key(5), (b, 1, h, d))
+    # tokens 8..15 in a ring of 8: slot s holds position 8 + ((s - 0) % 8)…
+    ring_k = jnp.zeros((b, w, h, d)).at[:, jnp.arange(8, 16) % w].set(ks[:, 8:16])
+    ring_v = jnp.zeros((b, w, h, d)).at[:, jnp.arange(8, 16) % w].set(vs[:, 8:16])
+    kv_pos = jnp.zeros((w,), jnp.int32).at[jnp.arange(8, 16) % w].set(
+        jnp.arange(8, 16)
+    )
+    out_ring = A.attend(
+        q, ring_k, ring_v, causal=True, q_offset=jnp.asarray(16),
+        kv_positions=kv_pos, sliding_window=w + 1,
+    )
+    out_ref = A.attend(
+        q, ks[:, 8:16], vs[:, 8:16], causal=True, q_offset=jnp.asarray(16),
+        kv_positions=jnp.arange(8, 16), sliding_window=w + 1,
+    )
+    np.testing.assert_allclose(np.asarray(out_ring), np.asarray(out_ref), atol=1e-5)
+
+
+def test_chunked_ragged_lengths():
+    """Non-divisible lengths (whisper's 1500 frames) pad internally."""
+    q, k, v = _qkv(1, 1500, 1500, 2, 2, 32, seed=9)
+    ref = A.attend(q, k, v, causal=False)
+    out = A.attend_chunked(q, k, v, causal=False, q_chunk=512, kv_chunk=512)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+    q, k, v = _qkv(1, 1100, 700, 2, 1, 16, seed=10)
+    ref = A.attend(q, k, v, causal=False)
+    out = A.attend_chunked(q, k, v, causal=False, q_chunk=512, kv_chunk=512)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)

@@ -1,0 +1,45 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, load_pytree, save_pytree
+
+
+def _tree(seed=0):
+    k = jax.random.key(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (4, 8)), "b": jnp.zeros(8)},
+        "layers": [jnp.ones((2, 2)), jnp.arange(5)],
+    }
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree()
+    save_pytree(tree, str(tmp_path), 7)
+    loaded = load_pytree(tree, str(tmp_path), 7)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(np.asarray(a), np.asarray(b)),
+        tree, loaded,
+    )
+
+
+def test_latest_step(tmp_path):
+    tree = _tree()
+    for s in (1, 5, 3):
+        save_pytree(tree, str(tmp_path), s)
+    assert latest_step(str(tmp_path)) == 5
+    load_pytree(tree, str(tmp_path))  # loads latest without error
+
+
+def test_shape_mismatch_raises(tmp_path):
+    save_pytree(_tree(), str(tmp_path), 0)
+    bad = _tree()
+    bad["params"]["w"] = jnp.zeros((3, 3))
+    with pytest.raises(ValueError):
+        load_pytree(bad, str(tmp_path), 0)
+
+
+def test_missing_checkpoint_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        load_pytree(_tree(), str(tmp_path))

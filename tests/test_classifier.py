@@ -1,0 +1,61 @@
+"""GNB head: closed form (Eq. 11/14) vs explicit Gaussian posterior."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.classifier import (
+    gaussian_posterior_reference,
+    gnb_head,
+    gnb_log_posterior,
+)
+from repro.core.statistics import centralized_statistics
+
+
+def _stats(n=400, d=12, c=5, seed=0):
+    rng = np.random.default_rng(seed)
+    mu = 3.0 * rng.standard_normal((c, d))
+    y = rng.integers(0, c, n)
+    x = mu[y] + rng.standard_normal((n, d))
+    return centralized_statistics(jnp.asarray(x, jnp.float32), jnp.asarray(y), c), x, y
+
+
+def test_closed_form_matches_gaussian_posterior():
+    stats, x, _ = _stats()
+    ridge = 1e-4 * float(jnp.mean(jnp.diag(stats.sigma)))
+    ours = gnb_log_posterior(stats, jnp.asarray(x, jnp.float32), ridge=ridge)
+    ref = gaussian_posterior_reference(stats, jnp.asarray(x, jnp.float32), ridge)
+    np.testing.assert_allclose(np.asarray(ours), np.asarray(ref), atol=2e-3)
+
+
+def test_head_accuracy_beats_chance_and_matches_bayes():
+    stats, x, y = _stats(n=2000, d=8, c=4, seed=1)
+    head = gnb_head(stats)
+    acc = float(head.accuracy(jnp.asarray(x, jnp.float32), jnp.asarray(y)))
+    assert acc > 0.8  # well-separated Gaussians => near-Bayes accuracy
+
+
+def test_prior_affects_bias_only():
+    stats, _, _ = _stats(seed=2)
+    head = gnb_head(stats)
+    # doubling one class's prior should only move its bias, not weights
+    import dataclasses
+
+    skewed = dataclasses.replace(
+        stats, pi=stats.pi.at[0].set(stats.pi[0] * 2.0)
+    )
+    head2 = gnb_head(skewed)
+    np.testing.assert_allclose(head.W, head2.W, rtol=1e-6)
+    assert not np.allclose(head.b[0], head2.b[0])
+    np.testing.assert_allclose(head.b[1:], head2.b[1:], rtol=1e-6)
+
+
+def test_w_solves_sigma_inverse_mu():
+    stats, _, _ = _stats(seed=3)
+    ridge = 1e-4 * float(jnp.mean(jnp.diag(stats.sigma)))
+    head = gnb_head(stats, ridge=ridge)
+    d = stats.feature_dim
+    sigma = 0.5 * (stats.sigma + stats.sigma.T) + ridge * jnp.eye(d)
+    np.testing.assert_allclose(
+        np.asarray(sigma @ head.W.T), np.asarray(stats.mu.T), atol=1e-3
+    )

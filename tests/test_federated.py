@@ -1,0 +1,68 @@
+"""Distributed FedCGS aggregation: shard_map psum == centralized oracle.
+
+Multi-device coverage runs in a SUBPROCESS with
+--xla_force_host_platform_device_count=8 so the main test process keeps
+seeing 1 CPU device (the dry-run flag must never leak globally).
+"""
+
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.federated import distributed_client_stats, masked_distributed_stats
+from repro.core.statistics import client_statistics
+from repro.launch.mesh import make_host_mesh
+
+
+def test_single_device_mesh_matches_oracle():
+    mesh = make_host_mesh(1)
+    k1, k2 = jax.random.split(jax.random.key(0))
+    f = jax.random.normal(k1, (64, 16))
+    y = jax.random.randint(k2, (64,), 0, 5)
+    out = distributed_client_stats(f, y, 5, mesh)
+    ref = client_statistics(f, y, 5)
+    np.testing.assert_allclose(np.asarray(out.A), np.asarray(ref.A), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(out.B), np.asarray(ref.B), atol=1e-4)
+
+
+_SUBPROCESS_BODY = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core.federated import distributed_client_stats, masked_distributed_stats
+    from repro.core.statistics import client_statistics
+    from repro.launch.mesh import make_host_mesh
+
+    assert len(jax.devices()) == 8
+    mesh = make_host_mesh(2)  # (data=4, model=2)
+    k1, k2 = jax.random.split(jax.random.key(0))
+    f = jax.random.normal(k1, (128, 24))
+    y = jax.random.randint(k2, (128,), 0, 6)
+    ref = client_statistics(f, y, 6)
+
+    out = distributed_client_stats(f, y, 6, mesh)
+    np.testing.assert_allclose(np.asarray(out.A), np.asarray(ref.A), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(out.B), np.asarray(ref.B), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(out.N), np.asarray(ref.N), atol=1e-5)
+
+    masked = masked_distributed_stats(f, y, 6, mesh, mask_scale=100.0)
+    np.testing.assert_allclose(np.asarray(masked.A), np.asarray(ref.A), atol=2e-2)
+    np.testing.assert_allclose(np.asarray(masked.B), np.asarray(ref.B), atol=2e-2)
+    print("MULTIDEVICE_OK")
+    """
+)
+
+
+def test_multidevice_psum_aggregation_subprocess():
+    proc = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_BODY],
+        capture_output=True, text=True, timeout=300,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd="/root/repo",
+    )
+    assert "MULTIDEVICE_OK" in proc.stdout, proc.stderr[-2000:]

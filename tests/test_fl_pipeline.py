@@ -1,0 +1,93 @@
+"""End-to-end FL behaviour: the paper's qualitative claims on synthetic data.
+
+Kept cheap (few epochs) — benchmarks/ run the full-strength versions.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.expansion import FeatureExpansion
+from repro.data import (
+    SyntheticSpec,
+    dirichlet_partition,
+    make_classification_data,
+)
+from repro.fl.backbone import make_backbone
+from repro.fl.fedcgs import run_fedcgs, run_fedcgs_personalized
+
+
+@pytest.fixture(scope="module")
+def setup():
+    spec = SyntheticSpec(
+        num_classes=10, input_dim=32, samples_per_class=200, class_sep=2.0, seed=1
+    )
+    x, y = make_classification_data(spec)
+    xt, yt = make_classification_data(spec, seed=999)
+    bb = make_backbone("resnet18-like", spec.input_dim)
+    return np.asarray(x), np.asarray(y), np.asarray(xt), np.asarray(yt), bb
+
+
+def _clients(x, y, alpha, m=10, seed=0):
+    parts = dirichlet_partition(y, m, alpha, seed=seed)
+    return [(x[p], y[p]) for p in parts]
+
+
+def test_alpha_invariance(setup):
+    """The paper's central claim: accuracy is EXACTLY constant in α."""
+    x, y, xt, yt, bb = setup
+    accs = []
+    for alpha in (0.05, 0.1, 0.5):
+        r = run_fedcgs(bb, _clients(x, y, alpha), 10, test_data=(xt, yt))
+        accs.append(r.accuracy)
+    assert max(accs) - min(accs) < 1e-6, accs
+
+
+def test_client_count_invariance(setup):
+    x, y, xt, yt, bb = setup
+    a10 = run_fedcgs(bb, _clients(x, y, 0.1, m=10), 10, test_data=(xt, yt)).accuracy
+    a50 = run_fedcgs(bb, _clients(x, y, 0.1, m=50), 10, test_data=(xt, yt)).accuracy
+    assert abs(a10 - a50) < 5e-3
+
+
+def test_secure_agg_does_not_change_result(setup):
+    x, y, xt, yt, bb = setup
+    clients = _clients(x, y, 0.1)
+    a_sec = run_fedcgs(bb, clients, 10, test_data=(xt, yt), use_secure_agg=True)
+    a_raw = run_fedcgs(bb, clients, 10, test_data=(xt, yt), use_secure_agg=False)
+    assert abs(a_sec.accuracy - a_raw.accuracy) < 2e-2
+
+
+def test_beats_chance_substantially(setup):
+    x, y, xt, yt, bb = setup
+    r = run_fedcgs(bb, _clients(x, y, 0.05), 10, test_data=(xt, yt))
+    assert r.accuracy > 0.5
+
+
+def test_feature_expansion_helps_or_holds(setup):
+    """Paper Fig. 3: random-projection expansion should not hurt."""
+    x, y, xt, yt, bb = setup
+    clients = _clients(x, y, 0.1)
+    base = run_fedcgs(bb, clients, 10, test_data=(xt, yt)).accuracy
+    exp = FeatureExpansion(in_dim=bb.feature_dim, out_dim=256, seed=0)
+    expanded = run_fedcgs(bb, clients, 10, test_data=(xt, yt), expansion=exp).accuracy
+    assert expanded > base - 0.05
+
+
+def test_upload_size_matches_formula(setup):
+    x, y, xt, yt, bb = setup
+    r = run_fedcgs(bb, _clients(x, y, 0.5), 10, test_data=None)
+    d = bb.feature_dim
+    assert r.uploaded_floats_per_client == (10 + d) * d + 10
+
+
+def test_personalized_runs_and_learns(setup):
+    x, y, xt, yt, bb = setup
+    m = 4
+    parts = dirichlet_partition(y, m, 0.5, seed=5)
+    train_c = [(x[p], y[p]) for p in parts]
+    test_c = [(xt, yt)] * m  # shared test set; dominant-class split is in benches
+    accs, gstats = run_fedcgs_personalized(
+        bb, train_c, test_c, 10, epochs=40, lr=0.05, proto_lambda=0.5
+    )
+    assert np.mean(accs) > 0.45  # way beyond 0.1 chance
+    assert gstats.mu.shape == (10, bb.feature_dim)

@@ -1,0 +1,121 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import client_stats, expand_features, gnb_logits
+from repro.kernels import ref
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "n,d,c",
+    [(64, 16, 4), (128, 128, 128), (513, 100, 10), (1000, 257, 37), (256, 512, 3)],
+)
+def test_client_stats_sweep(n, d, c, dtype):
+    k1, k2 = jax.random.split(jax.random.key(n * d + c))
+    f = jax.random.normal(k1, (n, d), dtype)
+    y = jax.random.randint(k2, (n,), 0, c)
+    A, B, N = client_stats(f, y, c)
+    A0, B0, N0 = ref.client_stats_ref(f, y, c)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(A), np.asarray(A0), rtol=tol, atol=tol * 10)
+    np.testing.assert_allclose(np.asarray(B), np.asarray(B0), rtol=tol, atol=tol * 10)
+    np.testing.assert_allclose(np.asarray(N), np.asarray(N0))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 400),
+    d=st.integers(1, 300),
+    c=st.integers(1, 50),
+    seed=st.integers(0, 1000),
+)
+def test_client_stats_property(n, d, c, seed):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    f = jax.random.normal(k1, (n, d))
+    y = jax.random.randint(k2, (n,), 0, c)
+    A, B, N = client_stats(f, y, c)
+    A0, B0, N0 = ref.client_stats_ref(f, y, c)
+    np.testing.assert_allclose(np.asarray(A), np.asarray(A0), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(B), np.asarray(B0), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(N), np.asarray(N0))
+    # invariants: B symmetric PSD-ish, N sums to n
+    np.testing.assert_allclose(np.asarray(B), np.asarray(B).T, atol=1e-3)
+    assert float(jnp.sum(N)) == n
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,d,c", [(100, 64, 10), (300, 130, 101), (64, 512, 7)])
+def test_gnb_logits_sweep(n, d, c, dtype):
+    keys = jax.random.split(jax.random.key(7), 3)
+    f = jax.random.normal(keys[0], (n, d), dtype)
+    w = jax.random.normal(keys[1], (c, d), dtype)
+    b = jax.random.normal(keys[2], (c,), dtype)
+    out = gnb_logits(f, w, b)
+    out0 = ref.gnb_logits_ref(f, w, b)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out0), rtol=tol, atol=tol * 20)
+
+
+@pytest.mark.parametrize("act", ["relu", "gelu", "tanh", "identity"])
+@pytest.mark.parametrize("n,d,o", [(100, 60, 96), (257, 128, 130)])
+def test_expansion_sweep(n, d, o, act):
+    keys = jax.random.split(jax.random.key(11), 2)
+    f = jax.random.normal(keys[0], (n, d))
+    r = jax.random.normal(keys[1], (d, o))
+    out = expand_features(f, r, activation=act)
+    out0 = ref.expand_features_ref(f, r, act)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out0), rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_stats_feed_the_full_pipeline():
+    """Kernel stats → derive_global → GNB head == jnp-path head."""
+    from repro.core.classifier import gnb_head
+    from repro.core.statistics import FeatureStats, client_statistics, derive_global
+
+    k1, k2 = jax.random.split(jax.random.key(3))
+    f = jax.random.normal(k1, (500, 96))
+    y = jax.random.randint(k2, (500,), 0, 10)
+    A, B, N = client_stats(f, y, 10)
+    g_kernel = derive_global(FeatureStats(A=A, B=B, N=N))
+    g_jnp = derive_global(client_statistics(f, y, 10))
+    h1, h2 = gnb_head(g_kernel), gnb_head(g_jnp)
+    np.testing.assert_allclose(np.asarray(h1.W), np.asarray(h2.W), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(h1.b), np.asarray(h2.b), atol=1e-3)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize(
+    "b,sq,skv,hq,hkv,d",
+    [(2, 512, 512, 4, 2, 64), (1, 300, 300, 2, 2, 32), (2, 256, 700, 2, 1, 64)],
+)
+def test_flash_attention_sweep(b, sq, skv, hq, hkv, d, causal):
+    from repro.kernels import flash_attention
+    from repro.models import attention as A
+
+    keys = jax.random.split(jax.random.key(b * sq + skv), 3)
+    q = jax.random.normal(keys[0], (b, sq, hq, d))
+    k = jax.random.normal(keys[1], (b, skv, hkv, d))
+    v = jax.random.normal(keys[2], (b, skv, hkv, d))
+    ref = A.attend(q, k, v, causal=causal)
+    out = flash_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+def test_flash_attention_bf16():
+    from repro.kernels import flash_attention
+    from repro.models import attention as A
+
+    keys = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(keys[0], (1, 256, 2, 64), jnp.bfloat16)
+    k = jax.random.normal(keys[1], (1, 256, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(keys[2], (1, 256, 2, 64), jnp.bfloat16)
+    ref = A.attend(q, k, v, causal=True)
+    out = flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=3e-2
+    )

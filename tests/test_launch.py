@@ -1,0 +1,90 @@
+"""Launch-layer units: input specs, support matrix, roofline math, serve."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import PUBLIC_IDS, get_config
+from repro.launch import io_specs
+from repro.launch.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS, Roofline
+from repro.models.config import INPUT_SHAPES
+
+
+def test_support_matrix_is_39_of_40():
+    supported = sum(
+        io_specs.supported(get_config(a), s)
+        for a in PUBLIC_IDS
+        for s in INPUT_SHAPES.values()
+    )
+    assert supported == 39  # whisper-tiny x long_500k is the one skip
+
+
+@pytest.mark.parametrize("arch", PUBLIC_IDS)
+def test_train_inputs_cover_model_needs(arch):
+    cfg = get_config(arch)
+    batch = io_specs.train_inputs(cfg, INPUT_SHAPES["train_4k"])
+    assert batch["tokens"].shape == (256, 4096)
+    if cfg.rope == "mrope":
+        assert batch["positions"].shape == (3, 256, 4096)
+    if cfg.vision_tokens:
+        assert batch["patches"].shape[1] == cfg.vision_tokens
+    if cfg.is_encdec:
+        assert batch["frames"].shape[1] == cfg.encoder_seq_len
+
+
+@pytest.mark.parametrize("arch", ["llama4-maverick-400b-a17b", "mamba2-2.7b", "whisper-tiny"])
+def test_decode_inputs_have_cache_tree(arch):
+    cfg = get_config(arch)
+    inputs = io_specs.decode_inputs(cfg, INPUT_SHAPES["decode_32k"])
+    assert inputs["token"].shape == (128,)
+    cache = inputs["cache"]
+    assert cache["index"].shape == ()
+    assert cache["positions"].shape[0] == 32768
+    leaves = jax.tree_util.tree_leaves(cache)
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+
+
+def test_long500k_gets_sliding_window_for_dense():
+    cfg = get_config("starcoder2-15b")
+    out = io_specs.config_for_shape(cfg, INPUT_SHAPES["long_500k"])
+    assert out.sliding_window == io_specs.LONG_CONTEXT_WINDOW
+    ssm = get_config("mamba2-2.7b")
+    assert io_specs.config_for_shape(ssm, INPUT_SHAPES["long_500k"]).sliding_window is None
+
+
+def test_roofline_terms_and_dominance():
+    r = Roofline(
+        hlo_flops=PEAK_FLOPS,  # exactly 1 s of compute
+        hlo_bytes=HBM_BW * 2.0,  # 2 s of memory
+        collective_bytes_per_chip=ICI_BW * 0.5,  # 0.5 s
+        chips=256,
+        model_flops=PEAK_FLOPS * 256 * 0.5,
+    )
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(2.0)
+    assert r.collective_s == pytest.approx(0.5)
+    assert r.dominant == "memory"
+    assert r.useful_flops_ratio == pytest.approx(0.5)
+    d = r.as_dict()
+    assert d["dominant"] == "memory"
+
+
+def test_serve_driver_generates():
+    from repro.launch.serve import serve
+
+    gen, stats = serve("gemma-2b", batch=2, prompt_len=16, gen_tokens=4)
+    assert gen.shape == (2, 4)
+    assert (gen >= 0).all()
+    assert stats["tokens_per_s"] > 0
+
+
+def test_batch_axes_replicate_batch1():
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    # batch=1 isn't divisible by pod*data -> replicated
+    assert io_specs._batch_axes(FakeMesh(), 1) is None
+    # batch=256 is -> joint (pod, data)
+    assert io_specs._batch_axes(FakeMesh(), 256) == ("pod", "data")

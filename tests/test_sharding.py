@@ -1,0 +1,78 @@
+"""Logical-axis rule engine: divisibility fallbacks, joint axes, constrain."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import make_host_mesh
+from repro.sharding import DEFAULT_RULES, merge_rules, resolve_spec, use_mesh, constrain
+
+
+class FakeMesh:
+    """Duck-typed mesh: just axis_names + shape mapping."""
+
+    def __init__(self, **axes):
+        self.axis_names = tuple(axes)
+        self.shape = axes
+
+
+MESH = FakeMesh(data=16, model=16)
+POD_MESH = FakeMesh(pod=2, data=16, model=16)
+
+
+def test_basic_resolution():
+    spec = resolve_spec(("embed", "mlp"), (4096, 16384), MESH)
+    assert spec == P("data", "model")
+
+
+def test_divisibility_fallback_to_second_candidate():
+    # 60 experts: model(16) fails, data(16) fails -> replicated
+    spec = resolve_spec(("expert", "embed", "expert_mlp"), (60, 2048, 1408), MESH)
+    assert spec == P(None, "data", "model")
+
+
+def test_axis_not_reused_within_tensor():
+    # both dims want model; second falls back (to data here)
+    spec = resolve_spec(("mlp", "expert_mlp"), (1024, 1024), MESH)
+    assert spec[0] == "model"
+    assert spec[1] != "model"
+
+
+def test_joint_axes_for_batch():
+    spec = resolve_spec(("act_batch", None, None), (256, 4096, 1024), POD_MESH)
+    assert spec == P(("pod", "data"), None, None)
+    # batch=1 long-context: not divisible -> replicated
+    spec = resolve_spec(("act_batch", None, None), (1, 4096, 1024), POD_MESH)
+    assert spec == P(None, None, None)
+
+
+def test_missing_rule_raises():
+    with pytest.raises(KeyError):
+        resolve_spec(("nonexistent",), (64,), MESH)
+
+
+def test_merge_rules_overrides():
+    rules = merge_rules(DEFAULT_RULES, embed=("model",))
+    spec = resolve_spec(("embed",), (4096,), MESH, rules)
+    assert spec == P("model")
+
+
+def test_vocab_fallback_replicated():
+    # whisper vocab 51865 doesn't divide 16 -> replicated
+    spec = resolve_spec(("vocab", "embed"), (51865, 384), MESH)
+    assert spec == P(None, "data")
+
+
+def test_constrain_is_noop_without_mesh():
+    x = jnp.zeros((8, 4))
+    y = constrain(x, "act_batch", None)
+    assert y.shape == x.shape
+
+
+def test_constrain_under_real_mesh():
+    mesh = make_host_mesh(1)
+    x = jnp.zeros((8, 4))
+    with use_mesh(mesh):
+        y = jax.jit(lambda t: constrain(t, "act_batch", None))(x)
+    assert y.shape == x.shape

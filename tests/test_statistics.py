@@ -1,0 +1,107 @@
+"""FedCGS statistics: partition-invariance (the paper's central claim),
+exactness vs. centralized (Table 4), and edge cases."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.statistics import (
+    FeatureStats,
+    aggregate,
+    centralized_statistics,
+    client_statistics,
+    derive_global,
+    statistics_deviation,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _random_data(n, d, c, seed):
+    rng = np.random.default_rng(seed)
+    return (
+        rng.standard_normal((n, d)).astype(np.float32),
+        rng.integers(0, c, n).astype(np.int32),
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(20, 200),
+    d=st.integers(2, 32),
+    c=st.integers(2, 8),
+    m=st.integers(1, 7),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_partition_invariance(n, d, c, m, seed):
+    """Σ_i ClientStats(D_i) is independent of how D is partitioned."""
+    x, y = _random_data(n, d, c, seed)
+    pooled = client_statistics(jnp.asarray(x), jnp.asarray(y), c)
+
+    rng = np.random.default_rng(seed + 1)
+    cuts = np.sort(rng.choice(np.arange(1, n), size=min(m - 1, n - 1), replace=False))
+    parts = np.split(np.arange(n), cuts)
+    shards = [
+        client_statistics(jnp.asarray(x[p]), jnp.asarray(y[p]), c)
+        for p in parts
+        if len(p)
+    ]
+    agg = aggregate(shards)
+
+    np.testing.assert_allclose(agg.A, pooled.A, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(agg.B, pooled.B, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(agg.N, pooled.N)
+
+
+@pytest.mark.parametrize("num_clients", [1, 5, 25])
+@pytest.mark.parametrize("alpha_like_skew", [False, True])
+def test_exactness_vs_centralized(num_clients, alpha_like_skew):
+    """Paper Table 4: aggregated (μ, Σ) ≈ centralized ground truth
+    (deviation 1e-7…1e-4 float32 regardless of partition skew)."""
+    n, d, c = 600, 24, 10
+    x, y = _random_data(n, d, c, seed=3)
+    if alpha_like_skew:
+        order = np.argsort(y)  # clients get near-single-class shards
+        x, y = x[order], y[order]
+    parts = np.array_split(np.arange(n), num_clients)
+    agg = aggregate(
+        client_statistics(jnp.asarray(x[p]), jnp.asarray(y[p]), c) for p in parts
+    )
+    ours = derive_global(agg)
+    ref = centralized_statistics(jnp.asarray(x), jnp.asarray(y), c)
+    dmu, dsigma = statistics_deviation(ours, ref)
+    assert float(dmu) < 1e-3, f"Δμ={float(dmu)}"
+    assert float(dsigma) < 1e-2, f"ΔΣ={float(dsigma)}"
+    np.testing.assert_allclose(ours.pi, ref.pi, atol=1e-6)
+
+
+def test_empty_class_handling():
+    x, y = _random_data(50, 8, 4, seed=0)
+    y = np.where(y == 3, 0, y)  # class 3 never observed
+    stats = client_statistics(jnp.asarray(x), jnp.asarray(y), 4)
+    g = derive_global(stats)
+    assert float(g.pi[3]) == 0.0
+    np.testing.assert_allclose(g.mu[3], 0.0)
+    assert np.isfinite(np.asarray(g.sigma)).all()
+
+
+def test_upload_accounting():
+    """(C+d)·d + C — the paper's §Communication Overhead formula."""
+    stats = FeatureStats.zeros(10, 512)
+    assert stats.num_elements() == (10 + 512) * 512 + 10
+
+
+def test_streaming_accumulation_matches_single_pass():
+    from repro.core.statistics import client_statistics_batched
+
+    x, y = _random_data(300, 16, 5, seed=9)
+    whole = client_statistics(jnp.asarray(x), jnp.asarray(y), 5)
+    batched = client_statistics_batched(
+        [jnp.asarray(x[i : i + 64]) for i in range(0, 300, 64)],
+        [jnp.asarray(y[i : i + 64]) for i in range(0, 300, 64)],
+        5,
+    )
+    np.testing.assert_allclose(batched.A, whole.A, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(batched.B, whole.B, rtol=1e-5, atol=1e-4)
