@@ -1,22 +1,37 @@
-"""Kernel microbenchmarks: Pallas (interpret) correctness-at-scale sweep
-and jnp-oracle wall time, plus the kernels' arithmetic intensities for
-the TPU roofline (compute-bound vs memory-bound classification)."""
+"""Kernel microbenchmarks: fused single-pass statistics engine vs the
+seed's two-kernel path — wall-clock AND modelled HBM traffic — plus the
+jnp-oracle time and roofline classification.
+
+The traffic model counts tile loads the pipeline actually issues
+(HBM→VMEM), not optimistic reuse: the two-kernel path re-streams the
+feature matrix for the Gram sweep, the class-sum sweep, and (in the
+seed) materialized an (n, C) one-hot on the host for N.  The fused
+engine visits only the upper Gram triangle and folds A, B, N into one
+k-sweep.
+
+Besides the CSV rows, ``run`` writes the fused-vs-unfused comparison to
+``json_path`` (default ``kernel_bench.json`` in the CWD — the acceptance
+artifact; pass ``json_path=None`` to suppress).
+
+Standalone:  PYTHONPATH=src python -m benchmarks.kernel_bench
+"""
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import Reporter
-from repro.kernels import ref
+from repro.kernels import client_stats, ref
+from repro.kernels.stats_kernel import BLOCK_D, BLOCK_N
 from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS
 
 
-def _bench(fn, *args, iters=5):
-    fn(*args)  # compile
+def _bench(fn, *args, iters=3):
+    jax.block_until_ready(fn(*args))  # compile + warm
     t0 = time.time()
     for _ in range(iters):
         out = fn(*args)
@@ -24,8 +39,73 @@ def _bench(fn, *args, iters=5):
     return (time.time() - t0) / iters
 
 
-def run(reporter: Reporter, *, quick: bool = False, seed: int = 0) -> None:
-    shapes = [(4096, 512, 100)] if quick else [(4096, 512, 100), (16384, 1024, 1000)]
+def _ceil_div(a, b):
+    return -(-a // b)
+
+
+def traffic_model_bytes(n, d, c, *, fused, block_d=BLOCK_D, block_n=BLOCK_N):
+    """HBM→VMEM bytes the grid actually streams (f32 features)."""
+    t = _ceil_div(d, block_d)          # feature tiles per dim
+    ct = _ceil_div(max(c, block_d), block_d)  # class tiles
+    n_chunks = _ceil_div(n, block_n)
+    feat_tile = block_n * block_d * 4
+    label_tile = block_n * 4
+    if fused:
+        steps = (t * (t + 1)) // 2 + ct * t    # upper gram + class tiles
+        in_bytes = steps * n_chunks * (2 * feat_tile + label_tile)
+        out_bytes = (d + ct * block_d) * d * 4 + ct * block_d * 4
+        return in_bytes + out_bytes
+    # seed path: dense gram grid + class-sum grid + host one-hot for N
+    gram_in = t * t * n_chunks * 2 * feat_tile
+    class_in = ct * t * n_chunks * (feat_tile + label_tile)
+    onehot_host = 2 * n * c * 4 + n * 4  # write + reduce-read of (n, C)
+    out_bytes = d * d * 4 + ct * block_d * d * 4 + c * 4
+    return gram_in + class_in + onehot_host + out_bytes
+
+
+def compare_fused(reporter: Reporter, n: int, d: int, c: int, *, seed: int = 0,
+                  iters: int = 3) -> dict:
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    f = jax.random.normal(k1, (n, d))
+    y = jax.random.randint(k2, (n,), 0, c)
+    tag = f"n{n}|d{d}|C{c}"
+
+    t_unfused = _bench(
+        lambda: client_stats(f, y, c, fused=False), iters=iters
+    )
+    t_fused = _bench(lambda: client_stats(f, y, c, fused=True), iters=iters)
+    bytes_unfused = traffic_model_bytes(n, d, c, fused=False)
+    bytes_fused = traffic_model_bytes(n, d, c, fused=True)
+
+    reporter.add("kernels", tag, "stats_unfused_ms", t_unfused * 1e3)
+    reporter.add("kernels", tag, "stats_fused_ms", t_fused * 1e3)
+    reporter.add("kernels", tag, "stats_speedup", t_unfused / t_fused)
+    reporter.add("kernels", tag, "hbm_bytes_unfused", bytes_unfused)
+    reporter.add("kernels", tag, "hbm_bytes_fused", bytes_fused)
+    reporter.add(
+        "kernels", tag, "hbm_traffic_ratio", bytes_unfused / bytes_fused
+    )
+    return {
+        "shape": {"n": n, "d": d, "C": c},
+        "backend": jax.default_backend(),
+        "unfused_ms": t_unfused * 1e3,
+        "fused_ms": t_fused * 1e3,
+        "speedup": t_unfused / t_fused,
+        "hbm_bytes_unfused": bytes_unfused,
+        "hbm_bytes_fused": bytes_fused,
+        "hbm_traffic_ratio": bytes_unfused / bytes_fused,
+    }
+
+
+def run(
+    reporter: Reporter,
+    *,
+    quick: bool = False,
+    seed: int = 0,
+    json_path: str | None = "kernel_bench.json",
+) -> None:
+    shapes = [(4096, 512, 100)] if quick else [(4096, 512, 100), (8192, 768, 128)]
+    results = []
     for n, d, c in shapes:
         k1, k2 = jax.random.split(jax.random.key(seed))
         f = jax.random.normal(k1, (n, d))
@@ -37,7 +117,7 @@ def run(reporter: Reporter, *, quick: bool = False, seed: int = 0) -> None:
         us = _bench(jitted, f, y) * 1e6
         reporter.add("kernels", tag, "stats_oracle_us", us)
 
-        # arithmetic intensity of the Gram kernel: 2nd²  /  (nd + d²) * 4B
+        # arithmetic intensity: 2nd² + 2nCd FLOPs over one feature stream
         flops = 2.0 * n * d * d + 2.0 * n * c * d
         bytes_ = 4.0 * (n * d + d * d + c * d)
         ai = flops / bytes_
@@ -47,13 +127,24 @@ def run(reporter: Reporter, *, quick: bool = False, seed: int = 0) -> None:
         ridge = PEAK_FLOPS / HBM_BW
         reporter.add("kernels", tag, "stats_compute_bound", float(ai > ridge))
 
-        # correctness at bench scale (interpret kernel vs oracle)
-        from repro.kernels import client_stats
+        # fused vs the seed two-kernel formulation: measured + modelled
+        results.append(compare_fused(reporter, n, d, c, seed=seed))
 
+        # correctness at bench scale (kernel vs oracle)
         A, B, N = client_stats(f, y, c)
         A0, B0, N0 = ref.client_stats_ref(f, y, c)
         err = max(
             float(jnp.max(jnp.abs(A - A0))),
             float(jnp.max(jnp.abs(B - B0))),
+            float(jnp.max(jnp.abs(N - N0))),
         )
         reporter.add("kernels", tag, "stats_kernel_max_err", err)
+
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump({"fused_vs_unfused": results}, fh, indent=2)
+        print(f"# wrote {json_path} ({len(results)} shapes)")
+
+
+if __name__ == "__main__":
+    run(Reporter(), quick=False)

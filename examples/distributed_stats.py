@@ -1,8 +1,9 @@
 """FedCGS aggregation as a mesh collective (DESIGN.md §3).
 
 Spawns itself with 8 simulated devices, assigns client cohorts to mesh
-shards, computes the statistics per shard, and realizes the "server"
-as a single psum — with and without SecureAgg masks folded into the
+shards, computes the statistics per shard — with the FUSED single-pass
+Pallas engine — and realizes the "server" as a single psum over the
+FeatureStats tree, with and without SecureAgg masks folded into the
 reduction. Shows the exactness claim surviving the distributed path.
 
     PYTHONPATH=src python examples/distributed_stats.py
@@ -15,12 +16,12 @@ import sys
 BODY = """
 import os
 import jax, jax.numpy as jnp, numpy as np
-from repro.core.federated import distributed_client_stats, masked_distributed_stats
 from repro.core.statistics import centralized_statistics, derive_global, statistics_deviation
 from repro.core.classifier import gnb_head
 from repro.data import SyntheticSpec, make_classification_data
 from repro.fl.backbone import make_backbone
 from repro.launch.mesh import make_host_mesh
+from repro.launch.stats_engine import sharded_client_stats, sharded_cohort_stats
 
 print(f"devices: {len(jax.devices())}")
 mesh = make_host_mesh(2)  # ("data"=4, "model"=2)
@@ -30,16 +31,26 @@ spec = SyntheticSpec(num_classes=10, input_dim=64, samples_per_class=200)
 x, y = make_classification_data(spec)
 bb = make_backbone("resnet18-like", spec.input_dim)
 feats = bb.features(jnp.asarray(x))
-
-# ---- the server aggregation IS a psum over ("data",) ----
-stats = distributed_client_stats(feats, jnp.asarray(y), 10, mesh)
-g = derive_global(stats)
 ref = centralized_statistics(feats, jnp.asarray(y), 10)
-dmu, dsig = statistics_deviation(g, ref)
-print(f"psum aggregation:    delta_mu={float(dmu):.2e} delta_sigma={float(dsig):.2e}")
 
-# ---- SecureAgg masks cancel INSIDE the same psum ----
-masked = masked_distributed_stats(feats, jnp.asarray(y), 10, mesh, mask_scale=1e3)
+# ---- the server aggregation IS a psum over ("data",) -------------------
+# each shard sweeps its rows ONCE with the fused Pallas kernel (A, B, N
+# in a single k-sweep), then one collective sums the tree.
+stats = sharded_client_stats(feats, jnp.asarray(y), 10, mesh=mesh)
+g = derive_global(stats)
+dmu, dsig = statistics_deviation(g, ref)
+print(f"fused + psum:        delta_mu={float(dmu):.2e} delta_sigma={float(dsig):.2e}")
+
+# ---- many simulated clients, one collective ----------------------------
+parts = np.array_split(np.arange(feats.shape[0]), 16)
+cohort = [(np.asarray(feats)[p], np.asarray(y)[p]) for p in parts]
+stats_c = sharded_cohort_stats(cohort, 10, mesh=mesh)
+gc = derive_global(stats_c)
+dmu, dsig = statistics_deviation(gc, ref)
+print(f"16-client cohort:    delta_mu={float(dmu):.2e} delta_sigma={float(dsig):.2e}")
+
+# ---- SecureAgg masks cancel INSIDE the same psum -----------------------
+masked = sharded_client_stats(feats, jnp.asarray(y), 10, mesh=mesh, secure=True)
 gm = derive_global(masked)
 dmu, dsig = statistics_deviation(gm, ref)
 print(f"masked aggregation:  delta_mu={float(dmu):.2e} delta_sigma={float(dsig):.2e}")
@@ -50,7 +61,7 @@ print(f"GNB head from the masked distributed statistics: train-set acc {acc:.4f}
 """
 
 if __name__ == "__main__":
-    env = dict(os.environ)
+    env = dict(os.environ)  # keeps JAX_PLATFORMS: TPU probing must not hang
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env.setdefault("PYTHONPATH", "src")
     raise SystemExit(subprocess.call([sys.executable, "-c", BODY], env=env))

@@ -3,32 +3,43 @@
 The paper's server loop — "sum every client's (A_i, B_i, N_i)" — is an
 all-reduce over the client axis.  Here clients are assigned to the
 ("pod", "data") mesh shards; each shard computes the statistics of ITS
-cohort's examples locally and a single ``psum`` realizes the server
-aggregation.  SecureAgg composes: masks cancel INSIDE the psum, so the
-reduction is literally the protocol's trusted aggregator.
+cohort's examples locally and a single ``psum`` over the whole
+FeatureStats tree realizes the server aggregation.  SecureAgg composes:
+masks cancel INSIDE the psum, so the reduction is literally the
+protocol's trusted aggregator.
 
 ``distributed_client_stats`` is the shard_map entry point (explicit
 collectives — auditable); the jit path in ``launch.steps.stats_step``
 lets GSPMD insert the same psum implicitly.  Tests assert both agree
 with the centralized oracle.
+
+``use_kernel=True`` routes each shard's local sweep through the fused
+single-pass Pallas engine (``repro.kernels.client_stats``) instead of
+the jnp one-hot formulation — the production path on TPU.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.statistics import FeatureStats
+from repro.core.statistics import FeatureStats, client_statistics_fused
+from repro.sharding import shard_map
 
 Array = jax.Array
 
 
-def _local_stats(features: Array, labels: Array, num_classes: int) -> FeatureStats:
+def _local_stats(
+    features: Array, labels: Array, num_classes: int, *, use_kernel: bool = False
+) -> FeatureStats:
+    if use_kernel:
+        return client_statistics_fused(features, labels, num_classes)
     f = features.astype(jnp.float32)
+    # one_hot maps out-of-range labels (padding rows' -1) to all-zeros,
+    # so padded rows contribute nothing to A, B, or N.
     onehot = jax.nn.one_hot(labels, num_classes, dtype=jnp.float32)
     return FeatureStats(A=onehot.T @ f, B=f.T @ f, N=jnp.sum(onehot, axis=0))
 
@@ -40,6 +51,7 @@ def distributed_client_stats(
     mesh: Mesh,
     *,
     client_axes: Tuple[str, ...] = ("data",),
+    use_kernel: bool = False,
 ) -> FeatureStats:
     """Global (A, B, N) from batch-sharded (features, labels).
 
@@ -51,15 +63,14 @@ def distributed_client_stats(
     axes = tuple(a for a in client_axes if a in mesh.axis_names)
 
     def shard_fn(f_shard: Array, y_shard: Array) -> FeatureStats:
-        local = _local_stats(f_shard, y_shard, num_classes)
-        return jax.tree_util.tree_map(
-            lambda x: jax.lax.psum(x, axes), local
-        )
+        local = _local_stats(f_shard, y_shard, num_classes, use_kernel=use_kernel)
+        return jax.lax.psum(local, axes)  # ONE collective over the tree
 
     in_specs = (P(axes), P(axes))
     out_specs = FeatureStats(A=P(), B=P(), N=P())
-    fn = jax.shard_map(
-        shard_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs
+    fn = shard_map(
+        shard_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=not use_kernel,  # pallas_call has no replication rule
     )
     return fn(features, labels)
 
@@ -73,6 +84,7 @@ def masked_distributed_stats(
     base_seed: int = 0,
     mask_scale: float = 1e3,
     client_axes: Tuple[str, ...] = ("data",),
+    use_kernel: bool = False,
 ) -> FeatureStats:
     """SecureAgg-composed variant: each shard adds pairwise-cancelling
     masks BEFORE the psum, so no unmasked per-shard statistic ever exists
@@ -81,14 +93,16 @@ def masked_distributed_stats(
     axes = tuple(a for a in client_axes if a in mesh.axis_names)
 
     def shard_fn(f_shard: Array, y_shard: Array) -> FeatureStats:
-        local = _local_stats(f_shard, y_shard, num_classes)
+        local = _local_stats(f_shard, y_shard, num_classes, use_kernel=use_kernel)
+        # axis extents are static properties of the mesh (jax.lax.axis_size
+        # only exists on newer jax)
         me = jax.lax.axis_index(axes[0]) if len(axes) == 1 else (
-            jax.lax.axis_index(axes[0]) * jax.lax.axis_size(axes[1])
+            jax.lax.axis_index(axes[0]) * mesh.shape[axes[1]]
             + jax.lax.axis_index(axes[1])
         )
         n_shards = 1
         for a in axes:
-            n_shards *= jax.lax.axis_size(a)
+            n_shards *= mesh.shape[a]
 
         def add_pair_mask(stat, other):
             key = jax.random.fold_in(
@@ -110,10 +124,11 @@ def masked_distributed_stats(
             )
 
         masked = jax.lax.fori_loop(0, n_shards, body, local)
-        return jax.tree_util.tree_map(lambda x: jax.lax.psum(x, axes), masked)
+        return jax.lax.psum(masked, axes)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         shard_fn, mesh=mesh, in_specs=(P(axes), P(axes)),
         out_specs=FeatureStats(A=P(), B=P(), N=P()),
+        check_rep=not use_kernel,
     )
     return fn(features, labels)

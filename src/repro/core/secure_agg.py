@@ -10,6 +10,17 @@ For every ordered client pair (i, j), i < j, both derive a shared mask
 ``+m_ij``, client j adds ``−m_ij``.  Summed over all clients the masks
 cancel exactly (up to float associativity, ~1e-6 relative — tested).
 
+Cost model: a masked round needs each of the K·(K−1)/2 pair masks
+exactly once.  ``masked_round`` is the single-derivation entry point —
+it streams over pairs, materializing ONE mask tree at a time, and both
+``secure_sum`` and ``masked_views`` are thin wrappers over it.  (The
+seed implementation re-derived every pair mask from scratch inside each
+per-client ``mask_client_update`` call — K·(K−1) PRG tree expansions
+per function, twice that when a pipeline needed both the views and the
+sum.)  ``mask_client_update`` keeps the per-client protocol view for
+tests of seed agreement; it derives only the K−1 masks client i is a
+party to.
+
 This is a faithful *functional* model of the protocol: we implement the
 mask algebra and the seed agreement (here: hash of the pair), not the
 networking/dropout-recovery machinery (Shamir shares), which is
@@ -18,7 +29,7 @@ orthogonal to the paper's claim.
 
 from __future__ import annotations
 
-from typing import Any, List, Sequence
+from typing import Any, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -63,6 +74,29 @@ def mask_client_update(
     return masked
 
 
+def masked_round(
+    updates: Sequence[PyTree], *, base_seed: int = 0, mask_scale: float = 1e3
+) -> Tuple[List[PyTree], PyTree]:
+    """One SecureAgg round: (per-client masked views, their server-side sum).
+
+    Every pair mask is derived exactly once and applied ``+`` to the low
+    client / ``−`` to the high client, so the round costs K·(K−1)/2 PRG
+    tree expansions total regardless of whether the caller wants the
+    views, the sum, or both.
+    """
+    views: List[PyTree] = list(updates)
+    k = len(views)
+    for i in range(k):
+        for j in range(i + 1, k):
+            mask = _mask_like(_pair_seed(base_seed, i, j), views[i], mask_scale)
+            views[i] = jax.tree_util.tree_map(lambda u, m: u + m, views[i], mask)
+            views[j] = jax.tree_util.tree_map(lambda u, m: u - m, views[j], mask)
+    total = views[0]
+    for v in views[1:]:
+        total = jax.tree_util.tree_map(jnp.add, total, v)
+    return views, total
+
+
 def secure_sum(
     updates: Sequence[PyTree], *, base_seed: int = 0, mask_scale: float = 1e3
 ) -> PyTree:
@@ -73,15 +107,7 @@ def secure_sum(
     matches the unmasked sum and (b) each individual masked update is
     statistically far from the true update (mask_scale dominates).
     """
-    masked: List[PyTree] = [
-        mask_client_update(
-            u, i, len(updates), base_seed=base_seed, mask_scale=mask_scale
-        )
-        for i, u in enumerate(updates)
-    ]
-    total = masked[0]
-    for m in masked[1:]:
-        total = jax.tree_util.tree_map(jnp.add, total, m)
+    _, total = masked_round(updates, base_seed=base_seed, mask_scale=mask_scale)
     return total
 
 
@@ -89,9 +115,5 @@ def masked_views(
     updates: Sequence[PyTree], *, base_seed: int = 0, mask_scale: float = 1e3
 ) -> List[PyTree]:
     """What the server actually receives per client (for privacy tests)."""
-    return [
-        mask_client_update(
-            u, i, len(updates), base_seed=base_seed, mask_scale=mask_scale
-        )
-        for i, u in enumerate(updates)
-    ]
+    views, _ = masked_round(updates, base_seed=base_seed, mask_scale=mask_scale)
+    return views

@@ -94,6 +94,27 @@ def client_statistics(
     return FeatureStats(A=A, B=B, N=N)
 
 
+def client_statistics_fused(
+    features: Array,
+    labels: Array,
+    num_classes: int,
+    *,
+    interpret: Optional[bool] = None,
+) -> FeatureStats:
+    """ClientStats via the fused single-pass Pallas engine.
+
+    Same contract as :func:`client_statistics`; one kernel computes A, B,
+    and N in a single sweep over the feature rows (``repro.kernels``).
+    """
+    from repro.kernels import client_stats  # deferred: keeps core jnp-only
+
+    A, B, N = client_stats(
+        features, jnp.asarray(labels).astype(jnp.int32), num_classes,
+        interpret=interpret,
+    )
+    return FeatureStats(A=A, B=B, N=N)
+
+
 def aggregate(stats: Iterable[FeatureStats]) -> FeatureStats:
     """Server aggregation (Algorithm 1 lines 4-11): pure summation."""
     stats = list(stats)

@@ -27,6 +27,7 @@ from repro.core.statistics import (
     FeatureStats,
     GlobalStatistics,
     client_statistics,
+    client_statistics_fused,
     derive_global,
 )
 from repro.fl.backbone import Backbone
@@ -51,11 +52,29 @@ def client_stats_pass(
     num_classes: int,
     *,
     expansion: Optional[FeatureExpansion] = None,
+    use_kernel: bool = False,
+    distributed: bool = False,
+    mesh=None,
 ) -> FeatureStats:
-    """One client's ClientStats(D_i): features -> (A, B, N)."""
+    """One client's ClientStats(D_i): features -> (A, B, N).
+
+    ``use_kernel=True`` computes the sweep with the fused single-pass
+    Pallas engine.  ``distributed=True`` additionally shards the batch
+    over ``mesh``'s client axes (default: a host mesh over all local
+    devices) and aggregates with one psum — the multi-device engine in
+    ``repro.launch.stats_engine``.
+    """
     feats = backbone.features(jnp.asarray(x))
     if expansion is not None:
         feats = expansion(feats)
+    if distributed:
+        from repro.launch.stats_engine import sharded_client_stats
+
+        return sharded_client_stats(
+            feats, jnp.asarray(y), num_classes, mesh=mesh, use_kernel=use_kernel
+        )
+    if use_kernel:
+        return client_statistics_fused(feats, jnp.asarray(y), num_classes)
     return client_statistics(feats, jnp.asarray(y), num_classes)
 
 
@@ -68,10 +87,16 @@ def run_fedcgs(
     expansion: Optional[FeatureExpansion] = None,
     use_secure_agg: bool = True,
     ridge: Optional[float] = None,
+    use_kernel: bool = False,
+    distributed: bool = False,
+    mesh=None,
 ) -> FedCGSResult:
     """The full one-shot protocol over simulated clients."""
     stats_list = [
-        client_stats_pass(backbone, x, y, num_classes, expansion=expansion)
+        client_stats_pass(
+            backbone, x, y, num_classes, expansion=expansion,
+            use_kernel=use_kernel, distributed=distributed, mesh=mesh,
+        )
         for x, y in client_data
     ]
     if use_secure_agg:

@@ -34,7 +34,8 @@ def _pad_to(x: Array, axis: int, multiple: int, value=0) -> Array:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("num_classes", "interpret", "block_d", "block_n")
+    jax.jit,
+    static_argnames=("num_classes", "interpret", "block_d", "block_n", "fused"),
 )
 def client_stats(
     features: Array,
@@ -44,10 +45,16 @@ def client_stats(
     interpret: bool | None = None,
     block_d: int = stats_kernel.BLOCK_D,
     block_n: int = stats_kernel.BLOCK_N,
+    fused: bool = True,
 ) -> Tuple[Array, Array, Array]:
     """FedCGS ClientStats via the Pallas kernels: returns (A, B, N).
 
-    features: (n, d) any float dtype; labels: (n,) int32.
+    features: (n, d) any float dtype; labels: (n,) int32 in [0, C).
+
+    ``fused=True`` (default) runs the single-pass engine — one kernel,
+    one sweep over the feature rows for A, B, AND N, symmetric-aware
+    Gram tiles.  ``fused=False`` is the seed's two-kernel formulation,
+    kept so ``benchmarks/kernel_bench.py`` can measure the difference.
     """
     interpret = (not _on_tpu()) if interpret is None else interpret
     n, d = features.shape
@@ -56,14 +63,24 @@ def client_stats(
     y = _pad_to(labels.astype(jnp.int32)[:, None], 0, block_n, value=-1)
     c_pad = max(block_d, ((num_classes + block_d - 1) // block_d) * block_d)
 
+    if fused:
+        A, B, N = stats_kernel.fused_stats(
+            f, y, c_pad, block_d=block_d, block_n=block_n, interpret=interpret
+        )
+        return A[:num_classes, :d], B[:d, :d], N[:num_classes]
+
     B = stats_kernel.gram(f, block_d=block_d, block_n=block_n, interpret=interpret)
     A = stats_kernel.class_sum(
         f, y, c_pad, block_c=block_d, block_d=block_d, block_n=block_n,
         interpret=interpret,
     )
-    N = jnp.sum(
-        jax.nn.one_hot(labels, num_classes, dtype=jnp.float32), axis=0
-    )  # (C,) — O(n·C), not a hot-spot
+    # O(n) count — never materializes the (n, C) one-hot the seed built.
+    # Out-of-range labels (e.g. the -1 padding convention) go to an
+    # overflow bucket that is sliced off, matching the fused kernel's
+    # "match no class" behaviour (bincount would clip -1 to class 0).
+    y_flat = labels.astype(jnp.int32)
+    y_safe = jnp.where((y_flat >= 0) & (y_flat < num_classes), y_flat, num_classes)
+    N = jnp.bincount(y_safe, length=num_classes + 1)[:num_classes].astype(jnp.float32)
     return A[:num_classes, :d], B[:d, :d], N
 
 

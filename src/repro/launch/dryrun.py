@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 from repro.configs import PUBLIC_IDS, get_config
 from repro.launch import hlo_analysis, io_specs, steps
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.mesh import _make_mesh, make_host_mesh, make_production_mesh
 from repro.models import transformer as T
 from repro.models.common import spec_shapes
 from repro.models.config import INPUT_SHAPES, REDUCED_SHAPES, ModelConfig
@@ -174,9 +174,7 @@ def run_one(
     elif mesh_shape:
         dims = tuple(int(d) for d in mesh_shape.split("x"))
         axes = ("pod", "data", "model") if len(dims) == 3 else ("data", "model")
-        mesh = jax.make_mesh(
-            dims, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(dims)
-        )
+        mesh = _make_mesh(dims, axes)
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
 

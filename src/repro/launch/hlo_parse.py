@@ -84,7 +84,13 @@ class Instruction:
         arglist = "".join(cur)
         for tok in arglist.split(","):
             tok = tok.strip()
-            if tok.startswith("%"):
+            # older XLA dumps print operands WITH their type, e.g.
+            # ``dot(f32[256,256]{1,0} %lhs, f32[256,256]{1,0} %rhs)`` —
+            # the operand name is the trailing %name of the token
+            typed = re.search(r"%([\w.\-]+)\s*$", tok)
+            if typed:
+                ops.append(typed.group(1))
+            elif tok.startswith("%"):
                 ops.append(tok[1:])
             elif re.fullmatch(r"[\w.\-]+", tok) and not tok.isdigit():
                 ops.append(tok)

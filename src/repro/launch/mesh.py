@@ -3,9 +3,15 @@
 A FUNCTION, not a module-level constant, so importing this module never
 touches jax device state (the dry-run must set XLA_FLAGS before any
 device query; smoke tests must keep seeing 1 device).
+
+``_make_mesh`` papers over the jax API skew around explicit axis types:
+``jax.make_mesh`` only grew ``axis_types=`` (and ``jax.sharding`` only
+grew ``AxisType``) after 0.4.x, and Auto is the default there anyway.
 """
 
 from __future__ import annotations
+
+from typing import Sequence, Tuple
 
 import jax
 from jax.sharding import Mesh
@@ -14,20 +20,23 @@ SINGLE_POD = (16, 16)  # 256 chips (TPU v5e pod slice)
 MULTI_POD = (2, 16, 16)  # 2 pods = 512 chips
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _make_mesh(shape: Sequence[int], axes: Tuple[str, ...]) -> Mesh:
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:  # older jax: Auto is the only (implicit) behaviour
+        return jax.make_mesh(tuple(shape), axes)
+    return jax.make_mesh(
+        tuple(shape), axes, axis_types=(axis_type.Auto,) * len(axes)
+    )
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = MULTI_POD if multi_pod else SINGLE_POD
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(model_axis: int = 1) -> Mesh:
     """Tiny mesh over whatever devices the host actually has (tests)."""
     n = len(jax.devices())
     assert n % model_axis == 0
-    return jax.make_mesh(
-        (n // model_axis, model_axis), ("data", "model"), axis_types=_auto(2)
-    )
+    return _make_mesh((n // model_axis, model_axis), ("data", "model"))

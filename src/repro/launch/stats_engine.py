@@ -1,0 +1,132 @@
+"""Sharded FedCGS statistics engine (the fused kernel at mesh scale).
+
+One entry point, ``sharded_client_stats``, takes a feature batch — one
+huge client, or many simulated clients concatenated — shards the rows
+over the mesh's client axes, runs the fused single-pass Pallas engine
+(``repro.kernels.client_stats``) on every shard, and realizes the
+paper's server aggregation as ONE ``psum`` over the FeatureStats tree.
+Partition-invariance (paper Table 4) is what makes the row-assignment
+arbitrary: any shard layout sums to the same global statistics.
+
+Shape hygiene lives here: rows are padded with label −1 / zero features
+to divide evenly across shards, and the padding provably contributes
+zero to A, B, and N (kernel masks label −1 in-register; the jnp
+fallback's one_hot maps it to all-zeros).
+
+``sharded_cohort_stats`` is the many-clients convenience: it
+concatenates per-client batches and delegates — the psum then IS the
+server's sum over clients, optionally with SecureAgg masks folded in
+(``secure=True``) so no unmasked per-shard statistic ever leaves its
+shard.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.federated import distributed_client_stats, masked_distributed_stats
+from repro.core.statistics import FeatureStats
+from repro.launch.mesh import make_host_mesh
+
+Array = jax.Array
+
+
+def _num_shards(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _pad_rows(features: Array, labels: Array, multiple: int):
+    """Zero-pad features / −1-pad labels so rows divide the shard count."""
+    n = features.shape[0]
+    pad = (-n) % multiple
+    if pad == 0:
+        return features, labels
+    f = jnp.pad(features, ((0, pad), (0, 0)))
+    y = jnp.pad(labels.astype(jnp.int32), (0, pad), constant_values=-1)
+    return f, y
+
+
+def batch_shardings(
+    mesh: Mesh, axes: Tuple[str, ...] = ("data",)
+) -> Tuple[NamedSharding, NamedSharding]:
+    """(features, labels) shardings: rows over the client axes."""
+    live = tuple(a for a in axes if a in mesh.axis_names)
+    spec = live if len(live) > 1 else (live[0] if live else None)
+    return (
+        NamedSharding(mesh, P(spec)),
+        NamedSharding(mesh, P(spec)),
+    )
+
+
+def sharded_client_stats(
+    features: Array,
+    labels: Array,
+    num_classes: int,
+    *,
+    mesh: Optional[Mesh] = None,
+    client_axes: Tuple[str, ...] = ("data",),
+    use_kernel: bool = True,
+    secure: bool = False,
+    base_seed: int = 0,
+    mask_scale: float = 1e3,
+) -> FeatureStats:
+    """Global (A, B, N) for a row-sharded feature batch.
+
+    features: (n, d) float; labels: (n,) int in [0, num_classes).  The
+    batch is padded to the shard count, device_put along the client
+    axes, swept once per shard by the fused kernel, and reduced with a
+    single collective.  With ``secure=True`` the shards mask their
+    contribution with pairwise-cancelling noise before the psum.
+    """
+    mesh = mesh if mesh is not None else make_host_mesh(1)
+    axes = tuple(a for a in client_axes if a in mesh.axis_names)
+    features = jnp.asarray(features)
+    labels = jnp.asarray(labels).astype(jnp.int32)
+    f, y = _pad_rows(features, labels, _num_shards(mesh, axes))
+    f_sh, y_sh = batch_shardings(mesh, axes)
+    f, y = jax.device_put(f, f_sh), jax.device_put(y, y_sh)
+    if secure:
+        return masked_distributed_stats(
+            f, y, num_classes, mesh,
+            base_seed=base_seed, mask_scale=mask_scale,
+            client_axes=axes, use_kernel=use_kernel,
+        )
+    return distributed_client_stats(
+        f, y, num_classes, mesh, client_axes=axes, use_kernel=use_kernel
+    )
+
+
+def sharded_cohort_stats(
+    client_batches: Sequence[Tuple[np.ndarray, np.ndarray]],
+    num_classes: int,
+    *,
+    mesh: Optional[Mesh] = None,
+    client_axes: Tuple[str, ...] = ("data",),
+    use_kernel: bool = True,
+    secure: bool = False,
+    base_seed: int = 0,
+    mask_scale: float = 1e3,
+) -> FeatureStats:
+    """Aggregate statistics for MANY simulated clients in one collective.
+
+    Client batches are concatenated and row-sharded; partition
+    invariance guarantees the psum equals the per-client sum the paper's
+    server loop would compute.
+    """
+    feats = jnp.concatenate([jnp.asarray(f) for f, _ in client_batches], axis=0)
+    labels = jnp.concatenate(
+        [jnp.asarray(y).astype(jnp.int32) for _, y in client_batches], axis=0
+    )
+    return sharded_client_stats(
+        feats, labels, num_classes,
+        mesh=mesh, client_axes=client_axes, use_kernel=use_kernel,
+        secure=secure, base_seed=base_seed, mask_scale=mask_scale,
+    )

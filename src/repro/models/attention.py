@@ -300,7 +300,9 @@ def attend_decode_seq_sharded(
         out = acc / jnp.maximum(l, 1e-30)[..., None]  # (b, hkv, g, 1, d)
         return jnp.einsum("bhgqd->bqhgd", out).reshape(b, 1, hq_, d)
 
-    fn = jax.shard_map(
+    from repro.sharding import shard_map as _shard_map
+
+    fn = _shard_map(
         local,
         mesh=mesh,
         # q_offset is an explicit replicated arg: a traced scalar must

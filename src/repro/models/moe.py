@@ -215,7 +215,9 @@ def _moe_apply_sharded(
         if mesh is not None and a in mesh.axis_names and mesh.shape[a] > 1
     )
     if axes:
-        sm = lambda fn, ins, outs: jax.shard_map(
+        from repro.sharding import shard_map as _shard_map
+
+        sm = lambda fn, ins, outs: _shard_map(
             fn, mesh=mesh, in_specs=ins, out_specs=outs, axis_names=set(axes)
         )
         buf, safe_e, safe_r, keep = sm(

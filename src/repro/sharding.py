@@ -33,6 +33,55 @@ Candidate = Union[str, Tuple[str, ...]]
 
 
 # ---------------------------------------------------------------------------
+# shard_map compatibility
+# ---------------------------------------------------------------------------
+
+
+def shard_map(fn, *, mesh: Mesh, in_specs, out_specs, axis_names=None,
+              check_rep: Optional[bool] = None):
+    """``jax.shard_map`` with a fallback to the pre-0.5 experimental API.
+
+    On older jax the ``axis_names`` subset (manual axes) maps onto the
+    experimental ``auto=`` complement, which forces replication checking
+    off (auto axes and check_rep don't compose there).  ``check_rep=False``
+    is also needed whenever the body contains primitives without a
+    replication rule (e.g. ``pallas_call`` on 0.4.x).
+    """
+    native = getattr(jax, "shard_map", None)
+    if native is not None:
+        kwargs = {} if axis_names is None else {"axis_names": set(axis_names)}
+        if check_rep is not None:
+            import inspect
+
+            params = inspect.signature(native).parameters
+            for name in ("check_rep", "check_vma"):
+                if name in params:
+                    kwargs[name] = check_rep
+                    break
+        return native(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kwargs = {}
+    if axis_names is not None:
+        # size-1 axes need no auto treatment: manual over a trivial axis
+        # is identical to auto, and the experimental auto= path is far
+        # more restricted (raises NotImplementedError outside jit).
+        auto = frozenset(
+            a for a in mesh.axis_names
+            if a not in frozenset(axis_names) and mesh.shape[a] > 1
+        )
+        if auto:
+            kwargs = {"auto": auto, "check_rep": False}
+    if check_rep is not None:
+        kwargs["check_rep"] = kwargs.get("check_rep", True) and check_rep
+    return _shard_map(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+    )
+
+
+# ---------------------------------------------------------------------------
 # rule tables
 # ---------------------------------------------------------------------------
 

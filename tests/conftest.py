@@ -1,0 +1,57 @@
+"""Shared test helpers.
+
+``subprocess_env`` builds the environment for tests that re-exec python
+with simulated devices (``--xla_force_host_platform_device_count``).
+The env is deliberately minimal, BUT the parent's backend selection
+(``JAX_PLATFORMS``) must survive: on hosts where libtpu is installed and
+no TPU is reachable, a child process without it hangs for minutes inside
+TPU backend discovery instead of falling back to CPU.
+"""
+
+import os
+
+import pytest
+
+
+def optional_hypothesis():
+    """(given, settings, st) — real hypothesis, or stand-ins that turn
+    each property test into a single SKIPPED test.
+
+    Lets modules mixing property-based and deterministic tests collect
+    everywhere: a bare environment (no dev extra) skips only the
+    ``@given`` tests instead of erroring at collection or skipping the
+    whole module.
+    """
+    try:
+        from hypothesis import given, settings, strategies as st
+
+        return given, settings, st
+    except ImportError:
+        class _AnyStrategy:
+            def __getattr__(self, name):
+                return lambda *a, **k: None
+
+        def settings(**kwargs):
+            return lambda fn: fn
+
+        def given(*args, **kwargs):
+            def deco(fn):
+                @pytest.mark.skip(reason="hypothesis not installed (dev extra)")
+                def skipped():
+                    pass
+
+                skipped.__name__ = fn.__name__
+                return skipped
+
+            return deco
+
+        return given, settings, _AnyStrategy()
+
+
+def subprocess_env(**extra):
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+    for key in ("JAX_PLATFORMS", "JAX_PLATFORM_NAME"):
+        if key in os.environ:
+            env[key] = os.environ[key]
+    env.update(extra)
+    return env

@@ -15,14 +15,12 @@ ARCHS = ["gemma-2b", "qwen2-moe-a2.7b", "mamba2-2.7b", "whisper-tiny"]
 
 
 def _run(args, timeout=540):
+    from conftest import subprocess_env
+
     return subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun", *args],
         capture_output=True, text=True, timeout=timeout,
-        env={
-            "PYTHONPATH": "src",
-            "PATH": "/usr/bin:/bin",
-            "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
-        },
+        env=subprocess_env(XLA_FLAGS="--xla_force_host_platform_device_count=8"),
         cwd="/root/repo",
     )
 

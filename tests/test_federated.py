@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from conftest import subprocess_env
+
 from repro.core.federated import distributed_client_stats, masked_distributed_stats
 from repro.core.statistics import client_statistics
 from repro.launch.mesh import make_host_mesh
@@ -62,7 +64,7 @@ def test_multidevice_psum_aggregation_subprocess():
     proc = subprocess.run(
         [sys.executable, "-c", _SUBPROCESS_BODY],
         capture_output=True, text=True, timeout=300,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        env=subprocess_env(),
         cwd="/root/repo",
     )
     assert "MULTIDEVICE_OK" in proc.stdout, proc.stderr[-2000:]

@@ -93,7 +93,7 @@ _E2E = textwrap.dedent(
 def test_end_to_end_model_decode_subprocess():
     proc = subprocess.run(
         [sys.executable, "-c", _E2E], capture_output=True, text=True,
-        timeout=420, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        timeout=420, env=__import__("conftest").subprocess_env(),
         cwd="/root/repo",
     )
     assert "FLASH_DECODE_E2E_OK" in proc.stdout, (

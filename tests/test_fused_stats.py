@@ -1,0 +1,170 @@
+"""Fused single-pass statistics engine: deterministic Table-4 exactness.
+
+No hypothesis here on purpose — these are the tier-1 guarantees for the
+fused Pallas kernel and the sharded layer on a bare environment:
+
+- fused kernel == two-kernel path == jnp oracle on ragged n/d/C that
+  exercise the block padding (label −1 pad rows must contribute zero to
+  A, B, AND N);
+- fused client_stats → aggregate → derive_global == centralized_statistics
+  under several partition layouts (the paper's partition-invariance);
+- single-device vs shard_map sharded engine equivalence.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.statistics import (
+    FeatureStats,
+    aggregate,
+    centralized_statistics,
+    client_statistics_fused,
+    derive_global,
+    statistics_deviation,
+)
+from repro.kernels import client_stats
+from repro.kernels import ref
+from repro.kernels import stats_kernel
+
+
+def _data(n, d, c, seed):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    f = jax.random.normal(k1, (n, d))
+    y = jax.random.randint(k2, (n,), 0, c)
+    return f, y
+
+
+# ragged shapes straddling the (block_n=512, block_d=128) boundaries
+RAGGED = [
+    (65, 16, 4),        # everything below one block
+    (512, 128, 128),    # exact block multiples (no padding at all)
+    (513, 129, 129),    # one past every block boundary
+    (1000, 257, 37),    # ragged everywhere
+    (100, 640, 3),      # d > n, tiny C
+]
+
+
+@pytest.mark.parametrize("n,d,c", RAGGED)
+def test_fused_matches_oracle_and_unfused(n, d, c):
+    f, y = _data(n, d, c, seed=n + d + c)
+    A, B, N = client_stats(f, y, c)
+    A0, B0, N0 = ref.client_stats_ref(f, y, c)
+    np.testing.assert_allclose(np.asarray(A), np.asarray(A0), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(B), np.asarray(B0), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(N), np.asarray(N0))
+    Au, Bu, Nu = client_stats(f, y, c, fused=False)
+    np.testing.assert_allclose(np.asarray(A), np.asarray(Au), rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(B), np.asarray(Bu), rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(N), np.asarray(Nu))
+    # B must be exactly symmetric (mirrored upper triangle, not recomputed)
+    np.testing.assert_array_equal(np.asarray(B), np.asarray(B).T)
+    # pad rows contributed zero to N: total count == real row count
+    assert float(jnp.sum(N)) == n
+
+
+def test_pad_rows_contribute_zero_to_everything():
+    """Feed the raw kernel explicitly padded input: the −1-labelled zero
+    rows must leave A, B, and N identical to the unpadded sweep."""
+    n, d, c = 300, 96, 7
+    f, y = _data(n, d, c, seed=0)
+    c_pad = 128
+    fp = jnp.pad(f, ((0, 512 - n), (0, 128 - d)))
+    yp = jnp.pad(y.astype(jnp.int32)[:, None], ((0, 512 - n), (0, 0)),
+                 constant_values=-1)
+    A, B, N = stats_kernel.fused_stats(fp, yp, c_pad, interpret=True)
+    A0, B0, N0 = ref.client_stats_ref(f, y, c)
+    np.testing.assert_allclose(np.asarray(A[:c, :d]), np.asarray(A0),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(B[:d, :d]), np.asarray(B0),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(N[:c]), np.asarray(N0))
+    # the padded tail of every statistic is exactly zero
+    assert float(jnp.abs(A[c:]).max()) == 0.0
+    assert float(jnp.abs(B[d:, :]).max()) == 0.0
+    assert float(jnp.abs(B[:, d:]).max()) == 0.0
+    assert float(jnp.abs(N[c:]).max()) == 0.0
+
+
+# three partition layouts: even split, skewed sizes, sorted-by-label
+# (near-single-class clients — the paper's pathological heterogeneity)
+def _partitions(n, seed):
+    rng = np.random.default_rng(seed)
+    even = np.array_split(np.arange(n), 5)
+    cuts = np.sort(rng.choice(np.arange(1, n), size=3, replace=False))
+    skewed = np.split(np.arange(n), cuts)
+    return {"even": even, "skewed": skewed}
+
+
+@pytest.mark.parametrize("layout", ["even", "skewed", "sorted_by_label"])
+def test_fused_partition_invariance_vs_centralized(layout):
+    """Table 4: fused client_stats → aggregate → derive_global equals the
+    centralized ground truth for every partition layout."""
+    n, d, c = 700, 130, 11  # ragged vs both block sizes
+    f, y = _data(n, d, c, seed=42)
+    fx, yx = np.asarray(f), np.asarray(y)
+    if layout == "sorted_by_label":
+        order = np.argsort(yx)
+        fx, yx = fx[order], yx[order]
+        parts = np.array_split(np.arange(n), 6)
+    else:
+        parts = _partitions(n, seed=1)[layout]
+    shards = [
+        client_statistics_fused(jnp.asarray(fx[p]), jnp.asarray(yx[p]), c)
+        for p in parts
+        if len(p)
+    ]
+    agg = aggregate(shards)
+    ours = derive_global(agg)
+    centr = centralized_statistics(jnp.asarray(fx), jnp.asarray(yx), c)
+    dmu, dsigma = statistics_deviation(ours, centr)
+    assert float(dmu) < 1e-4, f"Δμ={float(dmu)}"
+    assert float(dsigma) < 1e-4, f"ΔΣ={float(dsigma)}"
+
+
+def test_fused_feeds_derive_global_like_jnp_path():
+    from repro.core.statistics import client_statistics
+
+    f, y = _data(400, 80, 9, seed=5)
+    g_fused = derive_global(client_statistics_fused(f, y, 9))
+    g_jnp = derive_global(client_statistics(f, y, 9))
+    np.testing.assert_allclose(np.asarray(g_fused.mu), np.asarray(g_jnp.mu),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(g_fused.sigma), np.asarray(g_jnp.sigma),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sharded_engine_matches_single_device():
+    """shard_map engine == plain fused sweep on the host's devices (1 on a
+    CPU runner; the multi-device layout runs in test_federated's
+    subprocess with 8 simulated devices)."""
+    from repro.launch.stats_engine import sharded_client_stats
+
+    n, d, c = 530, 48, 6  # ragged => exercises the shard-count padding too
+    f, y = _data(n, d, c, seed=11)
+    out = sharded_client_stats(f, y, c)
+    A0, B0, N0 = ref.client_stats_ref(f, y, c)
+    np.testing.assert_allclose(np.asarray(out.A), np.asarray(A0), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(out.B), np.asarray(B0), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(out.N), np.asarray(N0))
+
+
+def test_sharded_cohort_equals_per_client_sum():
+    from repro.launch.stats_engine import sharded_cohort_stats
+
+    c = 5
+    batches = []
+    for i, n in enumerate((120, 77, 301)):
+        f, y = _data(n, 32, c, seed=20 + i)
+        batches.append((np.asarray(f), np.asarray(y)))
+    out = sharded_cohort_stats(batches, c)
+    per_client = aggregate(
+        FeatureStats(*client_stats(jnp.asarray(f), jnp.asarray(y), c))
+        for f, y in batches
+    )
+    np.testing.assert_allclose(np.asarray(out.A), np.asarray(per_client.A),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(out.B), np.asarray(per_client.B),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(out.N), np.asarray(per_client.N))

@@ -5,6 +5,8 @@ import jax.ad_checkpoint as adc
 import jax.numpy as jnp
 import pytest
 
+from conftest import subprocess_env as _subprocess_env
+
 from repro.launch.hlo_parse import analyze
 
 
@@ -92,8 +94,7 @@ def test_collectives_counted_with_loops():
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.launch.hlo_parse import analyze
 
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((4,), ("data",))  # Auto axes (the default)
         sh = NamedSharding(mesh, P("data"))
         rep = NamedSharding(mesh, P())
 
@@ -114,7 +115,7 @@ def test_collectives_counted_with_loops():
     )
     proc = subprocess.run(
         [sys.executable, "-c", body], capture_output=True, text=True, timeout=300,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}, cwd="/root/repo",
+        env=_subprocess_env(), cwd="/root/repo",
     )
     assert "COLL" in proc.stdout, proc.stderr[-2000:]
     total = float(proc.stdout.split("COLL")[1].strip())

@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import optional_hypothesis
+
+# bare env (no dev extra): property tests skip, deterministic tests run
+given, settings, st = optional_hypothesis()
 
 from repro.kernels import client_stats, expand_features, gnb_logits
 from repro.kernels import ref

@@ -147,7 +147,7 @@ def test_sharded_dispatch_under_mesh_shard_map():
     )
     proc = subprocess.run(
         [sys.executable, "-c", body], capture_output=True, text=True,
-        timeout=300, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        timeout=300, env=__import__("conftest").subprocess_env(),
         cwd="/root/repo",
     )
     assert "SHARDMAP_OK" in proc.stdout, proc.stderr[-1500:]
