@@ -9,15 +9,29 @@ seed) materialized an (n, C) one-hot on the host for N.  The fused
 engine visits only the upper Gram triangle and folds A, B, N into one
 k-sweep.
 
-Besides the CSV rows, ``run`` writes the fused-vs-unfused comparison to
-``json_path`` (default ``kernel_bench.json`` in the CWD — the acceptance
-artifact; pass ``json_path=None`` to suppress).
+A second comparison times the STREAMING data path — the
+``core.stats_pipeline.StatsPipeline`` batch fold (carry/accumulate
+kernel, one jit trace per batch shape) — against the materialized
+one-shot sweep on the same data, with a peak-feature-memory model that
+shows why streaming is the only option once a client's dataset
+outgrows device memory: the materialized path must hold all n rows,
+the streaming path holds one batch plus the fixed-size carry.
 
-Standalone:  PYTHONPATH=src python -m benchmarks.kernel_bench
+Besides the CSV rows, ``run`` writes both comparisons to ``json_path``
+(default ``kernel_bench.json`` in the CWD — the acceptance artifact,
+uploaded by CI; pass ``json_path=None`` to suppress).
+
+Standalone:  PYTHONPATH=src python -m benchmarks.kernel_bench [--smoke]
+
+``--smoke`` (what CI runs on every push) shrinks shapes/iters to keep
+the module a regression tripwire rather than a measurement: it still
+exercises both kernels, the streaming fold, and the JSON emission, so
+a benchmark-path breakage fails CI loudly instead of rotting.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import time
 
@@ -25,6 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Reporter
+from repro.core.stats_pipeline import StatsPipeline
 from repro.kernels import client_stats, ref
 from repro.kernels.stats_kernel import BLOCK_D, BLOCK_N
 from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS
@@ -97,15 +112,95 @@ def compare_fused(reporter: Reporter, n: int, d: int, c: int, *, seed: int = 0,
     }
 
 
+def peak_feature_bytes(n, d, c, *, batch=None, block_d=BLOCK_D, block_n=BLOCK_N):
+    """Modelled peak device bytes the statistics sweep must hold at once.
+
+    Materialized (batch=None): the full padded (n, d) feature matrix plus
+    the padded outputs.  Streaming: ONE padded batch plus the running
+    padded carry (M = [B-upper | A], N) — constant in n, which is the
+    whole point for n ≫ device memory.  The carry layout comes from the
+    kernel wrapper itself (``ops._padded_dims``), so the model can't
+    drift from what ``stats_carry_init`` actually allocates.
+    """
+    from repro.kernels.ops import _padded_dims
+
+    d_pad, c_pad = _padded_dims(c, d, block_d)
+    carry = (d_pad + c_pad) * d_pad * 4 + c_pad * 4
+    rows = n if batch is None else batch
+    return _ceil_div(rows, block_n) * block_n * d_pad * 4 + carry
+
+
+def compare_streaming(
+    reporter: Reporter, n: int, d: int, c: int, batch: int, *, seed: int = 0,
+    iters: int = 3, production_n: int = 1 << 22,
+) -> dict:
+    """Streaming pipeline fold vs materialized one-shot sweep.
+
+    Wall-clock is measured at a host-feasible (n, d, C); the peak-memory
+    model is additionally evaluated at ``production_n`` (default 4M
+    rows) where the materialized path exceeds a TPU core's HBM while the
+    streaming footprint stays flat.
+    """
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    f = jax.random.normal(k1, (n, d))
+    y = jax.random.randint(k2, (n,), 0, c)
+    tag = f"n{n}|d{d}|C{c}|b{batch}"
+    pipeline = StatsPipeline(c, backend="fused")
+
+    def streaming():
+        return pipeline.from_batches(
+            (f[i : i + batch], y[i : i + batch]) for i in range(0, n, batch)
+        )
+
+    t_mat = _bench(lambda: client_stats(f, y, c, fused=True), iters=iters)
+    t_stream = _bench(lambda: jax.tree_util.tree_leaves(streaming()), iters=iters)
+
+    mem_mat = peak_feature_bytes(n, d, c)
+    mem_stream = peak_feature_bytes(n, d, c, batch=batch)
+    mem_mat_prod = peak_feature_bytes(production_n, d, c)
+    mem_stream_prod = peak_feature_bytes(production_n, d, c, batch=batch)
+
+    reporter.add("kernels", tag, "stats_materialized_ms", t_mat * 1e3)
+    reporter.add("kernels", tag, "stats_streaming_ms", t_stream * 1e3)
+    reporter.add("kernels", tag, "stats_streaming_overhead", t_stream / t_mat)
+    reporter.add("kernels", tag, "peak_bytes_materialized", mem_mat)
+    reporter.add("kernels", tag, "peak_bytes_streaming", mem_stream)
+    reporter.add(
+        "kernels", tag, "peak_bytes_ratio_at_production_n",
+        mem_mat_prod / mem_stream_prod,
+    )
+    return {
+        "shape": {"n": n, "d": d, "C": c, "batch": batch},
+        "backend": jax.default_backend(),
+        "materialized_ms": t_mat * 1e3,
+        "streaming_ms": t_stream * 1e3,
+        "streaming_overhead": t_stream / t_mat,
+        "peak_bytes_materialized": mem_mat,
+        "peak_bytes_streaming": mem_stream,
+        "production_n": production_n,
+        "peak_bytes_materialized_at_production_n": mem_mat_prod,
+        "peak_bytes_streaming_at_production_n": mem_stream_prod,
+        "peak_bytes_ratio_at_production_n": mem_mat_prod / mem_stream_prod,
+    }
+
+
 def run(
     reporter: Reporter,
     *,
     quick: bool = False,
     seed: int = 0,
     json_path: str | None = "kernel_bench.json",
+    smoke: bool = False,
 ) -> None:
-    shapes = [(4096, 512, 100)] if quick else [(4096, 512, 100), (8192, 768, 128)]
+    if smoke:
+        shapes = [(1024, 256, 16)]
+    elif quick:
+        shapes = [(4096, 512, 100)]
+    else:
+        shapes = [(4096, 512, 100), (8192, 768, 128)]
+    iters = 1 if smoke else 3
     results = []
+    streaming_results = []
     for n, d, c in shapes:
         k1, k2 = jax.random.split(jax.random.key(seed))
         f = jax.random.normal(k1, (n, d))
@@ -114,7 +209,7 @@ def run(
 
         # oracle wall time on CPU (the TPU kernel itself can't be timed here)
         jitted = jax.jit(lambda f, y: ref.client_stats_ref(f, y, c))
-        us = _bench(jitted, f, y) * 1e6
+        us = _bench(jitted, f, y, iters=iters) * 1e6
         reporter.add("kernels", tag, "stats_oracle_us", us)
 
         # arithmetic intensity: 2nd² + 2nCd FLOPs over one feature stream
@@ -128,7 +223,13 @@ def run(
         reporter.add("kernels", tag, "stats_compute_bound", float(ai > ridge))
 
         # fused vs the seed two-kernel formulation: measured + modelled
-        results.append(compare_fused(reporter, n, d, c, seed=seed))
+        results.append(compare_fused(reporter, n, d, c, seed=seed, iters=iters))
+
+        # streaming pipeline fold vs materialized one-shot at the same shape
+        streaming_results.append(
+            compare_streaming(reporter, n, d, c, batch=max(n // 8, BLOCK_N),
+                              seed=seed, iters=iters)
+        )
 
         # correctness at bench scale (kernel vs oracle)
         A, B, N = client_stats(f, y, c)
@@ -142,9 +243,24 @@ def run(
 
     if json_path:
         with open(json_path, "w") as fh:
-            json.dump({"fused_vs_unfused": results}, fh, indent=2)
+            json.dump(
+                {
+                    "fused_vs_unfused": results,
+                    "streaming_vs_materialized": streaming_results,
+                },
+                fh,
+                indent=2,
+            )
         print(f"# wrote {json_path} ({len(results)} shapes)")
 
 
 if __name__ == "__main__":
-    run(Reporter(), quick=False)
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument(
+        "--smoke", action="store_true",
+        help="tiny shapes / single iteration — CI's regression tripwire",
+    )
+    p.add_argument("--quick", action="store_true", help="reduced shape sweep")
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args()
+    run(Reporter(), quick=args.quick, seed=args.seed, smoke=args.smoke)

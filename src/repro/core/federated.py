@@ -20,28 +20,81 @@ the jnp one-hot formulation — the production path on TPU.
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.statistics import FeatureStats, client_statistics_fused
+from repro.core.statistics import FeatureStats
 from repro.sharding import shard_map
 
 Array = jax.Array
 
 
 def _local_stats(
-    features: Array, labels: Array, num_classes: int, *, use_kernel: bool = False
+    features: Array,
+    labels: Array,
+    num_classes: int,
+    *,
+    use_kernel: bool = False,
+    interpret: Optional[bool] = None,
 ) -> FeatureStats:
+    """One shard's sweep — the pipeline's per-shard building blocks.
+
+    Both paths map padding labels (−1) to zero contributions: the kernel
+    masks them in-register, the jnp one_hot maps them to all-zero rows.
+    """
+    from repro.core.stats_pipeline import _stats_fused, _stats_jnp
+
     if use_kernel:
-        return client_statistics_fused(features, labels, num_classes)
-    f = features.astype(jnp.float32)
-    # one_hot maps out-of-range labels (padding rows' -1) to all-zeros,
-    # so padded rows contribute nothing to A, B, or N.
-    onehot = jax.nn.one_hot(labels, num_classes, dtype=jnp.float32)
-    return FeatureStats(A=onehot.T @ f, B=f.T @ f, N=jnp.sum(onehot, axis=0))
+        return _stats_fused(features, labels, num_classes, interpret=interpret)
+    return _stats_jnp(features, labels, num_classes)
+
+
+def shard_index(mesh: Mesh, axes: Tuple[str, ...]) -> Array:
+    """Flat shard id inside a shard_map body (row-major over ``axes``)."""
+    me = jax.lax.axis_index(axes[0])
+    for a in axes[1:]:
+        me = me * mesh.shape[a] + jax.lax.axis_index(a)
+    return me
+
+
+def apply_pair_masks(
+    stat: FeatureStats,
+    me: Array,
+    n_shards: int,
+    *,
+    base_seed: int = 0,
+    mask_scale: float = 1e3,
+) -> FeatureStats:
+    """Add this shard's pairwise-cancelling SecureAgg masks to ``stat``.
+
+    Shard ``me`` adds +m_(me,other) for every other > me and −m_(other,me)
+    for every other < me; summed over all shards the masks cancel exactly
+    (up to float associativity).  Usable inside any shard_map body that
+    wants to mask BEFORE a psum — both the one-shot and the streaming
+    engines route through here.
+    """
+
+    def add_pair_mask(s, other):
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.key(base_seed), jnp.minimum(me, other)),
+            jnp.maximum(me, other),
+        )
+        leaves, treedef = jax.tree_util.tree_flatten(s)
+        keys = jax.random.split(key, len(leaves))
+        sign = jnp.where(me < other, 1.0, -1.0)
+        masked = [
+            leaf + sign * mask_scale * jax.random.normal(k, leaf.shape, leaf.dtype)
+            for k, leaf in zip(keys, leaves)
+        ]
+        return jax.tree_util.tree_unflatten(treedef, masked)
+
+    def body(i, s):
+        return jax.lax.cond(i == me, lambda x: x, lambda x: add_pair_mask(x, i), s)
+
+    return jax.lax.fori_loop(0, n_shards, body, stat)
 
 
 def distributed_client_stats(
@@ -52,6 +105,7 @@ def distributed_client_stats(
     *,
     client_axes: Tuple[str, ...] = ("data",),
     use_kernel: bool = False,
+    interpret: Optional[bool] = None,
 ) -> FeatureStats:
     """Global (A, B, N) from batch-sharded (features, labels).
 
@@ -63,7 +117,10 @@ def distributed_client_stats(
     axes = tuple(a for a in client_axes if a in mesh.axis_names)
 
     def shard_fn(f_shard: Array, y_shard: Array) -> FeatureStats:
-        local = _local_stats(f_shard, y_shard, num_classes, use_kernel=use_kernel)
+        local = _local_stats(
+            f_shard, y_shard, num_classes,
+            use_kernel=use_kernel, interpret=interpret,
+        )
         return jax.lax.psum(local, axes)  # ONE collective over the tree
 
     in_specs = (P(axes), P(axes))
@@ -85,6 +142,7 @@ def masked_distributed_stats(
     mask_scale: float = 1e3,
     client_axes: Tuple[str, ...] = ("data",),
     use_kernel: bool = False,
+    interpret: Optional[bool] = None,
 ) -> FeatureStats:
     """SecureAgg-composed variant: each shard adds pairwise-cancelling
     masks BEFORE the psum, so no unmasked per-shard statistic ever exists
@@ -93,37 +151,19 @@ def masked_distributed_stats(
     axes = tuple(a for a in client_axes if a in mesh.axis_names)
 
     def shard_fn(f_shard: Array, y_shard: Array) -> FeatureStats:
-        local = _local_stats(f_shard, y_shard, num_classes, use_kernel=use_kernel)
+        local = _local_stats(
+            f_shard, y_shard, num_classes,
+            use_kernel=use_kernel, interpret=interpret,
+        )
         # axis extents are static properties of the mesh (jax.lax.axis_size
         # only exists on newer jax)
-        me = jax.lax.axis_index(axes[0]) if len(axes) == 1 else (
-            jax.lax.axis_index(axes[0]) * mesh.shape[axes[1]]
-            + jax.lax.axis_index(axes[1])
-        )
         n_shards = 1
         for a in axes:
             n_shards *= mesh.shape[a]
-
-        def add_pair_mask(stat, other):
-            key = jax.random.fold_in(
-                jax.random.fold_in(jax.random.key(base_seed), jnp.minimum(me, other)),
-                jnp.maximum(me, other),
-            )
-            leaves, treedef = jax.tree_util.tree_flatten(stat)
-            keys = jax.random.split(key, len(leaves))
-            sign = jnp.where(me < other, 1.0, -1.0)
-            masked = [
-                leaf + sign * mask_scale * jax.random.normal(k, leaf.shape, leaf.dtype)
-                for k, leaf in zip(keys, leaves)
-            ]
-            return jax.tree_util.tree_unflatten(treedef, masked)
-
-        def body(i, stat):
-            return jax.lax.cond(
-                i == me, lambda s: s, lambda s: add_pair_mask(s, i), stat
-            )
-
-        masked = jax.lax.fori_loop(0, n_shards, body, local)
+        masked = apply_pair_masks(
+            local, shard_index(mesh, axes), n_shards,
+            base_seed=base_seed, mask_scale=mask_scale,
+        )
         return jax.lax.psum(masked, axes)
 
     fn = shard_map(

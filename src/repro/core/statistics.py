@@ -23,6 +23,7 @@ verifies partition-invariance with hypothesis.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Iterable, Optional, Sequence
 
 import jax
@@ -53,7 +54,10 @@ class FeatureStats:
         return self.A.shape[1]
 
     def __add__(self, other: "FeatureStats") -> "FeatureStats":
-        return FeatureStats(self.A + other.A, self.B + other.B, self.N + other.N)
+        # tree_map, not field-by-field: a future field addition shows up
+        # here automatically and can't silently desync from the SecureAgg
+        # mask tree (which flattens the same registered dataclass).
+        return jax.tree_util.tree_map(jnp.add, self, other)
 
     @staticmethod
     def zeros(num_classes: int, feature_dim: int, dtype=jnp.float32) -> "FeatureStats":
@@ -66,7 +70,12 @@ class FeatureStats:
     def num_elements(self) -> int:
         """Uploaded parameter count — the paper's (C+d)·d + C."""
         C, d = self.A.shape
-        return (C + d) * d + C
+        return FeatureStats.upload_size(C, d)
+
+    @staticmethod
+    def upload_size(num_classes: int, feature_dim: int) -> int:
+        """(C+d)·d + C from shapes alone — no arrays materialized."""
+        return (num_classes + feature_dim) * feature_dim + num_classes
 
 
 def client_statistics(
@@ -78,20 +87,20 @@ def client_statistics(
 ) -> FeatureStats:
     """ClientStats(D_i) from Algorithm 1, reformulated for the MXU.
 
-    The per-class scatter-sum A is computed as ``onehot(y)ᵀ F`` and the
-    Gram matrix as ``Fᵀ F`` — both matmuls, no scatter (hardware
-    adaptation noted in DESIGN.md §6).
+    Thin wrapper over :class:`repro.core.stats_pipeline.StatsPipeline`
+    (backend="jnp") — the per-class scatter-sum A is computed as
+    ``onehot(y)ᵀ F`` and the Gram matrix as ``Fᵀ F``, both matmuls, no
+    scatter (hardware adaptation noted in DESIGN.md §6).
 
     Args:
       features: (n, d) frozen-backbone features for this client's data.
       labels:   (n,) int class labels in [0, num_classes).
     """
-    f = features.astype(accum_dtype)
-    onehot = jax.nn.one_hot(labels, num_classes, dtype=accum_dtype)  # (n, C)
-    A = onehot.T @ f  # (C, d)
-    B = f.T @ f  # (d, d)
-    N = jnp.sum(onehot, axis=0)  # (C,)
-    return FeatureStats(A=A, B=B, N=N)
+    from repro.core.stats_pipeline import StatsPipeline  # deferred: no cycle
+
+    return StatsPipeline(
+        num_classes, backend="jnp", accum_dtype=accum_dtype
+    ).from_arrays(features, labels)
 
 
 def client_statistics_fused(
@@ -103,27 +112,29 @@ def client_statistics_fused(
 ) -> FeatureStats:
     """ClientStats via the fused single-pass Pallas engine.
 
-    Same contract as :func:`client_statistics`; one kernel computes A, B,
-    and N in a single sweep over the feature rows (``repro.kernels``).
+    Same contract as :func:`client_statistics`; thin wrapper over the
+    pipeline's ``backend="fused"`` cell — one kernel computes A, B, and
+    N in a single sweep over the feature rows (``repro.kernels``).
     """
-    from repro.kernels import client_stats  # deferred: keeps core jnp-only
+    from repro.core.stats_pipeline import StatsPipeline  # deferred: no cycle
 
-    A, B, N = client_stats(
-        features, jnp.asarray(labels).astype(jnp.int32), num_classes,
-        interpret=interpret,
-    )
-    return FeatureStats(A=A, B=B, N=N)
+    return StatsPipeline(
+        num_classes, backend="fused", interpret=interpret
+    ).from_arrays(features, labels)
 
 
 def aggregate(stats: Iterable[FeatureStats]) -> FeatureStats:
-    """Server aggregation (Algorithm 1 lines 4-11): pure summation."""
+    """Server aggregation (Algorithm 1 lines 4-11): pure summation.
+
+    One tree_map over all clients at once — each leaf is summed in a
+    single expression instead of a Python chain of pairwise adds.
+    """
     stats = list(stats)
     if not stats:
         raise ValueError("aggregate() needs at least one client's statistics")
-    out = stats[0]
-    for s in stats[1:]:
-        out = out + s
-    return out
+    return jax.tree_util.tree_map(
+        lambda *leaves: functools.reduce(jnp.add, leaves), *stats
+    )
 
 
 @jax.tree_util.register_dataclass
@@ -197,8 +208,9 @@ def statistics_deviation(
 
 
 # ---------------------------------------------------------------------------
-# Streaming / batched accumulation — clients with datasets too large for one
-# forward pass fold batches into a running FeatureStats.
+# Streaming / batched accumulation — thin wrappers over the pipeline's
+# streaming fold (one jitted fold per batch shape, ragged tails padded
+# with label −1; see core.stats_pipeline).
 # ---------------------------------------------------------------------------
 
 
@@ -206,8 +218,9 @@ def accumulate_batch(
     running: FeatureStats, features: Array, labels: Array
 ) -> FeatureStats:
     """Fold one batch of (features, labels) into a running statistic."""
-    batch = client_statistics(features, labels, running.num_classes)
-    return running + batch
+    from repro.core.stats_pipeline import _fold_jnp  # deferred: no cycle
+
+    return _fold_jnp(running, features, labels, running.num_classes)
 
 
 def client_statistics_batched(
@@ -216,8 +229,8 @@ def client_statistics_batched(
     num_classes: int,
     feature_dim: Optional[int] = None,
 ) -> FeatureStats:
-    d = feature_dim if feature_dim is not None else feature_batches[0].shape[-1]
-    out = FeatureStats.zeros(num_classes, d)
-    for f, y in zip(feature_batches, label_batches):
-        out = accumulate_batch(out, f, y)
-    return out
+    from repro.core.stats_pipeline import StatsPipeline  # deferred: no cycle
+
+    return StatsPipeline(num_classes).from_batches(
+        zip(feature_batches, label_batches), feature_dim=feature_dim
+    )

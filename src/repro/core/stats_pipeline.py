@@ -1,0 +1,473 @@
+"""StatsPipeline — THE one way from (features, labels) to FeatureStats.
+
+FedCGS's heterogeneity resistance rests on (A, B, N) being a *sum*
+(paper §3, Table 4): any way of slicing the data — one array, a stream
+of batches, a cohort of simulated clients, shards of a mesh — folds to
+the same global statistic.  This module is the single data path that
+exploits that: every producer in the repo (``core.statistics`` wrappers,
+``launch.stats_engine``, ``fl.fedcgs``, the stats-consuming baselines)
+routes through a :class:`StatsPipeline`, so backend, placement, and
+privacy compose uniformly instead of living in per-call-site switch
+combinations.
+
+Inputs (one pipeline, three ingest shapes):
+
+- :meth:`from_arrays`  — a single (features, labels) array pair;
+- :meth:`from_batches` — an iterator of (features, labels) batches,
+  folded into a running FeatureStats (datasets that never fit in device
+  memory); ONE jit trace per distinct batch shape — ragged tails are
+  padded up to the first-seen batch shape with zero features and label
+  −1 rows, which provably contribute nothing to A, B, or N;
+- :meth:`from_cohort`  — a sequence of simulated clients, each either
+  an array pair or a batch iterator; per-client statistics are computed
+  with the same fold and aggregated the way the knobs say.
+
+Knob matrix (all orthogonal):
+
+| knob        | values                | effect                                    |
+|-------------|-----------------------|-------------------------------------------|
+| ``backend`` | ``"jnp"`` | ``"fused"``| per-shard sweep: XLA matmuls vs the       |
+|             |                       | single-pass Pallas engine (carry variant  |
+|             |                       | ``kernels.client_stats_acc`` when         |
+|             |                       | streaming: in-place padded (M, N) folds)  |
+| ``placement``| ``"local"`` | ``"sharded"`` | this host vs row-sharded over a   |
+|             |                       | mesh's client axes (``launch.stats_engine``; |
+|             |                       | streaming keeps a per-shard running carry |
+|             |                       | and issues ONE psum per cohort)           |
+| ``privacy`` | ``"plain"`` | ``"secure"`` | aggregation sums raw statistics vs   |
+|             |                       | SecureAgg pairwise-mask-then-sum.  The    |
+|             |                       | privacy boundary of a cohort is always    |
+|             |                       | the CLIENT (the paper's protocol) —       |
+|             |                       | placement only moves where each client's  |
+|             |                       | sweep runs.  A single sharded source      |
+|             |                       | masks per shard instead; a single local   |
+|             |                       | source has no peer to hide from and       |
+|             |                       | ignores the knob by construction.         |
+
+``interpret`` follows the kernels' convention (None => interpret off
+TPU); ``mesh``/``client_axes``/``base_seed``/``mask_scale`` parameterize
+the sharded and secure cells and are ignored elsewhere.
+
+Equivalence across every cell of the matrix — streaming × sharded ×
+secure × fused against the materialized one-shot ``from_arrays`` — is
+pinned by ``tests/test_stats_pipeline.py`` (hypothesis over batch
+splits; subprocess multi-shard mesh; a collective-count check that the
+streaming sharded path performs exactly one psum per cohort).
+"""
+
+from __future__ import annotations
+
+import functools
+import itertools
+from typing import Any, Iterable, Iterator, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.statistics import FeatureStats, aggregate
+
+Array = jax.Array
+Batch = Tuple[Any, Any]
+# a cohort client: a materialized (features, labels) pair or a batch stream
+ClientData = Union[Batch, Iterable[Batch]]
+
+BACKENDS = ("jnp", "fused")
+PLACEMENTS = ("local", "sharded")
+PRIVACY = ("plain", "secure")
+
+
+def _stats_jnp(
+    features: Array, labels: Array, num_classes: int, *, accum_dtype=jnp.float32
+) -> FeatureStats:
+    """ClientStats(D_i) from Algorithm 1 as MXU matmuls (no scatter).
+
+    ``one_hot`` maps out-of-range labels (the −1 padding convention) to
+    all-zero rows, so padded rows contribute nothing to A, B, or N.
+    """
+    f = features.astype(accum_dtype)
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=accum_dtype)  # (n, C)
+    return FeatureStats(A=onehot.T @ f, B=f.T @ f, N=jnp.sum(onehot, axis=0))
+
+
+def _stats_fused(
+    features: Array,
+    labels: Array,
+    num_classes: int,
+    *,
+    interpret: Optional[bool] = None,
+) -> FeatureStats:
+    from repro.kernels import client_stats  # deferred: keeps core jnp-only
+
+    A, B, N = client_stats(
+        features, jnp.asarray(labels).astype(jnp.int32), num_classes,
+        interpret=interpret,
+    )
+    return FeatureStats(A=A, B=B, N=N)
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes", "accum_dtype"))
+def _fold_jnp(
+    carry: FeatureStats,
+    features: Array,
+    labels: Array,
+    num_classes: int,
+    accum_dtype=jnp.float32,
+) -> FeatureStats:
+    """One streaming fold step — jit caches one trace per batch shape."""
+    return carry + _stats_jnp(features, labels, num_classes, accum_dtype=accum_dtype)
+
+
+def _pad_batch(
+    features: Array, labels: Array, rows: int
+) -> Tuple[Array, Array]:
+    """Pad a ragged tail batch up to ``rows`` with zero/−1 rows."""
+    pad = rows - features.shape[0]
+    if pad <= 0:
+        return features, labels
+    f = jnp.pad(features, ((0, pad), (0, 0)))
+    y = jnp.pad(
+        jnp.asarray(labels).astype(jnp.int32), (0, pad), constant_values=-1
+    )
+    return f, y
+
+
+def canonical_batch_stream(batches: Iterable[Batch]) -> Iterator[Tuple[Array, Array]]:
+    """Normalize a batch stream to the one-trace-per-shape contract.
+
+    Ragged batches are padded (zero features, label −1) up to the
+    FIRST-seen batch's row count so the whole stream reuses one jitted
+    fold trace; oversized batches pass through untouched (their own
+    cached trace).  Both the local and the mesh-sharded streaming folds
+    consume this, so the padding contract can't drift between layers.
+    """
+    it = iter(batches)
+    first = next(it, None)
+    if first is None:
+        return
+    rows = jnp.asarray(first[0]).shape[0]
+    for fb, yb in itertools.chain([first], it):
+        fb = jnp.asarray(fb)
+        yb = jnp.asarray(yb).astype(jnp.int32)
+        if fb.shape[0] <= rows:
+            yield _pad_batch(fb, yb, rows)
+        else:
+            yield fb, yb
+
+
+class StatsPipeline:
+    """The single (features, labels) → aggregated FeatureStats path."""
+
+    def __init__(
+        self,
+        num_classes: int,
+        *,
+        backend: str = "jnp",
+        placement: str = "local",
+        privacy: str = "plain",
+        mesh=None,
+        client_axes: Tuple[str, ...] = ("data",),
+        base_seed: int = 0,
+        mask_scale: float = 1e3,
+        accum_dtype=jnp.float32,
+        interpret: Optional[bool] = None,
+    ):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+        if placement not in PLACEMENTS:
+            raise ValueError(
+                f"placement must be one of {PLACEMENTS}, got {placement!r}"
+            )
+        if privacy not in PRIVACY:
+            raise ValueError(f"privacy must be one of {PRIVACY}, got {privacy!r}")
+        if placement == "sharded" and accum_dtype != jnp.float32:
+            raise ValueError(
+                "sharded placement accumulates in float32 (the mesh engine's "
+                "carry/psum dtype); accum_dtype is a local-placement knob"
+            )
+        self.num_classes = num_classes
+        self.backend = backend
+        self.placement = placement
+        self.privacy = privacy
+        self.mesh = mesh
+        self.client_axes = client_axes
+        self.base_seed = base_seed
+        self.mask_scale = mask_scale
+        self.accum_dtype = accum_dtype
+        self.interpret = interpret
+
+    # -- knob helpers -------------------------------------------------------
+
+    @property
+    def use_kernel(self) -> bool:
+        return self.backend == "fused"
+
+    @property
+    def secure(self) -> bool:
+        return self.privacy == "secure"
+
+    def _engine_kwargs(self) -> dict:
+        return dict(
+            mesh=self.mesh,
+            client_axes=self.client_axes,
+            use_kernel=self.use_kernel,
+            secure=self.secure,
+            base_seed=self.base_seed,
+            mask_scale=self.mask_scale,
+            interpret=self.interpret,
+        )
+
+    # -- single array pair --------------------------------------------------
+
+    def from_arrays(self, features: Array, labels: Array) -> FeatureStats:
+        """Materialized one-shot sweep — the reference cell of the matrix."""
+        if self.placement == "sharded":
+            from repro.launch.stats_engine import sharded_client_stats
+
+            return sharded_client_stats(
+                features, labels, self.num_classes, **self._engine_kwargs()
+            )
+        if self.use_kernel:
+            return _stats_fused(
+                features, labels, self.num_classes, interpret=self.interpret
+            )
+        return _stats_jnp(
+            features, labels, self.num_classes, accum_dtype=self.accum_dtype
+        )
+
+    # -- streaming batches --------------------------------------------------
+
+    def from_batches(
+        self,
+        batches: Iterable[Batch],
+        *,
+        feature_dim: Optional[int] = None,
+    ) -> FeatureStats:
+        """Fold a batch stream into a running FeatureStats.
+
+        The device never holds more than one batch plus the carry; ragged
+        tails are padded to the first-seen batch shape so the whole
+        stream costs one jit trace.  ``feature_dim`` is only needed for
+        an empty stream (the zero statistic's shape).
+        """
+        if self.placement == "sharded":
+            from repro.launch.stats_engine import streaming_sharded_stats
+
+            return streaming_sharded_stats(
+                batches, self.num_classes, feature_dim=feature_dim,
+                **self._engine_kwargs(),
+            )
+
+        it = iter(batches)
+        first = next(it, None)
+        if first is None:
+            if feature_dim is None:
+                raise ValueError(
+                    "empty batch stream: pass feature_dim= for the zero statistic"
+                )
+            return FeatureStats.zeros(self.num_classes, feature_dim)
+
+        d = jnp.asarray(first[0]).shape[1]
+        stream = canonical_batch_stream(itertools.chain([first], it))
+
+        if self.use_kernel:
+            return self._fold_fused(stream, d)
+
+        carry = FeatureStats.zeros(self.num_classes, d, self.accum_dtype)
+        for fb, yb in stream:
+            carry = _fold_jnp(
+                carry, fb, yb, self.num_classes, accum_dtype=self.accum_dtype
+            )
+        return carry
+
+    def _fold_fused(
+        self, stream: Iterator[Tuple[Array, Array]], d: int
+    ) -> FeatureStats:
+        """Streaming fold through the carry/accumulate Pallas kernel.
+
+        The carry stays in the kernel's padded (M, N) layout across the
+        whole stream — updated in place via input-donation — and is
+        unpacked to (A, B, N) exactly once at the end.
+        """
+        from repro.kernels import (
+            client_stats_acc,
+            stats_carry_finalize,
+            stats_carry_init,
+        )
+
+        m, n = stats_carry_init(self.num_classes, d)
+        for fb, yb in stream:
+            m, n = client_stats_acc(m, n, fb, yb, interpret=self.interpret)
+        A, B, N = stats_carry_finalize(m, n, self.num_classes, d)
+        return FeatureStats(A=A, B=B, N=N)
+
+    # -- simulated-client cohorts -------------------------------------------
+
+    def from_cohort(
+        self,
+        clients: Sequence[ClientData],
+        *,
+        feature_dim: Optional[int] = None,
+    ) -> FeatureStats:
+        """Aggregate statistics over a cohort of simulated clients.
+
+        Each client is a (features, labels) pair or an iterator of such
+        batches.  The privacy boundary of a cohort is always the CLIENT
+        (the paper's protocol): with ``privacy="secure"``, per-client
+        statistics are pairwise-masked and summed regardless of
+        placement, so ``sharded`` changes only WHERE each client's sweep
+        runs (row-sharded over the mesh), never who gets masked.
+        A plain sharded cohort instead concatenates or streams everyone
+        through the mesh engine and reduces with one psum.
+        """
+        clients = list(clients)
+        if not clients:
+            raise ValueError("from_cohort() needs at least one client")
+        if self.secure:
+            from repro.core.secure_agg import secure_sum
+
+            # each client's own sweep is plain — masks exist between
+            # clients, not inside one client's computation
+            plain = self.replace(privacy="plain")
+            per_client = [
+                plain._single_source(c, feature_dim=feature_dim)
+                for c in clients
+            ]
+            return secure_sum(
+                per_client, base_seed=self.base_seed, mask_scale=self.mask_scale
+            )
+        if self.placement == "sharded":
+            from repro.launch.stats_engine import sharded_cohort_stats
+
+            return sharded_cohort_stats(
+                clients, self.num_classes, feature_dim=feature_dim,
+                **self._engine_kwargs(),
+            )
+        per_client = [
+            self.client_statistics(c, feature_dim=feature_dim) for c in clients
+        ]
+        return aggregate(per_client)
+
+    def _single_source(
+        self, client: ClientData, *, feature_dim: Optional[int] = None
+    ) -> FeatureStats:
+        """One source's statistics under the CURRENT placement knob."""
+        if _is_array_pair(client):
+            return self.from_arrays(jnp.asarray(client[0]), jnp.asarray(client[1]))
+        return self.from_batches(client, feature_dim=feature_dim)
+
+    def client_statistics(
+        self, client: ClientData, *, feature_dim: Optional[int] = None
+    ) -> FeatureStats:
+        """One client's (A, B, N) — local sweep regardless of placement.
+
+        This is what each party computes BEFORE any aggregation (or
+        masking) happens, so it is always a local computation; the
+        placement knob only governs how the cohort aggregate is formed.
+        """
+        if _is_array_pair(client):
+            f, y = client
+            if self.use_kernel:
+                return _stats_fused(
+                    jnp.asarray(f), jnp.asarray(y), self.num_classes,
+                    interpret=self.interpret,
+                )
+            return _stats_jnp(
+                jnp.asarray(f), jnp.asarray(y), self.num_classes,
+                accum_dtype=self.accum_dtype,
+            )
+        local = (
+            self
+            if self.placement == "local"
+            else self.replace(placement="local")
+        )
+        return local.from_batches(client, feature_dim=feature_dim)
+
+    def class_means(
+        self, features: Array, labels: Array
+    ) -> Tuple[Array, Array]:
+        """Per-class mean features and counts — the A/N slice.
+
+        Mean-only consumers (prototype baselines) skip the (d, d) Gram
+        matrix entirely on the jnp backend; the fused kernel is a
+        single k-sweep for all three statistics, so there it costs
+        nothing extra.  Empty classes keep a zero mean.
+        """
+        if self.use_kernel:
+            stats = self.from_arrays(features, labels)
+            A, N = stats.A, stats.N
+        else:
+            f = jnp.asarray(features).astype(self.accum_dtype)
+            onehot = jax.nn.one_hot(
+                labels, self.num_classes, dtype=self.accum_dtype
+            )
+            A, N = onehot.T @ f, jnp.sum(onehot, axis=0)
+        return A / jnp.maximum(N, 1.0)[:, None], N
+
+    def replace(self, **overrides) -> "StatsPipeline":
+        kwargs = dict(
+            backend=self.backend,
+            placement=self.placement,
+            privacy=self.privacy,
+            mesh=self.mesh,
+            client_axes=self.client_axes,
+            base_seed=self.base_seed,
+            mask_scale=self.mask_scale,
+            accum_dtype=self.accum_dtype,
+            interpret=self.interpret,
+        )
+        kwargs.update(overrides)
+        return StatsPipeline(self.num_classes, **kwargs)
+
+
+def class_conditional_moments(
+    pipeline: StatsPipeline, features: Array, labels: Array
+) -> Tuple[Array, Array, Array]:
+    """Per-class (mean (C, d), covariance (C, d, d), count (C,)).
+
+    What the moment-uploading baselines (CCVR et al.) need from a
+    client's features — derived from per-class FeatureStats sweeps of
+    the SAME pipeline instead of bespoke numpy loops, so their moment
+    math inherits the backend knob.  Each class subset is CENTERED
+    (float64 host mean) before its single-class sweep, so ``B`` is the
+    centred scatter matrix and  cov = B / (n − 1)  directly — the
+    uncentred identity (B − n μμᵀ) would cancel catastrophically in
+    f32 when the common-mode mean dominates the per-class spread.
+    Classes with < 1 (mean) / < 2 (cov) samples stay zero.
+    """
+    import numpy as np
+
+    feats = np.asarray(features)
+    y = np.asarray(labels)
+    C, d = pipeline.num_classes, feats.shape[1]
+    # single-class local sweep of the centred subset: B = scatter matrix
+    single = StatsPipeline(
+        1, backend=pipeline.backend, interpret=pipeline.interpret,
+        accum_dtype=pipeline.accum_dtype,
+    )
+    mu = np.zeros((C, d), feats.dtype)
+    cov = np.zeros((C, d, d), feats.dtype)
+    counts = np.zeros((C,), np.int64)
+    for c in range(C):
+        sel = feats[y == c]
+        n = len(sel)
+        counts[c] = n
+        if n < 1:
+            continue
+        m = sel.mean(axis=0, dtype=np.float64)
+        mu[c] = m
+        if n >= 2:
+            centered = (sel - m).astype(feats.dtype)
+            stats = single.from_arrays(
+                jnp.asarray(centered), jnp.zeros((n,), jnp.int32)
+            )
+            cov[c] = np.asarray(stats.B) / (n - 1)
+    return mu, cov, counts
+
+
+def _is_array_pair(client: ClientData) -> bool:
+    """A (features, labels) pair of array-likes — tuple OR list, both
+    historically accepted — vs a batch iterable."""
+    if isinstance(client, (tuple, list)) and len(client) == 2:
+        f = client[0]
+        return hasattr(f, "shape") and getattr(f, "ndim", 0) == 2
+    return False

@@ -11,11 +11,12 @@ is configuration-sensitive.
 
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.stats_pipeline import StatsPipeline, class_conditional_moments
 from repro.fl.backbone import Backbone
 from repro.fl.baselines.fedpft import _train_linear_head
 
@@ -36,20 +37,16 @@ def run_ccvr(
     d = backbone.feature_dim
 
     # --- clients upload per-class first+second moments (NOT SecureAgg-able:
-    # the server needs every client's own mean to combine covariances)
+    # the server needs every client's own mean to combine covariances).
+    # The moments come out of the statistics pipeline, same data path as
+    # FedCGS's own sweep.
+    pipeline = StatsPipeline(num_classes)
     mu_c = np.zeros((len(client_data), num_classes, d))
     cov_c = np.zeros((len(client_data), num_classes, d, d))
     n_c = np.zeros((len(client_data), num_classes), dtype=np.int64)
     for i, (x, y) in enumerate(client_data):
-        feats = np.asarray(backbone.features(jnp.asarray(x)))
-        y = np.asarray(y)
-        for c in range(num_classes):
-            sel = feats[y == c]
-            n_c[i, c] = len(sel)
-            if len(sel) >= 1:
-                mu_c[i, c] = sel.mean(axis=0)
-            if len(sel) >= 2:
-                cov_c[i, c] = np.cov(sel, rowvar=False)
+        feats = backbone.features(jnp.asarray(x))
+        mu_c[i], cov_c[i], n_c[i] = class_conditional_moments(pipeline, feats, y)
 
     # --- server: combine into global class-wise Gaussians (CCVR Eq. 3-4)
     synth_x, synth_y = [], []

@@ -132,18 +132,21 @@ def run_fedpft(
 ) -> float:
     """Full FedPFT: per-(client, class) GMM upload -> sample -> train head."""
     rng = np.random.default_rng(seed)
-    # --- clients: fit class-conditional GMMs on frozen features
+    # --- clients: fit class-conditional GMMs on frozen features.  GMM
+    # fitting consumes RAW features, not sufficient statistics, so the
+    # statistics pipeline has nothing to offer here; the >= 2 gating only
+    # needs per-class counts, which bincount gives in O(n).
     gmms: List[List[Optional[GMM]]] = []
     for ci, (x, y) in enumerate(client_data):
         feats = np.asarray(backbone.features(jnp.asarray(x)))
-        per_class: List[Optional[GMM]] = []
-        for c in range(num_classes):
-            sel = feats[np.asarray(y) == c]
-            per_class.append(
-                fit_gmm(sel, k_components, seed=seed + 31 * ci + c)
-                if len(sel) >= 2
-                else None
-            )
+        y_np = np.asarray(y)
+        counts = np.bincount(y_np, minlength=num_classes)
+        per_class: List[Optional[GMM]] = [
+            fit_gmm(feats[y_np == c], k_components, seed=seed + 31 * ci + c)
+            if counts[c] >= 2
+            else None
+            for c in range(num_classes)
+        ]
         gmms.append(per_class)
 
     # --- server: count-matched sampling, then head training

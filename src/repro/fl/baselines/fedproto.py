@@ -14,6 +14,7 @@ from typing import List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.stats_pipeline import StatsPipeline
 from repro.fl.backbone import Backbone
 from repro.fl.trainer import ClassifierModel, train_local
 from repro.optim import sgd
@@ -22,18 +23,17 @@ Dataset = Tuple[np.ndarray, np.ndarray]
 
 
 def _client_prototypes(
-    model: ClassifierModel, params, x: np.ndarray, y: np.ndarray, num_classes: int
+    model: ClassifierModel,
+    params,
+    x: np.ndarray,
+    y: np.ndarray,
+    pipeline: StatsPipeline,
 ) -> Tuple[np.ndarray, np.ndarray]:
-    feats = np.asarray(model.features(params, jnp.asarray(x)))
-    y = np.asarray(y)
-    protos = np.zeros((num_classes, feats.shape[1]))
-    counts = np.zeros(num_classes)
-    for c in range(num_classes):
-        sel = feats[y == c]
-        counts[c] = len(sel)
-        if len(sel):
-            protos[c] = sel.mean(axis=0)
-    return protos, counts
+    """Per-class mean features — the pipeline's A/N slice (no Gram
+    matrix; classes with no samples keep a zero prototype)."""
+    feats = model.features(params, jnp.asarray(x))
+    protos, counts = pipeline.class_means(feats, jnp.asarray(y).astype(jnp.int32))
+    return np.asarray(protos), np.asarray(counts)
 
 
 def run_fedproto(
@@ -52,6 +52,7 @@ def run_fedproto(
     opt = sgd(lr, momentum=0.5, weight_decay=5e-4)
     client_params = [model.init(seed + i) for i in range(len(client_data))]
     global_protos: Optional[jnp.ndarray] = None
+    pipeline = StatsPipeline(num_classes)
 
     for r in range(rounds):
         protos_sum = np.zeros((num_classes, backbone.feature_dim))
@@ -62,7 +63,7 @@ def run_fedproto(
                 epochs=local_epochs, seed=seed + 97 * r + i,
                 prototypes=global_protos, proto_lambda=proto_lambda if r else 0.0,
             )
-            p, c = _client_prototypes(model, client_params[i], x, y, num_classes)
+            p, c = _client_prototypes(model, client_params[i], x, y, pipeline)
             protos_sum += p * c[:, None]
             counts_sum += c
         global_protos = jnp.asarray(

@@ -9,6 +9,13 @@
 :func:`run_fedcgs_personalized` — one EXTRA download round: clients
 receive the global prototypes μ and fine-tune their whole local model
 with the feature-alignment regularizer (Eq. 12).
+
+All statistics flow through ONE data path —
+:class:`repro.core.stats_pipeline.StatsPipeline` — so the
+``use_kernel`` (fused Pallas sweep), ``distributed`` (mesh-sharded, one
+psum), and ``use_secure_agg`` (pairwise-mask aggregation) switches
+compose uniformly across the global AND personalized protocols instead
+of each entry point hand-rolling its own plumbing.
 """
 
 from __future__ import annotations
@@ -22,14 +29,8 @@ import numpy as np
 
 from repro.core.classifier import LinearHead, gnb_head
 from repro.core.expansion import FeatureExpansion
-from repro.core.secure_agg import secure_sum
-from repro.core.statistics import (
-    FeatureStats,
-    GlobalStatistics,
-    client_statistics,
-    client_statistics_fused,
-    derive_global,
-)
+from repro.core.statistics import FeatureStats, GlobalStatistics, derive_global
+from repro.core.stats_pipeline import StatsPipeline
 from repro.fl.backbone import Backbone
 from repro.fl.trainer import ClassifierModel, train_local
 from repro.optim import sgd
@@ -43,6 +44,24 @@ class FedCGSResult:
     stats: GlobalStatistics
     uploaded_floats_per_client: int
     accuracy: Optional[float] = None
+
+
+def _make_pipeline(
+    num_classes: int,
+    *,
+    use_kernel: bool = False,
+    distributed: bool = False,
+    secure: bool = False,
+    mesh=None,
+) -> StatsPipeline:
+    """fl-layer switches -> the pipeline's knob matrix."""
+    return StatsPipeline(
+        num_classes,
+        backend="fused" if use_kernel else "jnp",
+        placement="sharded" if distributed else "local",
+        privacy="secure" if secure else "plain",
+        mesh=mesh,
+    )
 
 
 def client_stats_pass(
@@ -62,20 +81,60 @@ def client_stats_pass(
     Pallas engine.  ``distributed=True`` additionally shards the batch
     over ``mesh``'s client axes (default: a host mesh over all local
     devices) and aggregates with one psum — the multi-device engine in
-    ``repro.launch.stats_engine``.
+    ``repro.launch.stats_engine``, reached through the pipeline.
     """
     feats = backbone.features(jnp.asarray(x))
     if expansion is not None:
         feats = expansion(feats)
-    if distributed:
-        from repro.launch.stats_engine import sharded_client_stats
+    pipeline = _make_pipeline(
+        num_classes, use_kernel=use_kernel, distributed=distributed, mesh=mesh
+    )
+    return pipeline.from_arrays(feats, jnp.asarray(y))
 
-        return sharded_client_stats(
-            feats, jnp.asarray(y), num_classes, mesh=mesh, use_kernel=use_kernel
-        )
-    if use_kernel:
-        return client_statistics_fused(feats, jnp.asarray(y), num_classes)
-    return client_statistics(feats, jnp.asarray(y), num_classes)
+
+def _lazy_client_batches(
+    backbone: Backbone,
+    x: np.ndarray,
+    y: np.ndarray,
+    expansion: Optional[FeatureExpansion],
+):
+    """One client as a single-batch iterator: features are extracted when
+    the pipeline CONSUMES this client, so only one client's feature
+    matrix is ever resident (the pre-pipeline loop's footprint)."""
+    def gen():
+        feats = backbone.features(jnp.asarray(x))
+        if expansion is not None:
+            feats = expansion(feats)
+        yield feats, jnp.asarray(y)
+
+    return gen()
+
+
+def aggregate_client_stats(
+    backbone: Backbone,
+    client_data: Sequence[Tuple[np.ndarray, np.ndarray]],
+    num_classes: int,
+    *,
+    expansion: Optional[FeatureExpansion] = None,
+    use_secure_agg: bool = True,
+    use_kernel: bool = False,
+    distributed: bool = False,
+    mesh=None,
+) -> Tuple[FeatureStats, int]:
+    """Rounds 1-2 of Algorithm 1 for a simulated cohort.
+
+    Returns the aggregated statistics and the per-client upload size
+    ((C+d)·d + C — a pure shape property, identical for every client).
+    """
+    pipeline = _make_pipeline(
+        num_classes, use_kernel=use_kernel, distributed=distributed,
+        secure=use_secure_agg, mesh=mesh,
+    )
+    cohort = [
+        _lazy_client_batches(backbone, x, y, expansion) for x, y in client_data
+    ]
+    agg = pipeline.from_cohort(cohort)
+    return agg, FeatureStats.upload_size(num_classes, agg.feature_dim)
 
 
 def run_fedcgs(
@@ -92,19 +151,11 @@ def run_fedcgs(
     mesh=None,
 ) -> FedCGSResult:
     """The full one-shot protocol over simulated clients."""
-    stats_list = [
-        client_stats_pass(
-            backbone, x, y, num_classes, expansion=expansion,
-            use_kernel=use_kernel, distributed=distributed, mesh=mesh,
-        )
-        for x, y in client_data
-    ]
-    if use_secure_agg:
-        agg: FeatureStats = secure_sum(stats_list)
-    else:
-        agg = stats_list[0]
-        for s in stats_list[1:]:
-            agg = agg + s
+    agg, uploaded = aggregate_client_stats(
+        backbone, client_data, num_classes,
+        expansion=expansion, use_secure_agg=use_secure_agg,
+        use_kernel=use_kernel, distributed=distributed, mesh=mesh,
+    )
     gstats = derive_global(agg)
     head = gnb_head(gstats, ridge=ridge)
 
@@ -118,7 +169,7 @@ def run_fedcgs(
     return FedCGSResult(
         head=head,
         stats=gstats,
-        uploaded_floats_per_client=stats_list[0].num_elements(),
+        uploaded_floats_per_client=uploaded,
         accuracy=acc,
     )
 
@@ -136,6 +187,10 @@ def run_fedcgs_personalized(
     weight_decay: float = 5e-4,
     batch_size: int = 128,
     seed: int = 0,
+    use_secure_agg: bool = True,
+    use_kernel: bool = False,
+    distributed: bool = False,
+    mesh=None,
 ) -> Tuple[List[float], GlobalStatistics]:
     """Personalized one-shot FL (paper Eq. 12 + Table 3 protocol).
 
@@ -143,12 +198,18 @@ def run_fedcgs_personalized(
     Round 2 (down): clients download μ and fine-tune the ENTIRE local
                     model with the prototype-alignment regularizer.
 
+    The statistics round goes through the same pipeline as
+    :func:`run_fedcgs`, so ``use_kernel``/``distributed``/
+    ``use_secure_agg`` behave identically here (the pre-pipeline version
+    silently ignored all of them).
+
     Returns per-client test accuracies and the global statistics.
     """
-    stats_list = [
-        client_stats_pass(backbone, x, y, num_classes) for x, y in client_data
-    ]
-    agg = secure_sum(stats_list)
+    agg, _ = aggregate_client_stats(
+        backbone, client_data, num_classes,
+        use_secure_agg=use_secure_agg, use_kernel=use_kernel,
+        distributed=distributed, mesh=mesh,
+    )
     gstats = derive_global(agg)
     prototypes = gstats.mu  # downloaded, then FIXED (unlike FedProto)
 

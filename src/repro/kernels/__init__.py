@@ -10,6 +10,22 @@ tests sweep against.  Kernels target TPU (BlockSpec / VMEM) and are
 validated with ``interpret=True`` on CPU.
 """
 
-from repro.kernels.ops import client_stats, gnb_logits, expand_features, flash_attention
+from repro.kernels.ops import (
+    client_stats,
+    client_stats_acc,
+    expand_features,
+    flash_attention,
+    gnb_logits,
+    stats_carry_finalize,
+    stats_carry_init,
+)
 
-__all__ = ["client_stats", "gnb_logits", "expand_features", "flash_attention"]
+__all__ = [
+    "client_stats",
+    "client_stats_acc",
+    "stats_carry_init",
+    "stats_carry_finalize",
+    "gnb_logits",
+    "expand_features",
+    "flash_attention",
+]

@@ -84,6 +84,103 @@ def client_stats(
     return A[:num_classes, :d], B[:d, :d], N
 
 
+# ---------------------------------------------------------------------------
+# Streaming carry: fold batches into a running (M, N) without allocating
+# fresh outputs per step.  The carry lives in the kernel's padded layout —
+# M (d_pad + c_pad, d_pad) stacks [B-upper-triangle | A], N is (1, c_pad) —
+# so every fold is ONE pallas_call whose carry operands are donated
+# (``input_output_aliases``) to the outputs.
+# ---------------------------------------------------------------------------
+
+
+def _padded_dims(num_classes: int, feature_dim: int, block_d: int) -> Tuple[int, int]:
+    d_pad = ((feature_dim + block_d - 1) // block_d) * block_d
+    c_pad = max(block_d, ((num_classes + block_d - 1) // block_d) * block_d)
+    return d_pad, c_pad
+
+
+def stats_carry_init(
+    num_classes: int, feature_dim: int, *, block_d: int = stats_kernel.BLOCK_D
+) -> Tuple[Array, Array]:
+    """Zero carry buffers in the kernel's padded (M, N) layout."""
+    d_pad, c_pad = _padded_dims(num_classes, feature_dim, block_d)
+    return (
+        jnp.zeros((d_pad + c_pad, d_pad), jnp.float32),
+        jnp.zeros((1, c_pad), jnp.float32),
+    )
+
+
+def _client_stats_acc_impl(
+    m_carry: Array,
+    n_carry: Array,
+    features: Array,
+    labels: Array,
+    *,
+    interpret: bool,
+    block_d: int,
+    block_n: int,
+) -> Tuple[Array, Array]:
+    d_pad = m_carry.shape[1]
+    f = _pad_to(_pad_to(features, 0, block_n), 1, block_d)
+    assert f.shape[1] == d_pad, (f.shape, d_pad)
+    y = _pad_to(labels.astype(jnp.int32)[:, None], 0, block_n, value=-1)
+    return stats_kernel.fused_stats_acc(
+        m_carry, n_carry, f, y, block_d=block_d, block_n=block_n,
+        interpret=interpret,
+    )
+
+
+_ACC_STATIC = ("interpret", "block_d", "block_n")
+_acc_jit = jax.jit(_client_stats_acc_impl, static_argnames=_ACC_STATIC)
+_acc_jit_donating = jax.jit(
+    _client_stats_acc_impl, static_argnames=_ACC_STATIC, donate_argnums=(0, 1)
+)
+
+
+def client_stats_acc(
+    m_carry: Array,
+    n_carry: Array,
+    features: Array,
+    labels: Array,
+    *,
+    interpret: bool | None = None,
+    block_d: int = stats_kernel.BLOCK_D,
+    block_n: int = stats_kernel.BLOCK_N,
+) -> Tuple[Array, Array]:
+    """Fold one (features, labels) batch into a running padded carry.
+
+    features: (n, d) any float dtype with d matching the carry's logical
+    feature dim; labels: (n,) int32 — padded rows get label −1 inside and
+    contribute zero to every statistic.  One jit trace per batch shape;
+    on TPU the carry buffers are donated so the fold is in-place.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    fold = _acc_jit_donating if _on_tpu() else _acc_jit
+    return fold(
+        m_carry, n_carry, features, labels,
+        interpret=interpret, block_d=block_d, block_n=block_n,
+    )
+
+
+def stats_carry_finalize(
+    m_carry: Array, n_carry: Array, num_classes: int, feature_dim: int
+) -> Tuple[Array, Array, Array]:
+    """Unpack a padded (M, N) carry into unpadded (A, B, N).
+
+    Only M's upper triangle was ever accumulated (B is symmetric); the
+    mirror + slicing happen here, once per stream, not per batch.
+    """
+    d_pad = m_carry.shape[1]
+    upper = jnp.triu(m_carry[:d_pad])
+    B = upper + jnp.triu(m_carry[:d_pad], 1).T
+    A = m_carry[d_pad:]
+    return (
+        A[:num_classes, :feature_dim],
+        B[:feature_dim, :feature_dim],
+        n_carry[0, :num_classes],
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def gnb_logits(
     features: Array, w: Array, b: Array, *, interpret: bool | None = None

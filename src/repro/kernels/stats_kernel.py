@@ -250,6 +250,144 @@ def fused_stats(
     return A, B, N
 
 
+def _fused_acc_kernel(
+    row_ref,
+    col_ref,
+    f_i_ref,
+    f_j_ref,
+    labels_ref,
+    m_carry_ref,
+    n_carry_ref,
+    m_ref,
+    n_ref,
+    *,
+    d_tiles: int,
+):
+    """One (tile, k) step of the STREAMING fused engine.
+
+    Identical tile walk to :func:`_fused_kernel`, but the k==0 step seeds
+    each output block from the carry instead of zeros, so one kernel call
+    folds a whole batch into a running (M, N).  The wrapper aliases the
+    carry buffers onto the outputs (``input_output_aliases``) so the fold
+    updates the running statistic in place — no fresh (d+C, d) allocation
+    per batch step.
+    """
+    g, k = pl.program_id(0), pl.program_id(1)
+    i, j = row_ref[g], col_ref[g]
+    is_gram = i < d_tiles
+    block_c = f_j_ref.shape[1]
+
+    def _match():
+        labels = labels_ref[...]  # (nk, 1) int32
+        class_base = (i - d_tiles) * block_c
+        cls = class_base + jax.lax.broadcasted_iota(jnp.int32, (1, block_c), 1)
+        return labels == cls
+
+    @pl.when(k == 0)
+    def _init():
+        m_ref[...] = m_carry_ref[...]
+
+    left = jax.lax.cond(
+        is_gram,
+        lambda: f_i_ref[...],
+        lambda: _match().astype(f_i_ref.dtype),
+    )
+    m_ref[...] += jax.lax.dot_general(
+        left,
+        f_j_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(jnp.logical_and(~is_gram, j == 0))
+    def _counts():
+        @pl.when(k == 0)
+        def _init_n():
+            n_ref[...] = n_carry_ref[...]
+
+        n_ref[...] += jnp.sum(_match().astype(jnp.float32), axis=0, keepdims=True)
+
+
+def fused_stats_acc(
+    m_carry: Array,
+    n_carry: Array,
+    features: Array,
+    labels: Array,
+    *,
+    block_d: int = BLOCK_D,
+    block_n: int = BLOCK_N,
+    interpret: bool = False,
+) -> tuple[Array, Array]:
+    """Fold one pre-padded batch into a running stacked statistic.
+
+    m_carry: (d + C, d) f32 — rows [0, d) hold B's UPPER triangle (the
+    lower triangle is never read or written), rows [d, d+C) hold A.
+    n_carry: (1, C) f32 per-class counts.  features/labels follow the
+    :func:`fused_stats` padding contract; C and d are inferred from the
+    carry shapes.  Returns the updated (m, n), still in carry layout —
+    the carry inputs are donated to the outputs, so a streaming loop
+    reuses one buffer across every batch step.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    n, d = features.shape
+    num_classes = n_carry.shape[1]
+    assert labels.shape == (n, 1), labels.shape
+    assert n % block_n == 0 and d % block_d == 0, (n, d)
+    assert num_classes % block_d == 0, num_classes
+    assert m_carry.shape == (d + num_classes, d), m_carry.shape
+    d_tiles = d // block_d
+    c_tiles = num_classes // block_d
+    row_map, col_map = _tile_maps(d_tiles, c_tiles)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(len(row_map), n // block_n),
+        in_specs=[
+            pl.BlockSpec(
+                (block_n, block_d),
+                lambda g, k, row, col: (k, jnp.minimum(row[g], d_tiles - 1)),
+            ),
+            pl.BlockSpec(
+                (block_n, block_d), lambda g, k, row, col: (k, col[g])
+            ),
+            pl.BlockSpec((block_n, 1), lambda g, k, row, col: (k, 0)),
+            # carry blocks mirror the output blocks exactly
+            pl.BlockSpec(
+                (block_d, block_d), lambda g, k, row, col: (row[g], col[g])
+            ),
+            pl.BlockSpec(
+                (1, block_d),
+                lambda g, k, row, col: (0, jnp.maximum(row[g] - d_tiles, 0)),
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec(
+                (block_d, block_d), lambda g, k, row, col: (row[g], col[g])
+            ),
+            pl.BlockSpec(
+                (1, block_d),
+                lambda g, k, row, col: (0, jnp.maximum(row[g] - d_tiles, 0)),
+            ),
+        ],
+    )
+    m, counts = pl.pallas_call(
+        functools.partial(_fused_acc_kernel, d_tiles=d_tiles),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((d + num_classes, d), jnp.float32),
+            jax.ShapeDtypeStruct((1, num_classes), jnp.float32),
+        ],
+        # inputs 0-1 are the scalar-prefetch tile maps, 2-4 the batch;
+        # 5 (m_carry) and 6 (n_carry) are donated in place to the outputs
+        input_output_aliases={5: 0, 6: 1},
+        interpret=interpret,
+    )(
+        jnp.asarray(row_map), jnp.asarray(col_map), features, features, labels,
+        m_carry, n_carry,
+    )
+    return m, counts
+
+
 def class_sum(
     features: Array,
     labels: Array,

@@ -1,37 +1,59 @@
 """Sharded FedCGS statistics engine (the fused kernel at mesh scale).
 
-One entry point, ``sharded_client_stats``, takes a feature batch — one
-huge client, or many simulated clients concatenated — shards the rows
-over the mesh's client axes, runs the fused single-pass Pallas engine
+The mesh placement cells of ``core.stats_pipeline.StatsPipeline`` live
+here.  ``sharded_client_stats`` takes a feature batch — one huge client,
+or many simulated clients concatenated — shards the rows over the
+mesh's client axes, runs the fused single-pass Pallas engine
 (``repro.kernels.client_stats``) on every shard, and realizes the
 paper's server aggregation as ONE ``psum`` over the FeatureStats tree.
 Partition-invariance (paper Table 4) is what makes the row-assignment
 arbitrary: any shard layout sums to the same global statistics.
 
-Shape hygiene lives here: rows are padded with label −1 / zero features
-to divide evenly across shards, and the padding provably contributes
-zero to A, B, and N (kernel masks label −1 in-register; the jnp
-fallback's one_hot maps it to all-zeros).
+``streaming_sharded_stats`` is the same contract for clients whose
+datasets never fit in device memory: each shard keeps a RUNNING
+FeatureStats carry, every batch is row-sharded and folded into the
+carry under shard_map with no collective at all, and a separate
+finalize step issues the single psum per cohort — one collective
+regardless of how many batches streamed through (asserted by a
+jaxpr collective-count in tests).  ``make_streaming_engine`` exposes
+the (init, fold, finalize) triple so tests can introspect the traces.
 
-``sharded_cohort_stats`` is the many-clients convenience: it
-concatenates per-client batches and delegates — the psum then IS the
-server's sum over clients, optionally with SecureAgg masks folded in
-(``secure=True``) so no unmasked per-shard statistic ever leaves its
-shard.
+Shape hygiene lives here: rows are padded with label −1 / zero features
+to divide evenly across shards (and, when streaming, ragged tail
+batches are padded up to the first-seen batch shape so the whole stream
+costs one fold trace).  The padding provably contributes zero to A, B,
+and N (kernel masks label −1 in-register; the jnp fallback's one_hot
+maps it to all-zeros).
+
+``sharded_cohort_stats`` is the many-clients entry point: clients are
+(features, labels) pairs OR per-client batch iterators; materialized
+cohorts are concatenated into one sharded sweep, while any iterator in
+the cohort routes the whole cohort through the streaming fold — the
+psum then IS the server's sum over clients, optionally with SecureAgg
+masks folded in (``secure=True``) so no unmasked per-shard statistic
+ever leaves its shard.
 """
 
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+import itertools
+from typing import Callable, Iterable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.federated import distributed_client_stats, masked_distributed_stats
+from repro.core.federated import (
+    apply_pair_masks,
+    distributed_client_stats,
+    masked_distributed_stats,
+    shard_index,
+    _local_stats,
+)
 from repro.core.statistics import FeatureStats
 from repro.launch.mesh import make_host_mesh
+from repro.sharding import shard_map
 
 Array = jax.Array
 
@@ -77,6 +99,7 @@ def sharded_client_stats(
     secure: bool = False,
     base_seed: int = 0,
     mask_scale: float = 1e3,
+    interpret: Optional[bool] = None,
 ) -> FeatureStats:
     """Global (A, B, N) for a row-sharded feature batch.
 
@@ -97,36 +120,237 @@ def sharded_client_stats(
         return masked_distributed_stats(
             f, y, num_classes, mesh,
             base_seed=base_seed, mask_scale=mask_scale,
-            client_axes=axes, use_kernel=use_kernel,
+            client_axes=axes, use_kernel=use_kernel, interpret=interpret,
         )
     return distributed_client_stats(
-        f, y, num_classes, mesh, client_axes=axes, use_kernel=use_kernel
+        f, y, num_classes, mesh,
+        client_axes=axes, use_kernel=use_kernel, interpret=interpret,
     )
 
 
-def sharded_cohort_stats(
-    client_batches: Sequence[Tuple[np.ndarray, np.ndarray]],
+# ---------------------------------------------------------------------------
+# Streaming: per-shard running FeatureStats, ONE psum per cohort.
+# ---------------------------------------------------------------------------
+
+
+def make_streaming_engine(
+    num_classes: int,
+    feature_dim: int,
+    mesh: Mesh,
+    *,
+    client_axes: Tuple[str, ...] = ("data",),
+    use_kernel: bool = True,
+    secure: bool = False,
+    base_seed: int = 0,
+    mask_scale: float = 1e3,
+    interpret: Optional[bool] = None,
+) -> Tuple[FeatureStats, Callable, Callable]:
+    """(carry0, fold, finalize) for the streaming sharded statistics path.
+
+    ``carry0`` holds one running statistic PER SHARD (leading shard
+    axis, sharded over the client axes).  ``fold(carry, f, y)``
+    row-shards a batch and folds each shard's local sweep into its own
+    carry — NO collective in its trace.  ``finalize(carry)`` masks each
+    shard's running statistic (if ``secure``) and reduces with the
+    cohort's single psum.  Exposed separately so tests can count
+    collectives in each jaxpr; ``streaming_sharded_stats`` is the
+    driver.  The carry layout is an implementation detail of the
+    triple: FeatureStats on the jnp backend, and the fused kernel's
+    padded in-place (M, N) carry (``kernels.client_stats_acc``) with
+    ``use_kernel=True`` — B's triangle mirror then happens once per
+    stream in finalize, not once per batch.
+    """
+    from repro.kernels.ops import (
+        _client_stats_acc_impl,
+        _padded_dims,
+        stats_carry_finalize,
+    )
+    from repro.kernels.stats_kernel import BLOCK_D, BLOCK_N
+
+    axes = tuple(a for a in client_axes if a in mesh.axis_names)
+    n_shards = _num_shards(mesh, axes)
+    shard_sharding = NamedSharding(mesh, P(axes))
+
+    if use_kernel:
+        d_pad, c_pad = _padded_dims(num_classes, feature_dim, BLOCK_D)
+        carry0 = (
+            jnp.zeros((n_shards, d_pad + c_pad, d_pad), jnp.float32),
+            jnp.zeros((n_shards, 1, c_pad), jnp.float32),
+        )
+        carry_spec = (P(axes), P(axes))
+
+        def fold_body(carry, f: Array, y: Array):
+            m, n = _client_stats_acc_impl(
+                carry[0][0], carry[1][0], f, y,
+                interpret=(jax.default_backend() != "tpu"
+                           if interpret is None else interpret),
+                block_d=BLOCK_D, block_n=BLOCK_N,
+            )
+            return m[None], n[None]
+
+        def unpack(carry) -> FeatureStats:
+            A, B, N = stats_carry_finalize(
+                carry[0][0], carry[1][0], num_classes, feature_dim
+            )
+            return FeatureStats(A=A, B=B, N=N)
+
+    else:
+        carry0 = FeatureStats(
+            A=jnp.zeros((n_shards, num_classes, feature_dim), jnp.float32),
+            B=jnp.zeros((n_shards, feature_dim, feature_dim), jnp.float32),
+            N=jnp.zeros((n_shards, num_classes), jnp.float32),
+        )
+        carry_spec = FeatureStats(A=P(axes), B=P(axes), N=P(axes))
+
+        def fold_body(carry: FeatureStats, f: Array, y: Array) -> FeatureStats:
+            local = _local_stats(f, y, num_classes, use_kernel=False)
+            return jax.tree_util.tree_map(
+                lambda c, l: c + l[None], carry, local
+            )
+
+        def unpack(carry: FeatureStats) -> FeatureStats:
+            return jax.tree_util.tree_map(lambda c: c[0], carry)
+
+    carry0 = jax.device_put(
+        carry0, jax.tree_util.tree_map(lambda _: shard_sharding, carry0)
+    )
+
+    fold = jax.jit(
+        shard_map(
+            fold_body, mesh=mesh,
+            in_specs=(carry_spec, P(axes), P(axes)),
+            out_specs=carry_spec,
+            check_rep=not use_kernel,  # pallas_call has no replication rule
+        ),
+        # donate the carry so the kernel's input_output_aliases is a true
+        # in-place update (CPU can't donate; avoid the warning there)
+        donate_argnums=(0,) if jax.default_backend() == "tpu" else (),
+    )
+
+    def finalize_body(carry) -> FeatureStats:
+        local = unpack(carry)
+        if secure:
+            local = apply_pair_masks(
+                local, shard_index(mesh, axes), n_shards,
+                base_seed=base_seed, mask_scale=mask_scale,
+            )
+        return jax.lax.psum(local, axes)  # THE one collective of the cohort
+
+    finalize = jax.jit(
+        shard_map(
+            finalize_body, mesh=mesh,
+            in_specs=(carry_spec,),
+            out_specs=FeatureStats(A=P(), B=P(), N=P()),
+        )
+    )
+    return carry0, fold, finalize
+
+
+def streaming_sharded_stats(
+    batches: Iterable[Tuple[np.ndarray, np.ndarray]],
     num_classes: int,
     *,
+    feature_dim: Optional[int] = None,
     mesh: Optional[Mesh] = None,
     client_axes: Tuple[str, ...] = ("data",),
     use_kernel: bool = True,
     secure: bool = False,
     base_seed: int = 0,
     mask_scale: float = 1e3,
+    interpret: Optional[bool] = None,
+) -> FeatureStats:
+    """Global (A, B, N) from a stream of (features, labels) batches.
+
+    Device memory holds one row-sharded batch plus the per-shard carry;
+    every fold step is collective-free and the single psum happens once,
+    at the end — the ROADMAP's "streaming-client sharding" shape.
+    Batches after the first are padded (zero rows, label −1) up to the
+    first batch's padded row count, so any number of equal-shaped
+    batches plus a ragged tail costs exactly one fold trace.
+    """
+    from repro.core.stats_pipeline import canonical_batch_stream
+
+    mesh = mesh if mesh is not None else make_host_mesh(1)
+    axes = tuple(a for a in client_axes if a in mesh.axis_names)
+    n_shards = _num_shards(mesh, axes)
+    f_sh, y_sh = batch_shardings(mesh, axes)
+
+    it = iter(batches)
+    first = next(it, None)
+    if first is None:
+        if feature_dim is None:
+            raise ValueError(
+                "empty batch stream: pass feature_dim= for the zero statistic"
+            )
+        return FeatureStats.zeros(num_classes, feature_dim)
+
+    d = jnp.asarray(first[0]).shape[1]
+    carry, fold, finalize = make_streaming_engine(
+        num_classes, d, mesh,
+        client_axes=client_axes, use_kernel=use_kernel, secure=secure,
+        base_seed=base_seed, mask_scale=mask_scale, interpret=interpret,
+    )
+
+    def shard_divisible():
+        # rows must divide the shard count BEFORE the one-trace-per-shape
+        # canonicalization; the pad delta stays a shard multiple, so the
+        # canonical row count divides evenly too
+        for fb, yb in itertools.chain([first], it):
+            yield _pad_rows(
+                jnp.asarray(fb), jnp.asarray(yb).astype(jnp.int32), n_shards
+            )
+
+    for fb, yb in canonical_batch_stream(shard_divisible()):
+        fb = jax.device_put(fb, f_sh)
+        yb = jax.device_put(yb, y_sh)
+        carry = fold(carry, fb, yb)
+    return finalize(carry)
+
+
+def sharded_cohort_stats(
+    clients: Sequence,
+    num_classes: int,
+    *,
+    feature_dim: Optional[int] = None,
+    mesh: Optional[Mesh] = None,
+    client_axes: Tuple[str, ...] = ("data",),
+    use_kernel: bool = True,
+    secure: bool = False,
+    base_seed: int = 0,
+    mask_scale: float = 1e3,
+    interpret: Optional[bool] = None,
 ) -> FeatureStats:
     """Aggregate statistics for MANY simulated clients in one collective.
 
-    Client batches are concatenated and row-sharded; partition
-    invariance guarantees the psum equals the per-client sum the paper's
-    server loop would compute.
+    Each client is a (features, labels) pair or an iterator of such
+    batches.  A fully-materialized cohort is concatenated and row-
+    sharded in one sweep; a cohort containing any batch iterator streams
+    every client's batches through the per-shard running fold instead —
+    either way partition invariance guarantees the single psum equals
+    the per-client sum the paper's server loop would compute.
     """
-    feats = jnp.concatenate([jnp.asarray(f) for f, _ in client_batches], axis=0)
-    labels = jnp.concatenate(
-        [jnp.asarray(y).astype(jnp.int32) for _, y in client_batches], axis=0
-    )
-    return sharded_client_stats(
-        feats, labels, num_classes,
+    from repro.core.stats_pipeline import _is_array_pair
+
+    kwargs = dict(
         mesh=mesh, client_axes=client_axes, use_kernel=use_kernel,
         secure=secure, base_seed=base_seed, mask_scale=mask_scale,
+        interpret=interpret,
+    )
+    clients = list(clients)
+    if all(_is_array_pair(c) for c in clients):
+        feats = jnp.concatenate([jnp.asarray(f) for f, _ in clients], axis=0)
+        labels = jnp.concatenate(
+            [jnp.asarray(y).astype(jnp.int32) for _, y in clients], axis=0
+        )
+        return sharded_client_stats(feats, labels, num_classes, **kwargs)
+
+    def batch_stream():
+        for c in clients:
+            if _is_array_pair(c):
+                yield c
+            else:
+                yield from c
+
+    return streaming_sharded_stats(
+        batch_stream(), num_classes, feature_dim=feature_dim, **kwargs
     )

@@ -150,6 +150,26 @@ def test_sharded_engine_matches_single_device():
     np.testing.assert_allclose(np.asarray(out.N), np.asarray(N0))
 
 
+def test_carry_kernel_streams_to_materialized_result():
+    """The accumulate-in variant (client_stats_acc): folding ragged
+    batches through the padded carry equals the one-shot fused sweep,
+    including B's exact symmetry after the single finalize mirror."""
+    from repro.kernels import client_stats_acc, stats_carry_finalize, stats_carry_init
+
+    n, d, c = 700, 130, 11
+    f, y = _data(n, d, c, seed=8)
+    m, cnt = stats_carry_init(c, d)
+    for s in range(0, n, 256):  # 256, 256, 188 — ragged tail
+        m, cnt = client_stats_acc(m, cnt, f[s : s + 256], y[s : s + 256])
+    A, B, N = stats_carry_finalize(m, cnt, c, d)
+    A0, B0, N0 = client_stats(f, y, c)
+    np.testing.assert_allclose(np.asarray(A), np.asarray(A0), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(B), np.asarray(B0), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(N), np.asarray(N0))
+    np.testing.assert_array_equal(np.asarray(B), np.asarray(B).T)
+    assert float(jnp.sum(N)) == n
+
+
 def test_sharded_cohort_equals_per_client_sum():
     from repro.launch.stats_engine import sharded_cohort_stats
 

@@ -1,0 +1,267 @@
+"""StatsPipeline: the knob matrix (backend × placement × privacy ×
+ingest shape) must land on the SAME statistics as the materialized
+one-shot sweep, and the streaming sharded path must cost exactly one
+collective per cohort.
+
+- hypothesis property: any batch split (ragged tails included), kernel
+  on/off, secure on/off — streaming cohorts equal ``client_statistics``
+  on the concatenated data;
+- deterministic matrix sweep for the bare-env (no hypothesis) case;
+- collective-count check: the streaming fold's jaxpr contains ZERO
+  psums, the finalize exactly ONE — so batch count never changes the
+  communication bill;
+- multi-shard streaming-equals-materialized equivalence runs in a
+  subprocess with 8 simulated devices (the dry-run flag must not leak).
+"""
+
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import optional_hypothesis, subprocess_env
+
+given, settings, st = optional_hypothesis()
+
+from repro.core.statistics import client_statistics
+from repro.core.stats_pipeline import (
+    StatsPipeline,
+    class_conditional_moments,
+)
+
+
+def _random_data(n, d, c, seed):
+    rng = np.random.default_rng(seed)
+    return (
+        rng.standard_normal((n, d)).astype(np.float32),
+        rng.integers(0, c, n).astype(np.int32),
+    )
+
+
+def _split_batches(x, y, cuts):
+    parts = np.split(np.arange(len(y)), cuts)
+    return [(x[p], y[p]) for p in parts if len(p)]
+
+
+def _assert_stats_close(got, want, atol=1e-3, n_atol=0.0):
+    """Plain-summation N is exact; SecureAgg cancellation leaves float
+    dust on every leaf, so secure cells pass n_atol > 0."""
+    np.testing.assert_allclose(np.asarray(got.A), np.asarray(want.A),
+                               rtol=1e-4, atol=atol)
+    np.testing.assert_allclose(np.asarray(got.B), np.asarray(want.B),
+                               rtol=1e-4, atol=atol)
+    np.testing.assert_allclose(np.asarray(got.N), np.asarray(want.N),
+                               atol=n_atol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(30, 180),
+    d=st.integers(3, 24),
+    c=st.integers(2, 6),
+    m=st.integers(1, 5),
+    use_kernel=st.booleans(),
+    secure=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_streaming_cohort_equals_materialized(n, d, c, m, use_kernel, secure, seed):
+    """Streaming (any split, ragged tail, kernel on/off, secure on/off)
+    == client_statistics on the concatenated data."""
+    x, y = _random_data(n, d, c, seed)
+    want = client_statistics(jnp.asarray(x), jnp.asarray(y), c)
+
+    rng = np.random.default_rng(seed + 1)
+    cuts = np.sort(rng.choice(np.arange(1, n), size=min(m - 1, n - 1),
+                              replace=False))
+    batches = _split_batches(x, y, cuts)
+    pipeline = StatsPipeline(
+        c,
+        backend="fused" if use_kernel else "jnp",
+        privacy="secure" if secure else "plain",
+        mask_scale=10.0,
+    )
+    # each split piece doubles as one client's batch iterator: client i
+    # streams its rows in two ragged sub-batches
+    clients = [
+        iter([(f[: len(f) // 2 + 1], lbl[: len(f) // 2 + 1]),
+              (f[len(f) // 2 + 1 :], lbl[len(f) // 2 + 1 :])])
+        for f, lbl in batches
+    ]
+    got = pipeline.from_cohort(clients, feature_dim=d)
+    # secure aggregation cancels masks only up to float associativity
+    atol = 5e-2 if secure else 1e-3
+    _assert_stats_close(got, want, atol=atol, n_atol=atol if secure else 0.0)
+
+
+KNOB_MATRIX = [
+    (backend, placement, privacy)
+    for backend in ("jnp", "fused")
+    for placement in ("local", "sharded")
+    for privacy in ("plain", "secure")
+]
+
+
+@pytest.mark.parametrize("backend,placement,privacy", KNOB_MATRIX)
+def test_knob_matrix_cell_matches_materialized(backend, placement, privacy):
+    """Every cell of the matrix, cohort + streaming ingest, equals the
+    materialized one-shot reference sweep."""
+    n, d, c = 210, 18, 5
+    x, y = _random_data(n, d, c, seed=7)
+    want = client_statistics(jnp.asarray(x), jnp.asarray(y), c)
+    pipeline = StatsPipeline(
+        c, backend=backend, placement=placement, privacy=privacy,
+        mask_scale=10.0,
+    )
+    secure = privacy == "secure"
+    atol = 5e-2 if secure else 1e-3
+    n_atol = atol if secure else 0.0
+
+    got_arrays = pipeline.from_arrays(jnp.asarray(x), jnp.asarray(y))
+    if not secure or placement == "sharded":
+        # local from_arrays has a single party: secure is aggregation-time
+        _assert_stats_close(got_arrays, want, atol=atol, n_atol=n_atol)
+
+    clients = _split_batches(x, y, [60, 140])
+    got_cohort = pipeline.from_cohort(clients)
+    _assert_stats_close(got_cohort, want, atol=atol, n_atol=n_atol)
+
+    streams = [iter([(f[:37], lbl[:37]), (f[37:], lbl[37:])])
+               for f, lbl in clients]
+    got_stream = pipeline.from_cohort(streams, feature_dim=d)
+    _assert_stats_close(got_stream, want, atol=atol, n_atol=n_atol)
+
+
+def test_from_batches_single_trace_per_shape():
+    """Ragged tails are padded to the first batch shape: the whole
+    stream costs ONE fold trace (trace-count check on the jit cache)."""
+    from repro.core.stats_pipeline import _fold_jnp
+
+    # shape chosen to be unique in the suite: the check counts NEW cache
+    # entries on the shared jitted fold, so a colliding (batch, d, C)
+    # elsewhere would make it vacuous
+    n, d, c = 300, 13, 9
+    x, y = _random_data(n, d, c, seed=3)
+    misses_before = _fold_jnp._cache_size()
+    out = StatsPipeline(c).from_batches(
+        (x[i : i + 64], y[i : i + 64]) for i in range(0, n, 64)
+    )
+    new_traces = _fold_jnp._cache_size() - misses_before
+    assert new_traces == 1, f"expected 1 fold trace, got {new_traces}"
+    want = client_statistics(jnp.asarray(x), jnp.asarray(y), c)
+    _assert_stats_close(out, want)
+
+
+def _count_collectives(jaxpr):
+    """psum eqns (shard_map rewrites them to psum2 on jax 0.4.x),
+    recursively through sub-jaxprs."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name.startswith("psum"):
+            n += 1
+        for v in eqn.params.values():
+            subs = jax.tree_util.tree_leaves(
+                v,
+                is_leaf=lambda x: isinstance(
+                    x, (jax.core.Jaxpr, jax.core.ClosedJaxpr)
+                ),
+            )
+            for sub in subs:
+                if isinstance(sub, jax.core.ClosedJaxpr):
+                    n += _count_collectives(sub.jaxpr)
+                elif isinstance(sub, jax.core.Jaxpr):
+                    n += _count_collectives(sub)
+    return n
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("secure", [False, True])
+def test_streaming_sharded_is_one_psum_per_cohort(secure, use_kernel):
+    """The fold trace holds zero collectives (both carry layouts: the
+    jnp FeatureStats fold AND the fused in-place (M, N) fold); finalize
+    holds exactly one — so the communication bill is independent of the
+    batch count."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.stats_engine import make_streaming_engine
+
+    mesh = make_host_mesh(1)
+    carry, fold, finalize = make_streaming_engine(
+        5, 16, mesh, use_kernel=use_kernel, secure=secure, mask_scale=10.0
+    )
+    f = jnp.zeros((8, 16))
+    y = jnp.zeros((8,), jnp.int32)
+    assert _count_collectives(jax.make_jaxpr(fold)(carry, f, y).jaxpr) == 0
+    assert _count_collectives(jax.make_jaxpr(finalize)(carry).jaxpr) == 1
+
+
+def test_class_conditional_moments_match_numpy():
+    n, d, c = 160, 9, 4
+    x, y = _random_data(n, d, c, seed=11)
+    y[y == 3] = 0  # leave class 3 empty
+    mu, cov, counts = class_conditional_moments(
+        StatsPipeline(c), jnp.asarray(x), y
+    )
+    for cls in range(c):
+        sel = x[y == cls]
+        assert counts[cls] == len(sel)
+        if len(sel) >= 1:
+            np.testing.assert_allclose(mu[cls], sel.mean(axis=0),
+                                       rtol=1e-4, atol=1e-4)
+        if len(sel) >= 2:
+            np.testing.assert_allclose(cov[cls], np.cov(sel, rowvar=False),
+                                       rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(mu[3], 0.0)
+    np.testing.assert_allclose(cov[3], 0.0)
+
+
+_SUBPROCESS_BODY = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core.statistics import client_statistics
+    from repro.core.stats_pipeline import StatsPipeline
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.stats_engine import streaming_sharded_stats
+
+    assert len(jax.devices()) == 8
+    mesh = make_host_mesh(2)  # (data=4, model=2): a real >1-shard layout
+    rng = np.random.default_rng(0)
+    n, d, c = 250, 20, 6
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    y = rng.integers(0, c, n).astype(np.int32)
+    want = client_statistics(jnp.asarray(x), jnp.asarray(y), c)
+
+    # streaming == materialized on a 4-shard mesh, plain and secure
+    for secure in (False, True):
+        out = streaming_sharded_stats(
+            ((x[i:i+64], y[i:i+64]) for i in range(0, n, 64)),
+            c, mesh=mesh, use_kernel=False, secure=secure, mask_scale=10.0,
+        )
+        atol = 5e-2 if secure else 1e-3
+        np.testing.assert_allclose(np.asarray(out.A), np.asarray(want.A), atol=atol)
+        np.testing.assert_allclose(np.asarray(out.B), np.asarray(want.B), atol=atol)
+        np.testing.assert_allclose(np.asarray(out.N), np.asarray(want.N), atol=1e-3)
+
+    # and via the pipeline's sharded streaming cell
+    out = StatsPipeline(c, placement="sharded", mesh=mesh).from_batches(
+        (x[i:i+64], y[i:i+64]) for i in range(0, n, 64)
+    )
+    np.testing.assert_allclose(np.asarray(out.A), np.asarray(want.A), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(out.N), np.asarray(want.N), atol=1e-5)
+    print("STREAMING_MULTIDEVICE_OK")
+    """
+)
+
+
+def test_streaming_sharded_multidevice_subprocess():
+    proc = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_BODY],
+        capture_output=True, text=True, timeout=300,
+        env=subprocess_env(),
+        cwd="/root/repo",
+    )
+    assert "STREAMING_MULTIDEVICE_OK" in proc.stdout, proc.stderr[-2000:]
