@@ -7,17 +7,30 @@
 2. GNB ridge sensitivity: the head's single numerical knob.
 3. Backbone ladder (paper Table 5 analogue): stronger frozen features →
    better FedCGS accuracy, same statistics machinery.
+4. Dropout-recovery cost curve: K=16 / t=9 rounds with 0..K−t clients
+   dropped — wall-clock of masking + Shamir recovery and the recovered
+   sum's deviation from the plain survivor sum, per dropout rate.  The
+   curve is emitted to ``secureagg_dropout.json`` (CSV rows too).
 """
 
 from __future__ import annotations
+
+import json
+import time
 
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Reporter, make_world
 from repro.core.classifier import gnb_head
-from repro.core.secure_agg import secure_sum
+from repro.core.secure_agg import (
+    masked_survivor_views,
+    recover_round,
+    secure_sum,
+    setup_round,
+)
 from repro.core.statistics import (
+    aggregate,
     centralized_statistics,
     derive_global,
     statistics_deviation,
@@ -25,6 +38,75 @@ from repro.core.statistics import (
 from repro.data import dirichlet_partition
 from repro.fl.backbone import BACKBONES, make_backbone
 from repro.fl.fedcgs import client_stats_pass, run_fedcgs
+
+
+def _dropout_recovery_curve(
+    reporter: Reporter,
+    client_stats,
+    *,
+    threshold: int,
+    base_seed: int,
+    mask_scale: float = 10.0,
+    json_path: str | None = "secureagg_dropout.json",
+) -> None:
+    """Recovery cost + exactness vs. dropout rate for one K-client round."""
+    k = len(client_stats)
+    setup = setup_round(k, threshold, base_seed=base_seed)
+    rng = np.random.default_rng(base_seed)
+    curve = []
+    for n_drop in range(0, k - threshold + 1):
+        dropped = sorted(rng.choice(k, size=n_drop, replace=False).tolist())
+        survivors = [i for i in range(k) if i not in set(dropped)]
+        plain = aggregate([client_stats[i] for i in survivors])
+
+        t0 = time.perf_counter()
+        views = masked_survivor_views(
+            client_stats, survivors, k,
+            base_seed=base_seed, mask_scale=mask_scale,
+        )
+        jnp.asarray(views[-1].A).block_until_ready()
+        mask_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        recovered = recover_round(
+            views, survivors, setup, mask_scale=mask_scale
+        )
+        jnp.asarray(recovered.A).block_until_ready()
+        recover_s = time.perf_counter() - t0
+
+        err = float(
+            jnp.linalg.norm(recovered.A - plain.A)
+            / (jnp.linalg.norm(plain.A) + 1e-12)
+        )
+        rate = n_drop / k
+        tag = f"drop{n_drop}"
+        reporter.add("ablate_dropout", tag, "dropout_rate", rate)
+        reporter.add("ablate_dropout", tag, "mask_wall_s", mask_s)
+        reporter.add("ablate_dropout", tag, "recover_wall_s", recover_s)
+        reporter.add("ablate_dropout", tag, "rel_err_A", err)
+        curve.append(
+            {
+                "num_dropped": n_drop,
+                "dropout_rate": rate,
+                "dropped": dropped,
+                "mask_wall_s": mask_s,
+                "recover_wall_s": recover_s,
+                "rel_err_A": err,
+            }
+        )
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(
+                {
+                    "num_clients": k,
+                    "threshold": threshold,
+                    "mask_scale": mask_scale,
+                    "curve": curve,
+                },
+                fh,
+                indent=2,
+            )
+        print(f"# wrote {json_path} ({len(curve)} dropout rates)")
 
 
 def run(reporter: Reporter, *, quick: bool = False, seed: int = 0) -> None:
@@ -55,6 +137,15 @@ def run(reporter: Reporter, *, quick: bool = False, seed: int = 0) -> None:
         reporter.add("ablate_secagg", tag, "delta_mu", float(dmu))
         reporter.add("ablate_secagg", tag, "delta_sigma", float(dsig))
         reporter.add("ablate_secagg", tag, "acc", acc)
+
+    # --- 1b. dropout-recovery cost curve (K=16, t=9) -------------------
+    parts16 = dirichlet_partition(y, 16, 0.3, seed=seed + 1)
+    stats16 = [
+        client_stats_pass(world.backbone, x[p], y[p], c) for p in parts16
+    ]
+    _dropout_recovery_curve(
+        reporter, stats16, threshold=9, base_seed=seed,
+    )
 
     # --- 2. ridge sensitivity ------------------------------------------
     for ridge in (1e-8, 1e-6, 1e-4, 1e-2, 1.0):

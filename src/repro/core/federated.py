@@ -24,6 +24,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.statistics import FeatureStats
@@ -67,6 +68,7 @@ def apply_pair_masks(
     *,
     base_seed: int = 0,
     mask_scale: float = 1e3,
+    seeds: Optional[np.ndarray] = None,
 ) -> FeatureStats:
     """Add this shard's pairwise-cancelling SecureAgg masks to ``stat``.
 
@@ -75,13 +77,22 @@ def apply_pair_masks(
     (up to float associativity).  Usable inside any shard_map body that
     wants to mask BEFORE a psum — both the one-shot and the streaming
     engines route through here.
+
+    Mask seeds come from ``secure_agg.pair_seed_matrix`` (the DH-agreed
+    per-pair seeds, embedded as a trace constant), so a host-side
+    ``recover_partial_sum`` regenerates a lost shard's masks
+    bit-identically to what this traced body applied.  Callers tracing
+    this inside a shard_map body should precompute the matrix once at
+    closure-build time and pass it via ``seeds=``.
     """
+    if seeds is None:
+        from repro.core.secure_agg import pair_seed_matrix
+
+        seeds = pair_seed_matrix(base_seed, n_shards)
+    seeds = jnp.asarray(np.asarray(seeds))  # (K, K) u32 trace constant
 
     def add_pair_mask(s, other):
-        key = jax.random.fold_in(
-            jax.random.fold_in(jax.random.key(base_seed), jnp.minimum(me, other)),
-            jnp.maximum(me, other),
-        )
+        key = jax.random.key(seeds[me, other])
         leaves, treedef = jax.tree_util.tree_flatten(s)
         keys = jax.random.split(key, len(leaves))
         sign = jnp.where(me < other, 1.0, -1.0)
@@ -97,6 +108,23 @@ def apply_pair_masks(
     return jax.lax.fori_loop(0, n_shards, body, stat)
 
 
+def drop_shard_contribution(
+    stat: FeatureStats, me: Array, dropped_shards: Tuple[int, ...]
+) -> FeatureStats:
+    """Zero ``stat`` on shards in ``dropped_shards`` (inside shard_map).
+
+    Models a shard that went dark mid-round: its (masked) contribution
+    never reaches the psum.  ``dropped_shards`` is static, so surviving
+    shards trace to a no-op.
+    """
+    if not dropped_shards:
+        return stat
+    lost = jnp.isin(me, jnp.asarray(dropped_shards))
+    return jax.tree_util.tree_map(
+        lambda leaf: jnp.where(lost, jnp.zeros_like(leaf), leaf), stat
+    )
+
+
 def distributed_client_stats(
     features: Array,
     labels: Array,
@@ -106,21 +134,33 @@ def distributed_client_stats(
     client_axes: Tuple[str, ...] = ("data",),
     use_kernel: bool = False,
     interpret: Optional[bool] = None,
+    dropped_shards: Tuple[int, ...] = (),
 ) -> FeatureStats:
     """Global (A, B, N) from batch-sharded (features, labels).
 
     features: (n, d) sharded over ``client_axes``; labels: (n,).
     Returns fully-replicated global statistics — every shard (every
     "client") holds the aggregate, which is what the one-extra-download
-    personalization round distributes anyway.
+    personalization round distributes anyway.  ``dropped_shards`` models
+    shards lost mid-round: their rows contribute nothing, so the result
+    is the exact statistics of the surviving shards' data.
     """
     axes = tuple(a for a in client_axes if a in mesh.axis_names)
+    dropped = tuple(sorted({int(d) for d in dropped_shards}))
+    if dropped:
+        from repro.core.secure_agg import round_plan
+
+        n_shards = 1
+        for a in axes:
+            n_shards *= mesh.shape[a]
+        round_plan(n_shards, dropped, secure=False)  # reject bogus ids
 
     def shard_fn(f_shard: Array, y_shard: Array) -> FeatureStats:
         local = _local_stats(
             f_shard, y_shard, num_classes,
             use_kernel=use_kernel, interpret=interpret,
         )
+        local = drop_shard_contribution(local, shard_index(mesh, axes), dropped)
         return jax.lax.psum(local, axes)  # ONE collective over the tree
 
     in_specs = (P(axes), P(axes))
@@ -143,27 +183,51 @@ def masked_distributed_stats(
     client_axes: Tuple[str, ...] = ("data",),
     use_kernel: bool = False,
     interpret: Optional[bool] = None,
+    dropped_shards: Tuple[int, ...] = (),
+    min_survivors: Optional[int] = None,
 ) -> FeatureStats:
     """SecureAgg-composed variant: each shard adds pairwise-cancelling
     masks BEFORE the psum, so no unmasked per-shard statistic ever exists
     outside its shard.  The psum output equals the unmasked aggregate up
-    to float associativity (tested)."""
+    to float associativity (tested).
+
+    ``dropped_shards`` models masking parties lost mid-round: their
+    masked contributions never reach the psum, leaving the survivor ×
+    dropped pair masks un-cancelled in it.  The server-side Shamir
+    recovery (``secure_agg.recover_partial_sum``) reconstructs the lost
+    shards' seed secrets from the surviving shards' shares — any
+    ``min_survivors`` (default: majority) of them suffice — regenerates
+    those masks, and subtracts them, yielding the exact statistics of
+    the surviving shards' data.  Still exactly ONE collective.
+    """
+    from repro.core.secure_agg import pair_seed_matrix, round_plan
+
     axes = tuple(a for a in client_axes if a in mesh.axis_names)
+    dropped = tuple(sorted({int(d) for d in dropped_shards}))
+    # axis extents are static properties of the mesh (jax.lax.axis_size
+    # only exists on newer jax)
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    # validate the round BEFORE sweeping any data (bogus shard ids and
+    # sub-threshold survivor sets must not silently return full stats)
+    survivors, threshold = round_plan(
+        n_shards, dropped, min_survivors=min_survivors
+    )
+    # derived OUTSIDE the trace: check_rep's rewrite tracer would lift it
+    seeds = pair_seed_matrix(base_seed, n_shards)
 
     def shard_fn(f_shard: Array, y_shard: Array) -> FeatureStats:
         local = _local_stats(
             f_shard, y_shard, num_classes,
             use_kernel=use_kernel, interpret=interpret,
         )
-        # axis extents are static properties of the mesh (jax.lax.axis_size
-        # only exists on newer jax)
-        n_shards = 1
-        for a in axes:
-            n_shards *= mesh.shape[a]
+        me = shard_index(mesh, axes)
         masked = apply_pair_masks(
-            local, shard_index(mesh, axes), n_shards,
-            base_seed=base_seed, mask_scale=mask_scale,
+            local, me, n_shards,
+            base_seed=base_seed, mask_scale=mask_scale, seeds=seeds,
         )
+        masked = drop_shard_contribution(masked, me, dropped)
         return jax.lax.psum(masked, axes)
 
     fn = shard_map(
@@ -171,4 +235,12 @@ def masked_distributed_stats(
         out_specs=FeatureStats(A=P(), B=P(), N=P()),
         check_rep=not use_kernel,
     )
-    return fn(features, labels)
+    out = fn(features, labels)
+    if dropped:
+        from repro.core.secure_agg import recover_partial_sum, setup_round
+
+        setup = setup_round(n_shards, threshold, base_seed=base_seed)
+        out = recover_partial_sum(
+            out, survivors, setup, mask_scale=mask_scale
+        )
+    return out

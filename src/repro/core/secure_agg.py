@@ -1,47 +1,95 @@
-"""Pairwise-mask Secure Aggregation (Bonawitz et al. 2017) for FedCGS.
+"""Dropout-tolerant pairwise-mask Secure Aggregation for FedCGS.
 
 The paper (Algorithm 1 line 5 + §Privacy Discussion) notes that the
 server only ever needs the *sums* A, B, N — so clients can add pairwise
 cancelling masks before upload and the server learns nothing about any
-individual client's statistics.
+individual client's statistics.  This module implements the full
+Bonawitz et al. 2017 round shape, including the §4 dropout recovery the
+abstract's connection-drop risk demands:
 
-For every ordered client pair (i, j), i < j, both derive a shared mask
-``m_ij = PRG(seed_ij)`` shaped like the statistic tree.  Client i adds
-``+m_ij``, client j adds ``−m_ij``.  Summed over all clients the masks
-cancel exactly (up to float associativity, ~1e-6 relative — tested).
+1. **Setup** (:func:`setup_round`): every client i holds a secret field
+   element ``u_i`` (GF(2³¹−1), :mod:`repro.core.shamir`), publishes
+   ``pk_i = g^{u_i}``, and Shamir-shares ``u_i`` t-of-K to its peers.
+   The returned :class:`RoundSetup` holds only the *public* transcript —
+   pubkeys and the share matrix — never the secrets.
+2. **Masking**: for every pair (i, j), both endpoints derive the same
+   seed ``s_ij = pk_j^{u_i} = pk_i^{u_j}`` (key agreement) and expand it
+   to a mask tree ``m_ij = PRG(s_ij)`` shaped like the statistics.  The
+   low client adds ``+m_ij``, the high client ``−m_ij``; summed over all
+   clients the masks cancel exactly (up to float associativity).
+3. **Upload**: the server receives only masked views
+   (:func:`masked_round` when everyone reports;
+   :func:`masked_survivor_views` when some clients drop mid-round).
+4. **Recovery** (:func:`recover_round`): masks between two survivors
+   cancel in the partial sum; masks between a survivor and a dropped
+   client do not.  The server collects ≥ t survivors' shares of each
+   dropped ``u_d``, reconstructs it, recomputes ``s_sd = pk_s^{u_d}``
+   for every survivor s (the same value s used — DH symmetry),
+   regenerates those masks bit-identically, and subtracts them: the
+   result is the EXACT statistics sum over survivors.  Fewer than t
+   survivors ⇒ the round aborts (raises) rather than degrade.
 
-Cost model: a masked round needs each of the K·(K−1)/2 pair masks
-exactly once.  ``masked_round`` is the single-derivation entry point —
-it streams over pairs, materializing ONE mask tree at a time, and both
-``secure_sum`` and ``masked_views`` are thin wrappers over it.  (The
-seed implementation re-derived every pair mask from scratch inside each
-per-client ``mask_client_update`` call — K·(K−1) PRG tree expansions
-per function, twice that when a pipeline needed both the views and the
-sum.)  ``mask_client_update`` keeps the per-client protocol view for
-tests of seed agreement; it derives only the K−1 masks client i is a
-party to.
+Cost model: a full round needs each of the K·(K−1)/2 pair masks exactly
+once; :func:`masked_survivor_views` derives only pairs with a surviving
+endpoint, and recovery re-derives just the |S|·|D| survivor×dropped
+masks.  ``mask_client_update`` keeps the per-client protocol view
+(client i derives only its own K−1 masks) for seed-agreement tests.
 
-This is a faithful *functional* model of the protocol: we implement the
-mask algebra and the seed agreement (here: hash of the pair), not the
-networking/dropout-recovery machinery (Shamir shares), which is
-orthogonal to the paper's claim.
+Determinism contract: everything — secrets, shares, pair seeds, masks —
+derives from ``base_seed`` through fixed PRGs (numpy PCG64 for the
+simulated per-client secrets, jax threefry for shares and mask trees),
+so two processes produce bit-identical masked views and recoveries.
+The sharded engines (``core.federated.apply_pair_masks``) consume the
+same :func:`pair_seed_matrix`, which keeps host-side recovery
+bit-aligned with masks generated inside ``shard_map`` traces.
 """
 
 from __future__ import annotations
 
-from typing import Any, List, Sequence, Tuple
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.core import shamir
 
 PyTree = Any
 
 
-def _pair_seed(base_seed: int, i: int, j: int) -> jax.Array:
-    """Deterministic shared key for pair (i, j) — both sides can derive it."""
-    lo, hi = (i, j) if i < j else (j, i)
-    key = jax.random.key(base_seed)
-    return jax.random.fold_in(jax.random.fold_in(key, lo), hi)
+def client_secrets(base_seed: int, num_clients: int) -> np.ndarray:
+    """The simulated clients' private DH secrets, u_i ∈ [1, p−1).
+
+    In deployment each client draws its own; the simulation derives them
+    deterministically from ``base_seed`` (numpy PCG64 — bit-stable across
+    processes) so rounds are reproducible.
+    """
+    rng = np.random.default_rng(int(base_seed) % (1 << 32))
+    return rng.integers(
+        1, shamir.PRIME - 1, size=num_clients, dtype=np.uint64
+    ).astype(np.uint32)
+
+
+@functools.lru_cache(maxsize=128)
+def pair_seed_matrix(base_seed: int, num_clients: int) -> np.ndarray:
+    """(K, K) uint32 of agreed pair seeds s_ij = g^{u_i·u_j}; diagonal 0.
+
+    Symmetric by DH construction — entry [i, j] is what client i computes
+    as pk_j^{u_i} and client j computes as pk_i^{u_j}.  Cached: the
+    sharded engines embed it as a trace constant.  Treat as read-only.
+    """
+    u = client_secrets(base_seed, num_clients)
+    pk = shamir.dh_public(u)
+    seeds = shamir.dh_shared(u[:, None], pk[None, :])  # (K, K)
+    np.fill_diagonal(seeds, 0)
+    return seeds
+
+
+def _pair_key(seed: int) -> jax.Array:
+    """PRG key for one agreed pair seed (32-bit field element)."""
+    return jax.random.key(jnp.uint32(seed))
 
 
 def _mask_like(key: jax.Array, tree: PyTree, scale: float) -> PyTree:
@@ -54,6 +102,108 @@ def _mask_like(key: jax.Array, tree: PyTree, scale: float) -> PyTree:
     return jax.tree_util.tree_unflatten(treedef, masks)
 
 
+def round_plan(
+    num_parties: int,
+    dropped: Sequence[int],
+    *,
+    min_survivors: Optional[int] = None,
+    secure: bool = True,
+) -> Tuple[List[int], int]:
+    """Validate a dropout round -> (survivors, threshold).
+
+    THE one place the threshold default lives: ``min_survivors`` when
+    given, else a majority for secure rounds (recovery needs t shares)
+    and 1 for plain rounds (nothing to reconstruct — any non-empty
+    survivor set sums fine).  Raises on out-of-range dropped ids (a
+    silently-ignored drop would report full-cohort statistics as if
+    recovery had run) and on survivor sets below the threshold.
+    """
+    drop = sorted({int(d) for d in dropped})
+    if any(d < 0 or d >= num_parties for d in drop):
+        raise ValueError(
+            f"dropped ids {drop} out of range for {num_parties} parties"
+        )
+    survivors = [i for i in range(num_parties) if i not in set(drop)]
+    if min_survivors is not None:
+        threshold = min_survivors
+    else:
+        threshold = num_parties // 2 + 1 if secure else 1
+    if not 1 <= threshold <= num_parties:
+        raise ValueError(
+            f"need 1 <= threshold <= num_parties, got t={threshold}, "
+            f"K={num_parties}"
+        )
+    if len(survivors) < threshold:
+        raise ValueError(
+            f"unrecoverable round: {len(survivors)} survivors < "
+            f"threshold {threshold}"
+        )
+    return survivors, threshold
+
+
+# ---------------------------------------------------------------------------
+# Round setup: secrets shared, pubkeys published.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundSetup:
+    """Transcript of the setup phase (pubkeys + the Shamir share matrix).
+
+    ``share_ys[j, i]`` is peer j's Shamir share of client i's secret
+    ``u_i`` (evaluated at x = ``share_xs[j]`` = j+1); ``pubkeys[i]`` is
+    ``g^{u_i}``.  The secrets themselves are deliberately absent:
+    recovery MUST reconstruct them from ≥ ``threshold`` shares.
+
+    Simulation gap, stated plainly: in deployment row j of ``share_ys``
+    lives on client j, and the server receives ONLY the dropped clients'
+    columns, from ≥ t surviving donors, at recovery time — it can never
+    reconstruct a *survivor's* secret and strip that client's masks.
+    This in-process simulation has no per-party storage, so the whole
+    matrix sits in one object; the recovery code keeps the protocol
+    honest by construction instead, reading exactly
+    ``share_ys[donors, dropped]`` (see :func:`recover_mask_residual`)
+    — never a surviving client's column.
+    """
+
+    num_clients: int
+    threshold: int
+    base_seed: int
+    pubkeys: np.ndarray  # (K,) uint32
+    share_xs: np.ndarray  # (K,) uint32, 1..K
+    share_ys: np.ndarray  # (K, K) uint32: [holder j, secret owner i]
+
+
+def setup_round(
+    num_clients: int, threshold: int, *, base_seed: int = 0
+) -> RoundSetup:
+    """Run the setup phase for a K-client round with a t-of-K threshold."""
+    if num_clients < 1:
+        raise ValueError("need at least one client")
+    if not 1 <= threshold <= num_clients:
+        raise ValueError(
+            f"need 1 <= threshold <= num_clients, got t={threshold}, "
+            f"K={num_clients}"
+        )
+    u = client_secrets(base_seed, num_clients)
+    key = jax.random.fold_in(jax.random.key(int(base_seed) % (1 << 32)),
+                             num_clients)
+    xs, ys = shamir.split_secret(u, threshold, num_clients, key=key)
+    return RoundSetup(
+        num_clients=num_clients,
+        threshold=threshold,
+        base_seed=base_seed,
+        pubkeys=shamir.dh_public(u),
+        share_xs=xs,
+        share_ys=ys,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Client-side masking.
+# ---------------------------------------------------------------------------
+
+
 def mask_client_update(
     update: PyTree,
     client_id: int,
@@ -63,34 +213,71 @@ def mask_client_update(
     mask_scale: float = 1e3,
 ) -> PyTree:
     """Return ``update + Σ_{j>i} m_ij − Σ_{j<i} m_ji`` (client-side step)."""
+    seeds = pair_seed_matrix(base_seed, num_clients)
     masked = update
     for other in range(num_clients):
         if other == client_id:
             continue
-        key = _pair_seed(base_seed, client_id, other)
-        mask = _mask_like(key, update, mask_scale)
+        mask = _mask_like(
+            _pair_key(seeds[client_id, other]), update, mask_scale
+        )
         sign = 1.0 if client_id < other else -1.0
         masked = jax.tree_util.tree_map(lambda u, m: u + sign * m, masked, mask)
     return masked
 
 
+def masked_survivor_views(
+    updates: Sequence[PyTree],
+    survivors: Sequence[int],
+    num_clients: int,
+    *,
+    base_seed: int = 0,
+    mask_scale: float = 1e3,
+) -> List[PyTree]:
+    """Masked views of the surviving clients (aligned with ``survivors``).
+
+    ``updates`` may be the full K-length round (dropped entries are never
+    touched) or a dict-like keyed by client id.  Every mask with at
+    least one surviving endpoint is derived exactly once and applied
+    ``+`` to the low / ``−`` to the high survivor; masks between two
+    dropped clients are never materialized.
+    """
+    surv = sorted(set(int(s) for s in survivors))
+    if any(s < 0 or s >= num_clients for s in surv):
+        raise ValueError(f"survivor ids must be in [0, {num_clients})")
+    # works for a K-length sequence and an id-keyed mapping alike
+    views: Dict[int, PyTree] = {s: updates[s] for s in surv}
+    seeds = pair_seed_matrix(base_seed, num_clients)
+    in_round = set(surv)
+    for i in range(num_clients):
+        for j in range(i + 1, num_clients):
+            if i not in in_round and j not in in_round:
+                continue
+            template = views[i] if i in in_round else views[j]
+            mask = _mask_like(_pair_key(seeds[i, j]), template, mask_scale)
+            if i in in_round:
+                views[i] = jax.tree_util.tree_map(
+                    lambda u, m: u + m, views[i], mask
+                )
+            if j in in_round:
+                views[j] = jax.tree_util.tree_map(
+                    lambda u, m: u - m, views[j], mask
+                )
+    return [views[s] for s in surv]
+
+
 def masked_round(
     updates: Sequence[PyTree], *, base_seed: int = 0, mask_scale: float = 1e3
 ) -> Tuple[List[PyTree], PyTree]:
-    """One SecureAgg round: (per-client masked views, their server-side sum).
+    """One full SecureAgg round: (per-client masked views, their sum).
 
-    Every pair mask is derived exactly once and applied ``+`` to the low
-    client / ``−`` to the high client, so the round costs K·(K−1)/2 PRG
-    tree expansions total regardless of whether the caller wants the
-    views, the sum, or both.
+    Every pair mask is derived exactly once; the sum is what the server
+    computes when nobody drops (the masks cancel inside it).
     """
-    views: List[PyTree] = list(updates)
-    k = len(views)
-    for i in range(k):
-        for j in range(i + 1, k):
-            mask = _mask_like(_pair_seed(base_seed, i, j), views[i], mask_scale)
-            views[i] = jax.tree_util.tree_map(lambda u, m: u + m, views[i], mask)
-            views[j] = jax.tree_util.tree_map(lambda u, m: u - m, views[j], mask)
+    k = len(updates)
+    views = masked_survivor_views(
+        updates, range(k), k, base_seed=base_seed, mask_scale=mask_scale
+    )
     total = views[0]
     for v in views[1:]:
         total = jax.tree_util.tree_map(jnp.add, total, v)
@@ -117,3 +304,92 @@ def masked_views(
     """What the server actually receives per client (for privacy tests)."""
     views, _ = masked_round(updates, base_seed=base_seed, mask_scale=mask_scale)
     return views
+
+
+# ---------------------------------------------------------------------------
+# Server-side dropout recovery.
+# ---------------------------------------------------------------------------
+
+
+def recover_mask_residual(
+    setup: RoundSetup,
+    survivors: Sequence[int],
+    like: PyTree,
+    *,
+    mask_scale: float = 1e3,
+) -> PyTree:
+    """The un-cancelled mask residue left in a survivor partial sum.
+
+    For each dropped client d the server reconstructs ``u_d`` from the
+    first ``threshold`` survivors' shares, re-derives the agreed seed
+    ``s_sd = pk_s^{u_d}`` for every survivor s, and regenerates the mask
+    trees bit-identically to what s applied.  The returned tree is
+    ``Σ_{s∈S, d∈D} sign(s, d) · m_sd`` with sign +1 when s < d — exactly
+    what must be SUBTRACTED from the partial sum.
+    """
+    surv = sorted(set(int(s) for s in survivors))
+    if any(s < 0 or s >= setup.num_clients for s in surv):
+        raise ValueError(f"survivor ids must be in [0, {setup.num_clients})")
+    dropped = [i for i in range(setup.num_clients) if i not in set(surv)]
+    if len(surv) < setup.threshold:
+        raise ValueError(
+            f"unrecoverable round: {len(surv)} survivors < "
+            f"threshold {setup.threshold}"
+        )
+    residual = jax.tree_util.tree_map(jnp.zeros_like, like)
+    if not dropped:
+        return residual
+    donors = surv[: setup.threshold]
+    xs = setup.share_xs[donors]
+    for d in dropped:
+        u_d = shamir.reconstruct_secret(xs, setup.share_ys[donors, d])
+        for s in surv:
+            seed = int(shamir.dh_shared(u_d, setup.pubkeys[s]))
+            sign = 1.0 if s < d else -1.0
+            mask = _mask_like(_pair_key(seed), like, mask_scale)
+            residual = jax.tree_util.tree_map(
+                lambda r, m: r + sign * m, residual, mask
+            )
+    return residual
+
+
+def recover_partial_sum(
+    partial: PyTree,
+    survivors: Sequence[int],
+    setup: RoundSetup,
+    *,
+    mask_scale: float = 1e3,
+) -> PyTree:
+    """Un-mask a survivor-only partial sum → the exact survivor sum.
+
+    ``partial`` is the sum of the survivors' masked views (masks between
+    two survivors have already cancelled inside it).
+    """
+    residual = recover_mask_residual(
+        setup, survivors, partial, mask_scale=mask_scale
+    )
+    return jax.tree_util.tree_map(jnp.subtract, partial, residual)
+
+
+def recover_round(
+    views: Sequence[PyTree],
+    survivors: Sequence[int],
+    setup: RoundSetup,
+    *,
+    mask_scale: float = 1e3,
+) -> PyTree:
+    """Server-side round completion under dropout.
+
+    ``views`` are the masked uploads of ``survivors`` (aligned, e.g. the
+    output of :func:`masked_survivor_views`).  Requires ≥ ``threshold``
+    survivors; returns the exact statistics sum over the survivor set.
+    """
+    surv = sorted(set(int(s) for s in survivors))
+    if len(views) != len(surv):
+        raise ValueError("one masked view per survivor, aligned")
+    partial = views[0]
+    for v in views[1:]:
+        partial = jax.tree_util.tree_map(jnp.add, partial, v)
+    return recover_partial_sum(
+        partial, surv, setup, mask_scale=mask_scale
+    )

@@ -1,0 +1,241 @@
+"""t-of-K Shamir secret sharing over GF(2³¹ − 1) for SecureAgg dropout recovery.
+
+The dropout-recovery half of Bonawitz et al. 2017 (§4): every client
+Shamir-shares its pair-seed secret to its K peers at round setup, so any
+``threshold`` survivors can hand the server enough shares to reconstruct
+a dropped client's secret and regenerate — then subtract — the pairwise
+masks the dropped client left dangling in the partial sum.  This module
+is the field machinery; the protocol lives in :mod:`repro.core.secure_agg`.
+
+Field: the Mersenne prime p = 2³¹ − 1.  Every secret, share, and derived
+pair seed is a field element — 32-bit seed material, exactly what
+``jax.random.key`` consumes.  All arithmetic is vectorized ``jnp``
+``uint64`` under a local :func:`jax.experimental.enable_x64` scope
+(products of two field elements stay < 2⁶², so ``(a * b) % p`` is
+overflow-free); the public API takes/returns numpy ``uint32`` so callers
+never depend on the x64 flag.
+
+Key agreement: a textbook Diffie-Hellman stand-in over the same field
+(generator 7, a primitive root of p — the Lehmer-RNG multiplier base).
+Client i publishes ``pk_i = 7^{u_i}``; the pair seed
+``s_ij = pk_j^{u_i} = pk_i^{u_j} = 7^{u_i·u_j}`` is computable by both
+endpoints but by the server only AFTER reconstructing one endpoint's
+secret from ≥ threshold shares.  31 bits is of course not
+cryptographically hard — the point is the *structure*: recovery must go
+through share reconstruction, exactly as in the real protocol.
+
+Shares are (x, y) pairs with x = 1..K; :func:`reconstruct_secret` is
+Lagrange interpolation at 0 and is exact for ANY subset of ≥ threshold
+shares (property-tested in ``tests/test_shamir.py``).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+
+@contextlib.contextmanager
+def _host_field_scope():
+    """uint64 field arithmetic, evaluated NOW even under an active trace.
+
+    The protocol helpers are host-side by contract (setup/recovery run at
+    the server), but the sharded engines may first touch them while a
+    shard_map body is being traced — ``ensure_compile_time_eval`` keeps
+    the numpy boundary an eager constant instead of a leaked tracer.
+    """
+    with enable_x64(), jax.ensure_compile_time_eval():
+        yield
+
+PRIME = (1 << 31) - 1  # Mersenne prime M31
+GENERATOR = 7  # primitive root mod PRIME
+MAX_SHARES = PRIME - 1  # shares live at x = 1..K; any K < p works
+
+_MAGIC = b"SHAM1"
+
+
+def _mulmod(a, b):
+    """(a * b) mod p for uint64 field elements — products < 2⁶² fit."""
+    return (a * b) % jnp.uint64(PRIME)
+
+
+def _powmod(base, exp):
+    """base^exp mod p, square-and-multiply over the 31 exponent bits.
+
+    Broadcasts like ``base * exp``; both are uint64 field elements.
+    """
+    base = jnp.asarray(base, jnp.uint64) % jnp.uint64(PRIME)
+    exp = jnp.asarray(exp, jnp.uint64)
+    result = jnp.ones(jnp.broadcast_shapes(base.shape, exp.shape), jnp.uint64)
+    for _ in range(31):  # exponents are field elements: < 2³¹
+        result = jnp.where(exp & 1 == 1, _mulmod(result, base), result)
+        base = _mulmod(base, base)
+        exp = exp >> 1
+    return result
+
+
+def _invmod(a):
+    """Multiplicative inverse via Fermat: a^(p−2) mod p (0 maps to 0)."""
+    return _powmod(a, jnp.uint64(PRIME - 2))
+
+
+def field_uniform(key: jax.Array, shape: Tuple[int, ...]) -> np.ndarray:
+    """Uniform-ish field elements in [0, p) from a jax PRNG key."""
+    with _host_field_scope():
+        bits = jax.random.bits(key, shape, jnp.uint64)
+        return np.asarray(bits % jnp.uint64(PRIME), np.uint32)
+
+
+def split_secret(
+    secrets,
+    threshold: int,
+    num_shares: int,
+    *,
+    key: jax.Array,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Shamir-share field-element secrets into ``num_shares`` (x, y) pairs.
+
+    ``secrets`` is any array of field elements (shape ``batch``); every
+    secret gets its own independent degree-(threshold−1) polynomial with
+    constant term the secret, evaluated at x = 1..num_shares (Horner,
+    vectorized over shares × batch).  Returns ``(xs, ys)``:
+    ``xs`` (num_shares,) uint32 and ``ys`` (num_shares, *batch) uint32,
+    where ``ys[j]`` is share x=j+1 of every secret.  Any ``threshold``
+    of the rows reconstruct; fewer reveal nothing about the secrets.
+    """
+    if not 1 <= threshold <= num_shares:
+        raise ValueError(
+            f"need 1 <= threshold <= num_shares, got t={threshold}, K={num_shares}"
+        )
+    if num_shares > MAX_SHARES:
+        raise ValueError(f"num_shares must be < field size {PRIME}")
+    with _host_field_scope():
+        s = jnp.asarray(np.asarray(secrets), jnp.uint64) % jnp.uint64(PRIME)
+        coeffs = jnp.asarray(
+            field_uniform(key, (threshold - 1,) + s.shape), jnp.uint64
+        )
+        xs = jnp.arange(1, num_shares + 1, dtype=jnp.uint64)
+        xb = xs.reshape((num_shares,) + (1,) * s.ndim)
+        # Horner from the highest coefficient down to the secret
+        acc = jnp.zeros((num_shares,) + s.shape, jnp.uint64)
+        for m in range(threshold - 2, -1, -1):
+            acc = (_mulmod(acc, xb) + coeffs[m]) % jnp.uint64(PRIME)
+        ys = (_mulmod(acc, xb) + s) % jnp.uint64(PRIME)
+        return np.asarray(xs, np.uint32), np.asarray(ys, np.uint32)
+
+
+def reconstruct_secret(xs, ys) -> np.ndarray:
+    """Lagrange-interpolate the secrets at x = 0 from ≥ threshold shares.
+
+    ``xs`` (t,) distinct share abscissae, ``ys`` (t, *batch) the matching
+    share values.  Exact for any subset of at least ``threshold`` shares
+    of the same secret (extra shares are consistent and only
+    over-determine the polynomial).  Returns uint32 field elements of
+    shape ``batch``.
+    """
+    xs = np.asarray(xs, np.uint64)
+    if xs.ndim != 1 or xs.size == 0:
+        raise ValueError("xs must be a non-empty 1-d array of share indices")
+    if len(np.unique(xs)) != len(xs):
+        raise ValueError("duplicate share indices: each x may appear once")
+    with _host_field_scope():
+        x = jnp.asarray(xs, jnp.uint64) % jnp.uint64(PRIME)
+        y = jnp.asarray(np.asarray(ys), jnp.uint64) % jnp.uint64(PRIME)
+        t = x.shape[0]
+        eye = np.eye(t, dtype=bool)
+        xj = jnp.broadcast_to(x[None, :], (t, t))
+        diff = (xj + jnp.uint64(PRIME) - x[:, None]) % jnp.uint64(PRIME)
+        num_f = jnp.where(eye, jnp.uint64(1), xj)
+        den_f = jnp.where(eye, jnp.uint64(1), diff)
+        lam_num = jnp.ones((t,), jnp.uint64)
+        lam_den = jnp.ones((t,), jnp.uint64)
+        for j in range(t):  # modular row products (jnp.prod would overflow)
+            lam_num = _mulmod(lam_num, num_f[:, j])
+            lam_den = _mulmod(lam_den, den_f[:, j])
+        lam = _mulmod(lam_num, _invmod(lam_den))  # (t,) Lagrange weights at 0
+        lamb = lam.reshape((t,) + (1,) * (y.ndim - 1))
+        terms = _mulmod(lamb, y)
+        secret = jnp.zeros(y.shape[1:], jnp.uint64)
+        for i in range(t):  # incremental mod keeps the sum < 2³²
+            secret = (secret + terms[i]) % jnp.uint64(PRIME)
+        return np.asarray(secret, np.uint32)
+
+
+def _powmod_host(base, exp) -> np.ndarray:
+    """Pure-numpy base^exp mod p (broadcasts like ``base * exp``).
+
+    Same square-and-multiply as :func:`_powmod` but immune to EVERY jax
+    trace context: eager ``shard_map`` bodies (``check_rep``'s rewrite
+    tracer lifts even constant-only jnp ops, and
+    ``ensure_compile_time_eval`` cannot escape it) may derive pair seeds
+    mid-trace.  Cross-parity with the jnp path is pinned in
+    ``tests/test_shamir.py``.
+    """
+    base = np.asarray(base, np.uint64) % np.uint64(PRIME)
+    exp = np.asarray(exp, np.uint64)
+    base, exp = np.broadcast_arrays(base, exp)
+    base, exp = base.copy(), exp.copy()
+    result = np.ones(base.shape, np.uint64)
+    for _ in range(31):  # exponents are field elements: < 2³¹
+        result = np.where(exp & 1 == 1, (result * base) % np.uint64(PRIME),
+                          result)
+        base = (base * base) % np.uint64(PRIME)
+        exp >>= np.uint64(1)
+    return result
+
+
+def dh_public(secrets) -> np.ndarray:
+    """pk = GENERATOR^secret mod p — the published half of key agreement."""
+    return _powmod_host(GENERATOR, secrets).astype(np.uint32)
+
+
+def dh_shared(secret, peer_public) -> np.ndarray:
+    """Pair seed pk_peer^secret = GENERATOR^(u·v) — symmetric in the pair."""
+    return _powmod_host(peer_public, secret).astype(np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Serialization — what a client actually puts on the wire per peer.
+# ---------------------------------------------------------------------------
+
+
+def serialize_shares(xs: np.ndarray, ys: np.ndarray) -> bytes:
+    """Pack an (xs, ys) share bundle into bytes (versioned, shape-tagged)."""
+    xs = np.ascontiguousarray(np.asarray(xs, np.uint32))
+    ys = np.ascontiguousarray(np.asarray(ys, np.uint32))
+    if xs.ndim != 1 or ys.shape[:1] != xs.shape:
+        raise ValueError("ys must have one leading row per entry of xs")
+    header = np.asarray([len(xs), ys.ndim] + list(ys.shape[1:]), np.uint32)
+    return (
+        _MAGIC
+        + np.uint32(header.size).tobytes()
+        + header.tobytes()
+        + xs.tobytes()
+        + ys.tobytes()
+    )
+
+
+def deserialize_shares(data: bytes) -> Tuple[np.ndarray, np.ndarray]:
+    """Inverse of :func:`serialize_shares` (exact round-trip, tested)."""
+    if data[: len(_MAGIC)] != _MAGIC:
+        raise ValueError("not a serialized share bundle (bad magic)")
+    off = len(_MAGIC)
+    (hsize,) = np.frombuffer(data, np.uint32, 1, off)
+    off += 4
+    header = np.frombuffer(data, np.uint32, int(hsize), off)
+    off += 4 * int(hsize)
+    k, ndim = int(header[0]), int(header[1])
+    batch = tuple(int(v) for v in header[2:])
+    if len(batch) != ndim - 1:
+        raise ValueError("corrupt share bundle header")
+    xs = np.frombuffer(data, np.uint32, k, off).copy()
+    off += 4 * k
+    count = k * int(np.prod(batch, dtype=np.int64)) if ndim > 1 else k
+    ys = np.frombuffer(data, np.uint32, count, off).reshape((k,) + batch).copy()
+    return xs, ys

@@ -48,6 +48,20 @@ Knob matrix (all orthogonal):
 TPU); ``mesh``/``client_axes``/``base_seed``/``mask_scale`` parameterize
 the sharded and secure cells and are ignored elsewhere.
 
+Dropout axis (orthogonal to all of the above): ``dropout=`` names the
+parties lost mid-round — client indices for :meth:`from_cohort`, shard
+indices for a single sharded source — and ``min_survivors=`` is the
+Shamir threshold t (default: majority for ``secure``; plain rounds,
+which reconstruct nothing, enforce it only when given).  A ``plain``
+round simply sums the survivors; a ``secure`` round receives only the
+survivors' MASKED
+views, reconstructs the dropped parties' pair-seed secrets from any
+t survivor shares (``core.shamir``, the Bonawitz §4 recovery), subtracts
+the dangling masks, and returns the exact survivor statistics.  Any
+survivor set of size ≥ t is tolerated; smaller raises instead of
+degrading.  A local single source has no parties to lose, so setting
+``dropout`` there is an error rather than a silent no-op.
+
 Equivalence across every cell of the matrix — streaming × sharded ×
 secure × fused against the materialized one-shot ``from_arrays`` — is
 pinned by ``tests/test_stats_pipeline.py`` (hypothesis over batch
@@ -170,6 +184,8 @@ class StatsPipeline:
         mask_scale: float = 1e3,
         accum_dtype=jnp.float32,
         interpret: Optional[bool] = None,
+        dropout: Optional[Sequence[int]] = None,
+        min_survivors: Optional[int] = None,
     ):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
@@ -184,6 +200,11 @@ class StatsPipeline:
                 "sharded placement accumulates in float32 (the mesh engine's "
                 "carry/psum dtype); accum_dtype is a local-placement knob"
             )
+        dropped = tuple(sorted({int(d) for d in dropout})) if dropout else ()
+        if any(d < 0 for d in dropped):
+            raise ValueError(f"dropout indices must be >= 0, got {dropped}")
+        if min_survivors is not None and min_survivors < 1:
+            raise ValueError(f"min_survivors must be >= 1, got {min_survivors}")
         self.num_classes = num_classes
         self.backend = backend
         self.placement = placement
@@ -194,6 +215,8 @@ class StatsPipeline:
         self.mask_scale = mask_scale
         self.accum_dtype = accum_dtype
         self.interpret = interpret
+        self.dropout = dropped
+        self.min_survivors = min_survivors
 
     # -- knob helpers -------------------------------------------------------
 
@@ -214,12 +237,23 @@ class StatsPipeline:
             base_seed=self.base_seed,
             mask_scale=self.mask_scale,
             interpret=self.interpret,
+            dropped_shards=self.dropout,
+            min_survivors=self.min_survivors,
         )
+
+    def _require_parties_for_dropout(self) -> None:
+        if self.dropout and self.placement == "local":
+            raise ValueError(
+                "dropout needs parties to lose: a local single source has "
+                "none — use from_cohort() or placement='sharded' (where "
+                "dropout indexes shards)"
+            )
 
     # -- single array pair --------------------------------------------------
 
     def from_arrays(self, features: Array, labels: Array) -> FeatureStats:
         """Materialized one-shot sweep — the reference cell of the matrix."""
+        self._require_parties_for_dropout()
         if self.placement == "sharded":
             from repro.launch.stats_engine import sharded_client_stats
 
@@ -249,6 +283,7 @@ class StatsPipeline:
         stream costs one jit trace.  ``feature_dim`` is only needed for
         an empty stream (the zero statistic's shape).
         """
+        self._require_parties_for_dropout()
         if self.placement == "sharded":
             from repro.launch.stats_engine import streaming_sharded_stats
 
@@ -318,32 +353,68 @@ class StatsPipeline:
         runs (row-sharded over the mesh), never who gets masked.
         A plain sharded cohort instead concatenates or streams everyone
         through the mesh engine and reduces with one psum.
+
+        ``dropout`` indexes CLIENTS here: dropped clients vanish before
+        upload.  A plain round sums the survivors; a secure round gets
+        only the survivors' masked views and runs the Shamir mask
+        recovery (``core.secure_agg.recover_round``) — both land on the
+        exact statistics of the surviving clients, provided at least
+        ``min_survivors`` remain (default: a majority for secure rounds;
+        plain rounds enforce the knob only when it is given).
         """
+        from repro.core.secure_agg import round_plan
+
         clients = list(clients)
         if not clients:
             raise ValueError("from_cohort() needs at least one client")
+        k = len(clients)
+        dropped = self.dropout
+        # validates dropout ids and the survivor threshold for BOTH
+        # privacy cells (plain rounds honor an explicit min_survivors
+        # too; only the default differs — see secure_agg.round_plan)
+        survivors, threshold = round_plan(
+            k, dropped, min_survivors=self.min_survivors, secure=self.secure
+        )
         if self.secure:
-            from repro.core.secure_agg import secure_sum
+            from repro.core.secure_agg import (
+                masked_survivor_views,
+                recover_round,
+                secure_sum,
+                setup_round,
+            )
 
             # each client's own sweep is plain — masks exist between
             # clients, not inside one client's computation
-            plain = self.replace(privacy="plain")
-            per_client = [
-                plain._single_source(c, feature_dim=feature_dim)
-                for c in clients
-            ]
-            return secure_sum(
-                per_client, base_seed=self.base_seed, mask_scale=self.mask_scale
+            plain = self.replace(privacy="plain", dropout=None)
+            per_client = {
+                i: plain._single_source(clients[i], feature_dim=feature_dim)
+                for i in survivors
+            }
+            if not dropped:
+                return secure_sum(
+                    [per_client[i] for i in survivors],
+                    base_seed=self.base_seed, mask_scale=self.mask_scale,
+                )
+            setup = setup_round(k, threshold, base_seed=self.base_seed)
+            views = masked_survivor_views(
+                per_client, survivors, k,
+                base_seed=self.base_seed, mask_scale=self.mask_scale,
             )
+            return recover_round(
+                views, survivors, setup, mask_scale=self.mask_scale
+            )
+        alive = self if not dropped else self.replace(dropout=None)
+        clients = [clients[i] for i in survivors]
         if self.placement == "sharded":
             from repro.launch.stats_engine import sharded_cohort_stats
 
             return sharded_cohort_stats(
                 clients, self.num_classes, feature_dim=feature_dim,
-                **self._engine_kwargs(),
+                **alive._engine_kwargs(),
             )
         per_client = [
-            self.client_statistics(c, feature_dim=feature_dim) for c in clients
+            alive.client_statistics(c, feature_dim=feature_dim)
+            for c in clients
         ]
         return aggregate(per_client)
 
@@ -375,10 +446,11 @@ class StatsPipeline:
                 jnp.asarray(f), jnp.asarray(y), self.num_classes,
                 accum_dtype=self.accum_dtype,
             )
+        # one party's own sweep: no placement, no peers to drop
         local = (
             self
-            if self.placement == "local"
-            else self.replace(placement="local")
+            if self.placement == "local" and not self.dropout
+            else self.replace(placement="local", dropout=None)
         )
         return local.from_batches(client, feature_dim=feature_dim)
 
@@ -414,6 +486,8 @@ class StatsPipeline:
             mask_scale=self.mask_scale,
             accum_dtype=self.accum_dtype,
             interpret=self.interpret,
+            dropout=self.dropout,
+            min_survivors=self.min_survivors,
         )
         kwargs.update(overrides)
         return StatsPipeline(self.num_classes, **kwargs)

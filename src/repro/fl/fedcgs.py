@@ -53,6 +53,8 @@ def _make_pipeline(
     distributed: bool = False,
     secure: bool = False,
     mesh=None,
+    dropout: Sequence[int] = (),
+    min_survivors: Optional[int] = None,
 ) -> StatsPipeline:
     """fl-layer switches -> the pipeline's knob matrix."""
     return StatsPipeline(
@@ -61,6 +63,8 @@ def _make_pipeline(
         placement="sharded" if distributed else "local",
         privacy="secure" if secure else "plain",
         mesh=mesh,
+        dropout=dropout,
+        min_survivors=min_survivors,
     )
 
 
@@ -120,15 +124,22 @@ def aggregate_client_stats(
     use_kernel: bool = False,
     distributed: bool = False,
     mesh=None,
+    dropout: Sequence[int] = (),
+    min_survivors: Optional[int] = None,
 ) -> Tuple[FeatureStats, int]:
     """Rounds 1-2 of Algorithm 1 for a simulated cohort.
 
     Returns the aggregated statistics and the per-client upload size
     ((C+d)·d + C — a pure shape property, identical for every client).
+    Clients named in ``dropout`` disconnect before upload; with
+    ``use_secure_agg`` the server recovers their dangling masks from
+    ≥ ``min_survivors`` Shamir shares (the paper's connection-drop
+    story), so the aggregate is exactly the survivors' sum either way.
     """
     pipeline = _make_pipeline(
         num_classes, use_kernel=use_kernel, distributed=distributed,
-        secure=use_secure_agg, mesh=mesh,
+        secure=use_secure_agg, mesh=mesh, dropout=dropout,
+        min_survivors=min_survivors,
     )
     cohort = [
         _lazy_client_batches(backbone, x, y, expansion) for x, y in client_data
@@ -149,12 +160,21 @@ def run_fedcgs(
     use_kernel: bool = False,
     distributed: bool = False,
     mesh=None,
+    dropout: Sequence[int] = (),
+    min_survivors: Optional[int] = None,
 ) -> FedCGSResult:
-    """The full one-shot protocol over simulated clients."""
+    """The full one-shot protocol over simulated clients.
+
+    ``dropout``/``min_survivors`` simulate mid-round disconnects: the
+    head is fit on the exact survivor statistics (Shamir mask recovery
+    when ``use_secure_agg``), provided ≥ ``min_survivors`` clients
+    (default: majority) stay connected.
+    """
     agg, uploaded = aggregate_client_stats(
         backbone, client_data, num_classes,
         expansion=expansion, use_secure_agg=use_secure_agg,
         use_kernel=use_kernel, distributed=distributed, mesh=mesh,
+        dropout=dropout, min_survivors=min_survivors,
     )
     gstats = derive_global(agg)
     head = gnb_head(gstats, ridge=ridge)
@@ -191,6 +211,8 @@ def run_fedcgs_personalized(
     use_kernel: bool = False,
     distributed: bool = False,
     mesh=None,
+    dropout: Sequence[int] = (),
+    min_survivors: Optional[int] = None,
 ) -> Tuple[List[float], GlobalStatistics]:
     """Personalized one-shot FL (paper Eq. 12 + Table 3 protocol).
 
@@ -200,8 +222,11 @@ def run_fedcgs_personalized(
 
     The statistics round goes through the same pipeline as
     :func:`run_fedcgs`, so ``use_kernel``/``distributed``/
-    ``use_secure_agg`` behave identically here (the pre-pipeline version
-    silently ignored all of them).
+    ``use_secure_agg``/``dropout``/``min_survivors`` behave identically
+    here (the pre-pipeline version silently ignored the switches).
+    Clients dropped in round 1 still personalize in round 2 — the
+    download round happens later, when they may well have reconnected;
+    only their statistics are missing from the global prototypes.
 
     Returns per-client test accuracies and the global statistics.
     """
@@ -209,6 +234,7 @@ def run_fedcgs_personalized(
         backbone, client_data, num_classes,
         use_secure_agg=use_secure_agg, use_kernel=use_kernel,
         distributed=distributed, mesh=mesh,
+        dropout=dropout, min_survivors=min_survivors,
     )
     gstats = derive_global(agg)
     prototypes = gstats.mu  # downloaded, then FIXED (unlike FedProto)

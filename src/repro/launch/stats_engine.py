@@ -32,6 +32,13 @@ the cohort routes the whole cohort through the streaming fold — the
 psum then IS the server's sum over clients, optionally with SecureAgg
 masks folded in (``secure=True``) so no unmasked per-shard statistic
 ever leaves its shard.
+
+Dropout tolerance: every entry point takes ``dropped_shards=`` (shards
+that went dark mid-round) and ``min_survivors=`` (the Shamir threshold
+t).  Lost shards contribute zero to the psum; for ``secure`` rounds the
+drivers then reconstruct the lost shards' pair-seed secrets from the
+survivors' t-of-K shares (``core.shamir``) and subtract the dangling
+masks host-side — the exact survivor statistics, still one collective.
 """
 
 from __future__ import annotations
@@ -47,6 +54,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.federated import (
     apply_pair_masks,
     distributed_client_stats,
+    drop_shard_contribution,
     masked_distributed_stats,
     shard_index,
     _local_stats,
@@ -100,6 +108,8 @@ def sharded_client_stats(
     base_seed: int = 0,
     mask_scale: float = 1e3,
     interpret: Optional[bool] = None,
+    dropped_shards: Tuple[int, ...] = (),
+    min_survivors: Optional[int] = None,
 ) -> FeatureStats:
     """Global (A, B, N) for a row-sharded feature batch.
 
@@ -107,10 +117,23 @@ def sharded_client_stats(
     batch is padded to the shard count, device_put along the client
     axes, swept once per shard by the fused kernel, and reduced with a
     single collective.  With ``secure=True`` the shards mask their
-    contribution with pairwise-cancelling noise before the psum.
+    contribution with pairwise-cancelling noise before the psum; shards
+    listed in ``dropped_shards`` go dark mid-round and the server
+    recovers their dangling masks from ≥ ``min_survivors`` Shamir shares
+    (``core.secure_agg``), so the result is the exact statistics of the
+    surviving shards' rows.
     """
     mesh = mesh if mesh is not None else make_host_mesh(1)
     axes = tuple(a for a in client_axes if a in mesh.axis_names)
+    if dropped_shards:
+        from repro.core.secure_agg import round_plan
+
+        # reject bogus shard ids / sub-threshold survivor sets up front
+        # (the plain path would otherwise silently ignore both knobs)
+        round_plan(
+            _num_shards(mesh, axes), dropped_shards,
+            min_survivors=min_survivors, secure=secure,
+        )
     features = jnp.asarray(features)
     labels = jnp.asarray(labels).astype(jnp.int32)
     f, y = _pad_rows(features, labels, _num_shards(mesh, axes))
@@ -121,10 +144,12 @@ def sharded_client_stats(
             f, y, num_classes, mesh,
             base_seed=base_seed, mask_scale=mask_scale,
             client_axes=axes, use_kernel=use_kernel, interpret=interpret,
+            dropped_shards=dropped_shards, min_survivors=min_survivors,
         )
     return distributed_client_stats(
         f, y, num_classes, mesh,
         client_axes=axes, use_kernel=use_kernel, interpret=interpret,
+        dropped_shards=dropped_shards,
     )
 
 
@@ -144,6 +169,8 @@ def make_streaming_engine(
     base_seed: int = 0,
     mask_scale: float = 1e3,
     interpret: Optional[bool] = None,
+    dropped_shards: Tuple[int, ...] = (),
+    min_survivors: Optional[int] = None,
 ) -> Tuple[FeatureStats, Callable, Callable]:
     """(carry0, fold, finalize) for the streaming sharded statistics path.
 
@@ -159,6 +186,13 @@ def make_streaming_engine(
     padded in-place (M, N) carry (``kernels.client_stats_acc``) with
     ``use_kernel=True`` — B's triangle mirror then happens once per
     stream in finalize, not once per batch.
+
+    ``dropped_shards`` models shards that go dark before upload: their
+    (masked) running statistic is zeroed inside the finalize body — the
+    psum stays the ONE collective — and, when ``secure``, the finalize
+    wrapper afterwards reconstructs the lost shards' pair-seed secrets
+    from ≥ ``min_survivors`` Shamir shares and subtracts the dangling
+    masks, returning the exact statistics over the surviving shards.
     """
     from repro.kernels.ops import (
         _client_stats_acc_impl,
@@ -227,13 +261,30 @@ def make_streaming_engine(
         donate_argnums=(0,) if jax.default_backend() == "tpu" else (),
     )
 
+    dropped = tuple(sorted({int(d) for d in dropped_shards}))
+    if dropped:
+        from repro.core.secure_agg import round_plan
+
+        # validate at engine build time, before any batch is folded
+        survivors, threshold = round_plan(
+            n_shards, dropped, min_survivors=min_survivors, secure=secure
+        )
+    if secure:
+        from repro.core.secure_agg import pair_seed_matrix
+
+        # derived OUTSIDE the trace: check_rep's rewrite tracer would
+        # lift host-side field arithmetic into the shard_map body
+        seeds = pair_seed_matrix(base_seed, n_shards)
+
     def finalize_body(carry) -> FeatureStats:
         local = unpack(carry)
+        me = shard_index(mesh, axes)
         if secure:
             local = apply_pair_masks(
-                local, shard_index(mesh, axes), n_shards,
-                base_seed=base_seed, mask_scale=mask_scale,
+                local, me, n_shards,
+                base_seed=base_seed, mask_scale=mask_scale, seeds=seeds,
             )
+        local = drop_shard_contribution(local, me, dropped)
         return jax.lax.psum(local, axes)  # THE one collective of the cohort
 
     finalize = jax.jit(
@@ -243,6 +294,19 @@ def make_streaming_engine(
             out_specs=FeatureStats(A=P(), B=P(), N=P()),
         )
     )
+    if secure and dropped:
+        from repro.core.secure_agg import recover_partial_sum, setup_round
+
+        setup = setup_round(n_shards, threshold, base_seed=base_seed)
+        psum_finalize = finalize
+
+        def finalize(carry) -> FeatureStats:
+            # un-mask AFTER the collective: pure per-host arithmetic, so
+            # the cohort's communication bill stays at one psum
+            return recover_partial_sum(
+                psum_finalize(carry), survivors, setup, mask_scale=mask_scale
+            )
+
     return carry0, fold, finalize
 
 
@@ -258,6 +322,8 @@ def streaming_sharded_stats(
     base_seed: int = 0,
     mask_scale: float = 1e3,
     interpret: Optional[bool] = None,
+    dropped_shards: Tuple[int, ...] = (),
+    min_survivors: Optional[int] = None,
 ) -> FeatureStats:
     """Global (A, B, N) from a stream of (features, labels) batches.
 
@@ -267,6 +333,9 @@ def streaming_sharded_stats(
     Batches after the first are padded (zero rows, label −1) up to the
     first batch's padded row count, so any number of equal-shaped
     batches plus a ragged tail costs exactly one fold trace.
+    ``dropped_shards`` loses those shards' slices of every batch; with
+    ``secure=True`` the finalize recovers their dangling masks via the
+    Shamir share machinery (see :func:`make_streaming_engine`).
     """
     from repro.core.stats_pipeline import canonical_batch_stream
 
@@ -289,6 +358,7 @@ def streaming_sharded_stats(
         num_classes, d, mesh,
         client_axes=client_axes, use_kernel=use_kernel, secure=secure,
         base_seed=base_seed, mask_scale=mask_scale, interpret=interpret,
+        dropped_shards=dropped_shards, min_survivors=min_survivors,
     )
 
     def shard_divisible():
@@ -319,6 +389,8 @@ def sharded_cohort_stats(
     base_seed: int = 0,
     mask_scale: float = 1e3,
     interpret: Optional[bool] = None,
+    dropped_shards: Tuple[int, ...] = (),
+    min_survivors: Optional[int] = None,
 ) -> FeatureStats:
     """Aggregate statistics for MANY simulated clients in one collective.
 
@@ -328,13 +400,16 @@ def sharded_cohort_stats(
     every client's batches through the per-shard running fold instead —
     either way partition invariance guarantees the single psum equals
     the per-client sum the paper's server loop would compute.
+    ``dropped_shards``/``min_survivors`` forward the lost-shard recovery
+    story of the underlying engines.
     """
     from repro.core.stats_pipeline import _is_array_pair
 
     kwargs = dict(
         mesh=mesh, client_axes=client_axes, use_kernel=use_kernel,
         secure=secure, base_seed=base_seed, mask_scale=mask_scale,
-        interpret=interpret,
+        interpret=interpret, dropped_shards=dropped_shards,
+        min_survivors=min_survivors,
     )
     clients = list(clients)
     if all(_is_array_pair(c) for c in clients):

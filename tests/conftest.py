@@ -5,7 +5,10 @@ with simulated devices (``--xla_force_host_platform_device_count``).
 The env is deliberately minimal, BUT the parent's backend selection
 (``JAX_PLATFORMS``) must survive: on hosts where libtpu is installed and
 no TPU is reachable, a child process without it hangs for minutes inside
-TPU backend discovery instead of falling back to CPU.
+TPU backend discovery instead of falling back to CPU.  ``JAX_ENABLE_X64``
+is propagated for the same reason: children must run under the parent's
+dtype regime or cross-process bit-identity checks compare different
+programs.
 """
 
 import os
@@ -50,7 +53,11 @@ def optional_hypothesis():
 
 def subprocess_env(**extra):
     env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
-    for key in ("JAX_PLATFORMS", "JAX_PLATFORM_NAME"):
+    # JAX_ENABLE_X64 must survive too: the Shamir field arithmetic
+    # (core.shamir) scopes x64 locally, but a parent suite running with
+    # the flag set must see identical child semantics (seed-determinism
+    # tests hash masked views across processes).
+    for key in ("JAX_PLATFORMS", "JAX_PLATFORM_NAME", "JAX_ENABLE_X64"):
         if key in os.environ:
             env[key] = os.environ[key]
     env.update(extra)

@@ -124,3 +124,25 @@ def test_personalized_runs_and_learns(setup):
     )
     assert np.mean(accs) > 0.4  # way beyond 0.1 chance
     assert gstats.mu.shape == (10, bb.feature_dim)
+
+
+def test_fedcgs_dropout_equals_survivor_run(setup):
+    """Mid-round disconnects (paper's connection-drop risk): run_fedcgs
+    with dropout + Shamir recovery derives the SAME global statistics as
+    a plain run over only the surviving clients."""
+    x, y, xt, yt, bb = setup
+    clients = _clients(x, y, 0.5, m=6)
+    dropped = [1, 4]
+    res = run_fedcgs(
+        bb, clients, 10, test_data=(xt, yt),
+        dropout=dropped, min_survivors=3,
+    )
+    ref = run_fedcgs(
+        bb, [c for i, c in enumerate(clients) if i not in dropped], 10,
+        test_data=(xt, yt), use_secure_agg=False,
+    )
+    np.testing.assert_allclose(
+        np.asarray(res.stats.mu), np.asarray(ref.stats.mu),
+        rtol=1e-4, atol=1e-4,
+    )
+    assert res.accuracy == pytest.approx(ref.accuracy, abs=1e-6)

@@ -1,16 +1,27 @@
-"""Pairwise-mask SecureAgg: exact cancellation + per-client privacy."""
+"""Pairwise-mask SecureAgg: exact cancellation, per-client privacy, and
+Shamir dropout recovery (mask reconstruction from t-of-K shares)."""
+
+import subprocess
+import sys
+import textwrap
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import subprocess_env
+
+from repro.core import shamir
 from repro.core.secure_agg import (
     mask_client_update,
     masked_round,
+    masked_survivor_views,
     masked_views,
+    recover_round,
     secure_sum,
+    setup_round,
 )
-from repro.core.statistics import FeatureStats, client_statistics
+from repro.core.statistics import FeatureStats, aggregate, client_statistics
 
 
 def _clients(m=6, n=40, d=10, c=4, seed=0):
@@ -104,3 +115,135 @@ def test_secure_sum_over_fused_kernel_stats():
         denom = float(jnp.linalg.norm(b)) + 1e-12
         rel = float(jnp.linalg.norm(a - b)) / denom
         assert rel < 1e-5, f"relative deviation {rel}"
+
+
+# ---------------------------------------------------------------------------
+# Dropout recovery.
+# ---------------------------------------------------------------------------
+
+
+def _assert_rel_close(got, want, tol=1e-5):
+    for leaf in ("A", "B", "N"):
+        a, b = np.asarray(getattr(got, leaf)), np.asarray(getattr(want, leaf))
+        rel = np.linalg.norm(a - b) / (np.linalg.norm(b) + 1e-12)
+        assert rel < tol, f"{leaf}: relative deviation {rel}"
+
+
+@pytest.mark.parametrize("dropped", [[], [0], [2, 5], [0, 1, 7]])
+def test_recover_round_equals_survivor_sum(dropped):
+    """Server-side Shamir recovery lands on the EXACT plain sum over the
+    surviving clients, for several dropout patterns (incl. none)."""
+    k, t = 8, 5
+    clients = _clients(m=k)
+    survivors = [i for i in range(k) if i not in set(dropped)]
+    setup = setup_round(k, t, base_seed=3)
+    views = masked_survivor_views(
+        clients, survivors, k, base_seed=3, mask_scale=10.0
+    )
+    got = recover_round(views, survivors, setup, mask_scale=10.0)
+    _assert_rel_close(got, aggregate([clients[i] for i in survivors]))
+
+
+def test_recover_round_below_threshold_raises():
+    k, t = 8, 5
+    clients = _clients(m=k)
+    survivors = [0, 1, 2, 3]  # 4 < t
+    setup = setup_round(k, t, base_seed=0)
+    views = masked_survivor_views(clients, survivors, k, mask_scale=10.0)
+    with pytest.raises(ValueError, match="survivors"):
+        recover_round(views, survivors, setup, mask_scale=10.0)
+
+
+def test_setup_round_shares_reconstruct_to_published_keys():
+    """Any t survivor shares of client i's secret reconstruct a value
+    whose public key is the published pk_i — the recovery math's
+    load-bearing invariant (and the secrets never live in the setup)."""
+    k, t = 9, 4
+    setup = setup_round(k, t, base_seed=17)
+    assert not hasattr(setup, "secrets")
+    rng = np.random.default_rng(0)
+    for i in range(k):
+        donors = np.sort(rng.choice(k, size=t, replace=False))
+        u_i = shamir.reconstruct_secret(
+            setup.share_xs[donors], setup.share_ys[donors, i]
+        )
+        assert int(shamir.dh_public(u_i)) == int(setup.pubkeys[i])
+
+
+def test_masked_survivor_views_match_full_round():
+    """A survivor's masked view is the same whether or not OTHER clients
+    drop — dropping only removes views, never changes them."""
+    k = 6
+    clients = _clients(m=k)
+    full, _ = masked_round(clients, base_seed=5, mask_scale=10.0)
+    survivors = [0, 2, 3, 5]
+    part = masked_survivor_views(
+        clients, survivors, k, base_seed=5, mask_scale=10.0
+    )
+    for s, view in zip(survivors, part):
+        np.testing.assert_array_equal(
+            np.asarray(view.A), np.asarray(full[s].A)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(view.B), np.asarray(full[s].B)
+        )
+
+
+_DETERMINISM_BODY = textwrap.dedent(
+    """
+    import hashlib
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.secure_agg import (
+        masked_round, masked_survivor_views, pair_seed_matrix,
+        recover_round, setup_round,
+    )
+    from repro.core.statistics import FeatureStats
+
+    k, t, seed = 6, 4, 123
+    rng = np.random.default_rng(0)
+    clients = [
+        FeatureStats(
+            A=jnp.asarray(rng.standard_normal((3, 5)).astype(np.float32)),
+            B=jnp.asarray(rng.standard_normal((5, 5)).astype(np.float32)),
+            N=jnp.asarray(rng.standard_normal((3,)).astype(np.float32)),
+        )
+        for _ in range(k)
+    ]
+    h = hashlib.sha256()
+    h.update(pair_seed_matrix(seed, k).tobytes())
+    setup = setup_round(k, t, base_seed=seed)
+    h.update(setup.pubkeys.tobytes())
+    h.update(setup.share_ys.tobytes())
+    views, total = masked_round(clients, base_seed=seed, mask_scale=10.0)
+    for v in views + [total]:
+        h.update(np.asarray(v.A).tobytes())
+        h.update(np.asarray(v.B).tobytes())
+        h.update(np.asarray(v.N).tobytes())
+    survivors = [0, 2, 3, 5]
+    sv = masked_survivor_views(
+        clients, survivors, k, base_seed=seed, mask_scale=10.0
+    )
+    rec = recover_round(sv, survivors, setup, mask_scale=10.0)
+    h.update(np.asarray(rec.A).tobytes())
+    print("DIGEST", h.hexdigest())
+    """
+)
+
+
+def test_masked_round_bit_identical_across_processes():
+    """The PRG/fold_in contract the recovery math depends on: a fixed
+    base_seed yields bit-identical masked views, setup transcripts, and
+    recoveries in two separate processes."""
+    digests = []
+    for _ in range(2):
+        proc = subprocess.run(
+            [sys.executable, "-c", _DETERMINISM_BODY],
+            capture_output=True, text=True, timeout=300,
+            env=subprocess_env(),
+            cwd="/root/repo",
+        )
+        lines = [l for l in proc.stdout.splitlines() if l.startswith("DIGEST")]
+        assert lines, proc.stderr[-2000:]
+        digests.append(lines[0])
+    assert digests[0] == digests[1]

@@ -1,0 +1,165 @@
+"""Shamir secret sharing over GF(2³¹−1): share→reconstruct round-trip for
+any t ≤ K ≤ 32 and ANY t-subset of shares, (t−1)-subset secrecy (the
+share distribution is independent of the secret — smoke-checked), exact
+serialization round-trip, DH pair-seed symmetry, and jnp↔numpy modexp
+parity (the engines use the numpy path inside traces).
+"""
+
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
+
+from repro.core import shamir
+
+
+def _rand_secrets(rng, n):
+    return rng.integers(0, shamir.PRIME, size=n, dtype=np.uint64).astype(
+        np.uint32
+    )
+
+
+# --- deterministic core (runs in bare envs without hypothesis) -------------
+
+
+@pytest.mark.parametrize("t,k", [(1, 1), (1, 4), (2, 3), (3, 5), (9, 16),
+                                 (32, 32)])
+def test_roundtrip_random_subsets(t, k):
+    rng = np.random.default_rng(t * 100 + k)
+    secrets = _rand_secrets(rng, 6)
+    xs, ys = shamir.split_secret(secrets, t, k, key=jax.random.key(0))
+    for trial in range(4):
+        idx = rng.choice(k, size=t, replace=False)
+        rec = shamir.reconstruct_secret(xs[idx], ys[idx])
+        np.testing.assert_array_equal(rec, secrets)
+    # over-determined: every share at once still lands on the secret
+    np.testing.assert_array_equal(shamir.reconstruct_secret(xs, ys), secrets)
+
+
+def test_every_t_subset_of_small_round():
+    """Exhaustive: ALL C(6,3) share subsets of a 3-of-6 round reconstruct."""
+    rng = np.random.default_rng(7)
+    secrets = _rand_secrets(rng, 3)
+    xs, ys = shamir.split_secret(secrets, 3, 6, key=jax.random.key(1))
+    for idx in itertools.combinations(range(6), 3):
+        rec = shamir.reconstruct_secret(xs[list(idx)], ys[list(idx)])
+        np.testing.assert_array_equal(rec, secrets)
+
+
+def test_scalar_secret_roundtrip():
+    xs, ys = shamir.split_secret(np.uint32(123456789), 4, 9,
+                                 key=jax.random.key(2))
+    assert ys.shape == (9,)
+    assert int(shamir.reconstruct_secret(xs[2:6], ys[2:6])) == 123456789
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError):
+        shamir.split_secret(np.uint32(1), 5, 4, key=jax.random.key(0))
+    with pytest.raises(ValueError):
+        shamir.split_secret(np.uint32(1), 0, 4, key=jax.random.key(0))
+    xs, ys = shamir.split_secret(np.uint32(1), 2, 4, key=jax.random.key(0))
+    with pytest.raises(ValueError):  # duplicate abscissae
+        shamir.reconstruct_secret(np.uint32([1, 1]), ys[[0, 0]])
+    with pytest.raises(ValueError):
+        shamir.reconstruct_secret(np.uint32([]), np.uint32([]))
+    with pytest.raises(ValueError):
+        shamir.deserialize_shares(b"NOTSHAM" + b"\x00" * 16)
+
+
+def test_dh_pair_seed_symmetry_and_powmod_parity():
+    """pk_j^{u_i} == pk_i^{u_j} for every pair, and the trace-immune
+    numpy modexp agrees with the jnp field path bit-for-bit."""
+    rng = np.random.default_rng(11)
+    u = rng.integers(1, shamir.PRIME - 1, size=8, dtype=np.uint64)
+    pk = shamir.dh_public(u)
+    s_ij = shamir.dh_shared(u[:, None], pk[None, :])
+    np.testing.assert_array_equal(s_ij, s_ij.T)
+    assert np.all(s_ij != 0)
+    # parity: jnp square-and-multiply == numpy square-and-multiply
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        got = np.asarray(shamir._powmod(u, u[::-1].copy()), np.uint64)
+    np.testing.assert_array_equal(got, shamir._powmod_host(u, u[::-1].copy()))
+
+
+def test_serialization_roundtrip_deterministic():
+    rng = np.random.default_rng(3)
+    secrets = _rand_secrets(rng, 5)
+    xs, ys = shamir.split_secret(secrets, 3, 7, key=jax.random.key(4))
+    blob = shamir.serialize_shares(xs, ys)
+    xs2, ys2 = shamir.deserialize_shares(blob)
+    np.testing.assert_array_equal(xs, xs2)
+    np.testing.assert_array_equal(ys, ys2)
+    # scalar-secret bundles round-trip too
+    xs1, ys1 = shamir.split_secret(np.uint32(42), 2, 3, key=jax.random.key(5))
+    xs3, ys3 = shamir.deserialize_shares(shamir.serialize_shares(xs1, ys1))
+    np.testing.assert_array_equal(ys1, ys3)
+    assert int(shamir.reconstruct_secret(xs3[:2], ys3[:2])) == 42
+
+
+# --- hypothesis properties --------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(1, 32),
+    t_frac=st.floats(0.0, 1.0),
+    n_secrets=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_roundtrip_any_t_subset(k, t_frac, n_secrets, seed):
+    """share→reconstruct is exact for any t ≤ K ≤ 32 and any t-subset."""
+    t = max(1, min(k, int(round(t_frac * k))))
+    rng = np.random.default_rng(seed)
+    secrets = _rand_secrets(rng, n_secrets)
+    xs, ys = shamir.split_secret(secrets, t, k, key=jax.random.key(seed))
+    idx = rng.choice(k, size=t, replace=False)
+    np.testing.assert_array_equal(
+        shamir.reconstruct_secret(xs[idx], ys[idx]), secrets
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    k=st.integers(2, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_serialization_roundtrip(k, seed):
+    rng = np.random.default_rng(seed)
+    t = int(rng.integers(1, k + 1))
+    secrets = _rand_secrets(rng, int(rng.integers(1, 5)))
+    xs, ys = shamir.split_secret(secrets, t, k, key=jax.random.key(seed))
+    xs2, ys2 = shamir.deserialize_shares(shamir.serialize_shares(xs, ys))
+    np.testing.assert_array_equal(xs, xs2)
+    np.testing.assert_array_equal(ys, ys2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_below_threshold_is_secret_independent(seed):
+    """Distribution smoke check: a fixed (t−1)-subset of shares has the
+    same first moments whether the secret is 0 or p−1 — any sub-threshold
+    view is (statistically) independent of the secret."""
+    t, k, rounds = 4, 8, 64
+    rng = np.random.default_rng(seed)
+    subset = rng.choice(k, size=t - 1, replace=False)
+    views = {}
+    for secret in (0, shamir.PRIME - 1):
+        vals = []
+        for r in range(rounds):
+            key = jax.random.fold_in(jax.random.key(seed), r)
+            _, ys = shamir.split_secret(np.uint32(secret), t, k, key=key)
+            vals.append(ys[subset].astype(np.float64))
+        views[secret] = np.asarray(vals) / shamir.PRIME  # in [0, 1)
+    m0 = views[0].mean()
+    m1 = views[shamir.PRIME - 1].mean()
+    # uniform[0,1) mean 0.5, sd of the mean ≈ 1/sqrt(12·rounds·(t−1)) ≈ 0.021
+    assert abs(m0 - 0.5) < 0.12 and abs(m1 - 0.5) < 0.12
+    assert abs(m0 - m1) < 0.17  # same distribution up to sampling noise

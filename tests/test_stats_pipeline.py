@@ -197,6 +197,80 @@ def test_streaming_sharded_is_one_psum_per_cohort(secure, use_kernel):
     assert _count_collectives(jax.make_jaxpr(finalize)(carry).jaxpr) == 1
 
 
+DROPOUT_MATRIX = [
+    (backend, placement)
+    for backend in ("jnp", "fused")
+    for placement in ("local", "sharded")
+]
+
+
+@pytest.mark.parametrize("backend,placement", DROPOUT_MATRIX)
+def test_knob_matrix_dropout_axis(backend, placement):
+    """The acceptance scenario: K=16 clients, t=9, any 4 dropped — the
+    secure round's Shamir recovery equals the plain sum over survivors
+    to ≤ 1e-5 relative, in every backend × placement cell."""
+    from repro.core.statistics import aggregate
+
+    k, t, c, d = 16, 9, 5, 12
+    rng = np.random.default_rng(23)
+    clients = [
+        (
+            rng.standard_normal((30, d)).astype(np.float32),
+            rng.integers(0, c, 30).astype(np.int32),
+        )
+        for _ in range(k)
+    ]
+    dropped = [1, 4, 10, 15]
+    survivors = [i for i in range(k) if i not in set(dropped)]
+    want = aggregate(
+        [
+            client_statistics(jnp.asarray(x), jnp.asarray(y), c)
+            for x, y in (clients[i] for i in survivors)
+        ]
+    )
+    secure = StatsPipeline(
+        c, backend=backend, placement=placement, privacy="secure",
+        dropout=dropped, min_survivors=t, mask_scale=10.0,
+    )
+    got = secure.from_cohort(clients)
+    for leaf in ("A", "B", "N"):
+        g = np.asarray(getattr(got, leaf))
+        w = np.asarray(getattr(want, leaf))
+        rel = np.linalg.norm(g - w) / (np.linalg.norm(w) + 1e-12)
+        assert rel < 1e-5, f"{backend}/{placement} {leaf}: rel={rel}"
+    # the plain cell simply sums the survivors — same answer, no masks
+    plain = secure.replace(privacy="plain")
+    _assert_stats_close(plain.from_cohort(clients), want)
+
+
+def test_dropout_validation():
+    p = StatsPipeline(5, privacy="secure", dropout=[9], mask_scale=10.0)
+    with pytest.raises(ValueError, match="9"):
+        p.from_cohort([(np.zeros((4, 3), np.float32), np.zeros(4, np.int32))
+                       for _ in range(4)])
+    with pytest.raises(ValueError, match="survivors"):
+        StatsPipeline(
+            5, privacy="secure", dropout=[0, 1], min_survivors=3,
+        ).from_cohort([(np.zeros((4, 3), np.float32), np.zeros(4, np.int32))
+                       for _ in range(4)])
+    with pytest.raises(ValueError, match="parties"):
+        StatsPipeline(5, dropout=[0]).from_arrays(
+            jnp.zeros((4, 3)), jnp.zeros((4,), jnp.int32)
+        )
+    # shard-level dropout ids are validated too — a bogus id must raise,
+    # not silently report full-cohort statistics as recovered
+    with pytest.raises(ValueError, match="out of range"):
+        StatsPipeline(
+            5, placement="sharded", privacy="secure", dropout=[64],
+        ).from_arrays(jnp.zeros((8, 3)), jnp.zeros((8,), jnp.int32))
+    # plain rounds honor an explicit min_survivors (no silent degrade)
+    with pytest.raises(ValueError, match="survivors"):
+        StatsPipeline(
+            5, dropout=[0, 1], min_survivors=3,
+        ).from_cohort([(np.zeros((4, 3), np.float32), np.zeros(4, np.int32))
+                       for _ in range(4)])
+
+
 def test_class_conditional_moments_match_numpy():
     n, d, c = 160, 9, 4
     x, y = _random_data(n, d, c, seed=11)
@@ -265,3 +339,87 @@ def test_streaming_sharded_multidevice_subprocess():
         cwd="/root/repo",
     )
     assert "STREAMING_MULTIDEVICE_OK" in proc.stdout, proc.stderr[-2000:]
+
+
+_DROPOUT_SUBPROCESS_BODY = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core.statistics import aggregate, client_statistics
+    from repro.core.stats_pipeline import StatsPipeline
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.stats_engine import (
+        sharded_client_stats, streaming_sharded_stats,
+    )
+
+    def rel_close(got, want, tol=1e-5):
+        for leaf in ("A", "B", "N"):
+            g = np.asarray(getattr(got, leaf))
+            w = np.asarray(getattr(want, leaf))
+            rel = np.linalg.norm(g - w) / (np.linalg.norm(w) + 1e-12)
+            assert rel < tol, (leaf, rel)
+
+    assert len(jax.devices()) == 8
+    mesh = make_host_mesh(2)  # (data=4, model=2): 4 client shards
+    rng = np.random.default_rng(1)
+    n, d, c = 256, 16, 5
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    y = rng.integers(0, c, n).astype(np.int32)
+
+    # shard 0 goes dark in the one-shot secure sweep: exact stats of the
+    # surviving shards' rows (shard s owns the s-th quarter of the rows)
+    per = n // 4
+    want = client_statistics(jnp.asarray(x[per:]), jnp.asarray(y[per:]), c)
+    got = sharded_client_stats(
+        x, y, c, mesh=mesh, use_kernel=False, secure=True,
+        mask_scale=10.0, dropped_shards=(0,), min_survivors=2,
+    )
+    rel_close(got, want)
+
+    # streaming: shard 0 loses its slice of EVERY batch
+    bs = 64
+    surv = np.concatenate(
+        [np.arange(b + bs // 4, b + bs) for b in range(0, n, bs)]
+    )
+    want_s = client_statistics(jnp.asarray(x[surv]), jnp.asarray(y[surv]), c)
+    got_s = streaming_sharded_stats(
+        ((x[i:i+bs], y[i:i+bs]) for i in range(0, n, bs)),
+        c, mesh=mesh, use_kernel=False, secure=True, mask_scale=10.0,
+        dropped_shards=(0,), min_survivors=2,
+    )
+    rel_close(got_s, want_s)
+
+    # cohort on the mesh where one shard's clients ALL drop: 8 clients,
+    # two per shard; clients 0 and 1 (shard 0's cohort) disconnect
+    clients = [
+        (x[i * 32 : (i + 1) * 32], y[i * 32 : (i + 1) * 32])
+        for i in range(8)
+    ]
+    dropped = [0, 1]
+    survivors = [i for i in range(8) if i not in dropped]
+    want_c = aggregate(
+        [client_statistics(jnp.asarray(f), jnp.asarray(l), c)
+         for f, l in (clients[i] for i in survivors)]
+    )
+    got_c = StatsPipeline(
+        c, placement="sharded", privacy="secure", mesh=mesh,
+        dropout=dropped, min_survivors=4, mask_scale=10.0,
+    ).from_cohort(clients)
+    rel_close(got_c, want_c)
+    print("DROPOUT_MULTIDEVICE_OK")
+    """
+)
+
+
+def test_dropout_sharded_multidevice_subprocess():
+    """Lost-shard + lost-client recovery on a real >1-shard mesh: the
+    dropped parties' masks are reconstructed from Shamir shares and the
+    result is the exact survivor statistics."""
+    proc = subprocess.run(
+        [sys.executable, "-c", _DROPOUT_SUBPROCESS_BODY],
+        capture_output=True, text=True, timeout=300,
+        env=subprocess_env(),
+        cwd="/root/repo",
+    )
+    assert "DROPOUT_MULTIDEVICE_OK" in proc.stdout, proc.stderr[-2000:]
