@@ -8,13 +8,13 @@ weights offline); orderings and invariances are (DESIGN.md §2).
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Dict, List, Tuple
 
 import numpy as np
 
 from repro.data import SyntheticSpec, make_classification_data
 from repro.fl.backbone import Backbone, make_backbone
+from repro.timing import timed
 
 Dataset = Tuple[np.ndarray, np.ndarray]
 
@@ -61,7 +61,6 @@ class Reporter:
         print(f"{bench},{config},{metric},{value:.6g}", flush=True)
 
     def timeit(self, bench: str, config: str, fn: Callable, *args, **kwargs):
-        t0 = time.time()
-        out = fn(*args, **kwargs)
-        self.add(bench, config, "wall_s", time.time() - t0)
+        out, dt = timed(fn, *args, **kwargs)
+        self.add(bench, config, "wall_s", dt)
         return out

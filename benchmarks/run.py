@@ -24,6 +24,7 @@ MODULES = [
     "comm_overhead",
     "ablation_secureagg",
     "kernel_bench",
+    "serve_bench",
     "roofline",
 ]
 

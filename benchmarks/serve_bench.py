@@ -1,0 +1,175 @@
+"""Serving benchmark: open-loop Poisson traffic against the GNBServer.
+
+Synthetic clients fire ragged scoring requests at the dynamic-batching
+server (``repro.serve``) with exponential inter-arrival gaps — OPEN
+loop, arrivals don't wait for completions, which is what exposes the
+batcher's latency/throughput trade-off: at low rates ticks fire on the
+``max_delay_s`` clock with near-empty batches (latency ≈ the delay
+bound, pad waste high), at high rates batches fill to
+``max_batch_rows`` and throughput climbs while queueing delay takes
+over.  Each rate emits p50/p95/p99 latency, achieved throughput,
+batch occupancy, pad waste, and the rejected-request count
+(backpressure) — the curve lands in ``serve_bench.json`` next to the
+kernel numbers (CI uploads both).
+
+The kernel traces for the padded shapes are warmed before traffic
+starts, so the curve measures the steady-state serving loop rather
+than jit compiles.
+
+Standalone:  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
+
+``--smoke`` (what CI runs on every push) is one low rate with a
+handful of requests — a regression tripwire for the subsystem plus the
+JSON emission, not a measurement.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import Reporter
+from repro.core.classifier import LinearHead
+from repro.launch.serve_gnb import standin_head
+from repro.serve import GNBServer, QueueFull
+from repro.serve.batcher import pad_rows_to
+
+
+def _warm_traces(server: GNBServer, head: LinearHead) -> None:
+    """Compile EVERY padded-shape trace the traffic can hit.
+
+    Batches pad to multiples of ``row_multiple`` up to ``max_batch_rows``
+    (requests here are far smaller than a batch, so no oversized
+    batches occur); warming each multiple keeps first-hit jit compiles
+    out of the measured latencies.
+    """
+    from repro.serve.scoring import score_features
+
+    mult = server.batcher.row_multiple
+    for r in range(mult, server.batcher.max_batch_rows + 1, mult):
+        f = np.zeros((r, server.batcher.feature_dim), np.float32)
+        np.asarray(score_features(
+            pad_rows_to(f, mult), head.W, head.b,
+            mesh=server.mesh, client_axes=server.client_axes,
+            interpret=server.interpret,
+        ))
+
+
+def drive_rate(
+    rate_rps: float,
+    n_requests: int,
+    *,
+    mean_rows: int,
+    feature_dim: int,
+    classes: int,
+    seed: int,
+    max_batch_rows: int = 1024,
+    max_delay_s: float = 2e-3,
+    max_queue_rows: int = 16384,
+    timeout_s: float = 120.0,
+) -> dict:
+    """One point of the curve: Poisson arrivals at ``rate_rps``."""
+    rng = np.random.default_rng(seed)
+    head = standin_head(classes, feature_dim, seed)
+    sizes = np.clip(rng.poisson(mean_rows, n_requests), 1, None).astype(int)
+    gaps = rng.exponential(1.0 / rate_rps, n_requests)
+    requests = [
+        rng.standard_normal((n, feature_dim)).astype(np.float32) for n in sizes
+    ]
+    server = GNBServer(
+        head,
+        max_batch_rows=max_batch_rows,
+        max_delay_s=max_delay_s,
+        max_queue_rows=max_queue_rows,
+    )
+    _warm_traces(server, head)
+    rejected = 0
+    with server:
+        futures = []
+        for req, gap in zip(requests, gaps):
+            time.sleep(gap)
+            try:
+                futures.append(server.submit(req))
+            except QueueFull:
+                rejected += 1
+        for f in futures:
+            f.result(timeout=timeout_s)
+        server.drain()
+        snap = server.metrics.snapshot()
+    return {
+        "offered_rate_rps": rate_rps,
+        "requests": n_requests,
+        "mean_rows": mean_rows,
+        "rejected": rejected,
+        **{
+            k: snap[k]
+            for k in (
+                "latency_p50_ms", "latency_p95_ms", "latency_p99_ms",
+                "throughput_rps", "throughput_rows_s",
+                "batch_occupancy", "pad_waste_frac", "batches",
+            )
+        },
+    }
+
+
+def run(
+    reporter: Reporter,
+    *,
+    quick: bool = False,
+    seed: int = 0,
+    json_path: str | None = "serve_bench.json",
+    smoke: bool = False,
+) -> None:
+    feature_dim, classes, mean_rows = 64, 10, 64
+    if smoke:
+        points = [(100.0, 24)]
+    elif quick:
+        points = [(100.0, 64), (400.0, 64)]
+    else:
+        points = [(50.0, 128), (200.0, 128), (800.0, 256)]
+    results = []
+    for rate, n_requests in points:
+        row = drive_rate(
+            rate, n_requests,
+            mean_rows=mean_rows, feature_dim=feature_dim, classes=classes,
+            seed=seed,
+        )
+        results.append(row)
+        tag = f"rate{rate:g}|req{n_requests}|rows{mean_rows}"
+        for metric in (
+            "latency_p50_ms", "latency_p95_ms", "latency_p99_ms",
+            "throughput_rps", "batch_occupancy", "pad_waste_frac",
+        ):
+            reporter.add("serve", tag, metric, row[metric])
+        reporter.add("serve", tag, "rejected", row["rejected"])
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(
+                {
+                    "config": {
+                        "feature_dim": feature_dim,
+                        "classes": classes,
+                        "mean_rows": mean_rows,
+                        "mode": "smoke" if smoke else ("quick" if quick else "full"),
+                    },
+                    "traffic": results,
+                },
+                fh,
+                indent=2,
+            )
+        print(f"# wrote {json_path} ({len(results)} rates)")
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument(
+        "--smoke", action="store_true",
+        help="one rate, few requests — CI's regression tripwire",
+    )
+    p.add_argument("--quick", action="store_true", help="reduced rate sweep")
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args()
+    run(Reporter(), quick=args.quick, seed=args.seed, smoke=args.smoke)

@@ -1,34 +1,36 @@
-"""Serving path for the FedCGS product: batched GNB-head classification.
+"""Launch adapter for GNB serving — thin shims over :mod:`repro.serve`.
 
 ``launch.serve`` serves LM decode; this module serves what FedCGS
 actually produces — the training-free linear head configured from
-global feature statistics (ROADMAP "Serve the GNB head").  One entry
-point, :func:`gnb_serve`, scores a feature batch through the fused
-Pallas logits kernel (``kernels.gnb_logits_kernel`` via the jit'd
-``kernels.gnb_logits`` wrapper, which pads rows/classes/features to
-block multiples and slices the result back).  Given a mesh, the batch
-is row-sharded over the data axes — each shard runs the kernel on its
-rows, no collective needed because the head is replicated and logits
-are row-parallel.
+global feature statistics.  The actual subsystem (dynamic batcher,
+versioned hot-swappable head registry, metrics, run loop) lives in
+``repro.serve``; this adapter keeps the historical library entry point
+:func:`gnb_serve` (one-shot scoring of a feature batch, row-sharded
+over a mesh when given one — any row count, pad-to-shards is handled
+inside) and the CLI, which now drives a real :class:`GNBServer` under
+synthetic ragged traffic and prints the metrics snapshot.
 
 Example:
-    PYTHONPATH=src python -m repro.launch.serve_gnb --batch 512
+    PYTHONPATH=src python -m repro.launch.serve_gnb --requests 64
+    fedcgs-serve --requests 64          # installed console script
 """
 
 from __future__ import annotations
 
 import argparse
-import time
+import json
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.core.classifier import LinearHead
-from repro.kernels import gnb_logits
-from repro.sharding import shard_map
+from repro.serve import GNBServer
+from repro.serve.scoring import score_features
+from repro.serve.server import serve_requests
+from repro.timing import timed
 
 Array = jax.Array
 
@@ -43,64 +45,84 @@ def gnb_serve(
 ) -> Tuple[Array, Array]:
     """(logits, predictions) for a feature batch under the GNB head.
 
-    features: (n, d).  The kernel wrapper owns block padding; this layer
-    owns mesh placement: with ``mesh`` the rows are sharded over the
-    live ``client_axes`` (padded to divide evenly, sliced back after)
-    and every shard computes its own logits tile — embarrassingly
-    data-parallel, zero collectives.
+    One-shot library call — no queue, no thread.  The kernel wrapper
+    owns block padding; the scoring layer owns mesh placement (rows
+    padded to divide the live client axes and sliced back, so ragged
+    batches work on any mesh).
     """
-    features = jnp.asarray(features)
-    n = features.shape[0]
-    if mesh is None:
-        logits = gnb_logits(features, head.W, head.b, interpret=interpret)
-        return logits, jnp.argmax(logits, axis=-1)
-
-    from repro.launch.stats_engine import _num_shards
-
-    axes = tuple(a for a in client_axes if a in mesh.axis_names)
-    shards = _num_shards(mesh, axes)
-    pad = (-n) % shards
-    if pad:
-        features = jnp.pad(features, ((0, pad), (0, 0)))
-
-    def shard_fn(f_shard: Array, w: Array, b: Array) -> Array:
-        return gnb_logits(f_shard, w, b, interpret=interpret)
-
-    fn = shard_map(
-        shard_fn, mesh=mesh,
-        in_specs=(P(axes), P(), P()),
-        out_specs=P(axes),
-        check_rep=False,  # pallas_call has no replication rule
+    logits = score_features(
+        jnp.asarray(features), head.W, head.b,
+        mesh=mesh, client_axes=client_axes, interpret=interpret,
     )
-    logits = fn(features, head.W, head.b)[:n]
     return logits, jnp.argmax(logits, axis=-1)
+
+
+def standin_head(classes: int, feature_dim: int, seed: int) -> LinearHead:
+    # stand-in head (shared with benchmarks/serve_bench): the path under
+    # test is the serving stack, statistics -> head fitting is fl.fedcgs's job
+    rng = np.random.default_rng(seed)
+    return LinearHead(
+        W=jnp.asarray(rng.standard_normal((classes, feature_dim)), jnp.float32),
+        b=jnp.zeros((classes,), jnp.float32),
+    )
 
 
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
-    p.add_argument("--batch", type=int, default=512)
+    p.add_argument("--requests", type=int, default=32,
+                   help="number of ragged requests to push through the server")
+    p.add_argument("--batch", type=int, default=512,
+                   help="mean rows per request (sizes are ragged around it)")
     p.add_argument("--feature-dim", type=int, default=128)
     p.add_argument("--classes", type=int, default=10)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--max-batch-rows", type=int, default=1024)
+    p.add_argument("--max-delay-ms", type=float, default=2.0)
+    p.add_argument("--direct", action="store_true",
+                   help="one-shot gnb_serve() call instead of the server loop")
     args = p.parse_args(argv)
 
-    # stand-in head + features: the path under test is the serving stack,
-    # statistics -> head fitting is fl.fedcgs's job
     rng = np.random.default_rng(args.seed)
-    head = LinearHead(
-        W=jnp.asarray(rng.standard_normal((args.classes, args.feature_dim)), jnp.float32),
-        b=jnp.zeros((args.classes,), jnp.float32),
+    head = standin_head(args.classes, args.feature_dim, args.seed)
+
+    if args.direct:
+        feats = jnp.asarray(
+            rng.standard_normal((args.batch, args.feature_dim)), jnp.float32
+        )
+        (logits, pred), dt = timed(
+            lambda: jax.block_until_ready(gnb_serve(head, feats))
+        )
+        print(
+            f"scored {args.batch} x {args.feature_dim} -> {logits.shape[1]} "
+            f"classes in {dt*1e3:.1f} ms ({args.batch / max(dt, 1e-9):.0f} samples/s)"
+        )
+        return 0
+
+    sizes = np.clip(
+        rng.poisson(args.batch, args.requests), 1, None
+    ).astype(int)
+    requests = [
+        rng.standard_normal((n, args.feature_dim)).astype(np.float32)
+        for n in sizes
+    ]
+    total_rows = int(sum(sizes))
+    server = GNBServer(
+        head,
+        max_batch_rows=args.max_batch_rows,
+        max_delay_s=args.max_delay_ms * 1e-3,
+        # serve_requests submits the whole workload up front — the queue
+        # bound must admit it all or the CLI would trip its own backpressure
+        max_queue_rows=max(2 * total_rows, 64 * args.max_batch_rows),
     )
-    feats = jnp.asarray(
-        rng.standard_normal((args.batch, args.feature_dim)), jnp.float32
-    )
-    t0 = time.time()
-    logits, pred = gnb_serve(head, feats)
-    jax.block_until_ready(pred)
-    dt = time.time() - t0
+    with server:
+        results, dt = timed(serve_requests, server, requests, 300.0)
+    snap = server.metrics.snapshot()
+    print(json.dumps(snap, indent=2))
+    rows = sum(r.logits.shape[0] for r in results)
     print(
-        f"scored {args.batch} x {args.feature_dim} -> {logits.shape[1]} classes "
-        f"in {dt*1e3:.1f} ms ({args.batch / max(dt, 1e-9):.0f} samples/s)"
+        f"served {len(results)} requests / {rows} rows in {dt*1e3:.1f} ms "
+        f"(p95 {snap['latency_p95_ms']:.2f} ms, "
+        f"pad waste {snap['pad_waste_frac']*100:.1f}%)"
     )
     return 0
 

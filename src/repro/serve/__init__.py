@@ -1,0 +1,42 @@
+"""repro.serve — the GNB serving subsystem (queue → batcher → kernel → head).
+
+FedCGS produces a training-free linear head from ONE communication
+round of feature statistics; this package is the deployment half of
+that story (ROADMAP "GNB serving as a real endpoint"): a request
+queue with dynamic batching over the fused ``kernels.gnb_logits``
+Pallas kernel, a versioned head registry with atomic hot-swap fed by
+completed :class:`~repro.core.stats_pipeline.StatsPipeline` rounds,
+and a thread-driven run loop with latency/throughput/occupancy
+metrics and graceful drain.
+
+Layers (each importable on its own):
+
+- :mod:`repro.serve.scoring`  — stateless row scoring: block-padded
+  kernel call locally, pad-to-shards + ``shard_map`` on a mesh;
+- :mod:`repro.serve.metrics`  — latency percentiles, throughput,
+  batch-occupancy and pad-waste counters (plus the shared ``timed``
+  wall-clock helper the benchmarks reuse);
+- :mod:`repro.serve.batcher`  — the request queue + dynamic batcher
+  (admission by max-rows / max-delay, block-multiple padding so the
+  whole workload costs a handful of jit traces, backpressure);
+- :mod:`repro.serve.registry` — versioned ``LinearHead`` store with
+  atomic publish and the one-call "FL round → live head" ingest;
+- :mod:`repro.serve.server`   — ``GNBServer`` gluing them together.
+"""
+
+from repro.serve.batcher import DynamicBatcher, QueueFull, ServeResult
+from repro.serve.metrics import ServeMetrics, timed
+from repro.serve.registry import HeadRegistry
+from repro.serve.scoring import score_features
+from repro.serve.server import GNBServer
+
+__all__ = [
+    "DynamicBatcher",
+    "GNBServer",
+    "HeadRegistry",
+    "QueueFull",
+    "ServeMetrics",
+    "ServeResult",
+    "score_features",
+    "timed",
+]

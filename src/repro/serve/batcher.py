@@ -1,0 +1,221 @@
+"""Request queue + dynamic batcher for the GNB serving loop.
+
+Requests are ragged (any row count ≥ 1); the batcher coalesces whatever
+is in flight each tick into one feature matrix, pads the row count up
+to the ``gnb_logits`` kernel's block multiple (the same zero-row pad
+discipline as ``stats_pipeline._pad_batch`` — padded rows are pure
+garbage lanes that get sliced off, they never reach a caller), scores
+the padded batch ONCE, and slices each request's rows back out.  Row
+counts are always one of ``row_multiple · k`` for small k, so the whole
+workload costs one jit trace per padded shape instead of one per ragged
+request size.
+
+Admission policy: a batch is formed as soon as the queue holds
+``max_batch_rows`` rows OR the oldest request has waited
+``max_delay_s`` — the classic dynamic-batching latency/throughput
+dial.  Backpressure: when the queued rows would exceed
+``max_queue_rows``, ``submit`` raises :class:`QueueFull` instead of
+letting the queue grow without bound.
+
+The batcher owns NO thread and NO kernel call — it is a pure data
+structure (lock-protected deque) the server's run loop drives via
+``ready()`` / ``form_batch()`` / ``complete()``, which keeps every
+policy decision unit-testable without a running server.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.kernels.classifier_kernel import BLOCK_N
+
+Array = np.ndarray
+
+
+class QueueFull(RuntimeError):
+    """Raised by ``submit`` when the queue bound would be exceeded."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeResult:
+    """What a request's future resolves to."""
+
+    logits: Array  # (n_i, C)
+    predictions: Array  # (n_i,)
+    head_version: int  # the registry version that scored these rows
+    latency_s: float  # enqueue → result
+    batch_rows: int  # real rows of the batch this request rode in
+
+
+@dataclasses.dataclass
+class _Pending:
+    features: Array
+    rows: int
+    future: Future
+    enqueued_at: float
+
+
+def pad_rows_to(features: Array, multiple: int) -> Array:
+    """Zero-pad rows up to the next ``multiple`` (no-op when aligned)."""
+    pad = (-features.shape[0]) % multiple
+    if pad == 0:
+        return features
+    return np.pad(features, ((0, pad), (0, 0)))
+
+
+class DynamicBatcher:
+    """Coalesce ragged requests into block-padded kernel batches."""
+
+    def __init__(
+        self,
+        feature_dim: int,
+        *,
+        max_batch_rows: int = 4 * BLOCK_N,
+        max_delay_s: float = 2e-3,
+        max_queue_rows: int = 64 * BLOCK_N,
+        row_multiple: int = BLOCK_N,
+    ):
+        if max_batch_rows < 1 or max_queue_rows < max_batch_rows:
+            raise ValueError(
+                "need max_queue_rows >= max_batch_rows >= 1, got "
+                f"{max_queue_rows} / {max_batch_rows}"
+            )
+        if row_multiple < 1:
+            raise ValueError(f"row_multiple must be >= 1, got {row_multiple}")
+        self.feature_dim = feature_dim
+        self.max_batch_rows = max_batch_rows
+        self.max_delay_s = max_delay_s
+        self.max_queue_rows = max_queue_rows
+        self.row_multiple = row_multiple
+        self._lock = threading.Lock()
+        self._queue: collections.deque[_Pending] = collections.deque()
+        self._queued_rows = 0
+
+    # -- producer side ------------------------------------------------------
+
+    def submit(self, features) -> Future:
+        """Enqueue one request; returns a Future of :class:`ServeResult`.
+
+        A request larger than ``max_batch_rows`` is admitted whole (it
+        forms its own oversized batch) as long as it fits the queue
+        bound; anything that would push the queue past
+        ``max_queue_rows`` raises :class:`QueueFull` — callers see the
+        backpressure instead of unbounded latency.
+        """
+        f = np.asarray(features, dtype=np.float32)
+        if f.ndim != 2 or f.shape[1] != self.feature_dim:
+            raise ValueError(
+                f"expected (n, {self.feature_dim}) features, got {f.shape}"
+            )
+        if f.shape[0] < 1:
+            raise ValueError("empty request (0 rows)")
+        pending = _Pending(
+            features=f, rows=f.shape[0], future=Future(),
+            enqueued_at=time.perf_counter(),
+        )
+        with self._lock:
+            if self._queued_rows + pending.rows > self.max_queue_rows:
+                raise QueueFull(
+                    f"queue holds {self._queued_rows} rows; "
+                    f"+{pending.rows} exceeds the {self.max_queue_rows} bound"
+                )
+            self._queue.append(pending)
+            self._queued_rows += pending.rows
+        return pending.future
+
+    # -- consumer side (the server's run loop) ------------------------------
+
+    @property
+    def queued_rows(self) -> int:
+        with self._lock:
+            return self._queued_rows
+
+    @property
+    def pending_requests(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+    def ready(self, now: Optional[float] = None) -> bool:
+        """Admission policy: enough rows, or the oldest waited too long."""
+        now = time.perf_counter() if now is None else now
+        with self._lock:
+            if not self._queue:
+                return False
+            if self._queued_rows >= self.max_batch_rows:
+                return True
+            return (now - self._queue[0].enqueued_at) >= self.max_delay_s
+
+    def form_batch(self) -> Tuple[List[_Pending], Array, int]:
+        """Pop FIFO requests up to ``max_batch_rows`` and coalesce them.
+
+        Returns ``(pendings, padded_features, real_rows)``; the padded
+        row count is the least ``row_multiple`` multiple covering the
+        real rows.  The first request is always admitted even if it
+        alone exceeds ``max_batch_rows``.
+        """
+        taken: List[_Pending] = []
+        rows = 0
+        with self._lock:
+            while self._queue:
+                nxt = self._queue[0]
+                if taken and rows + nxt.rows > self.max_batch_rows:
+                    break
+                self._queue.popleft()
+                self._queued_rows -= nxt.rows
+                taken.append(nxt)
+                rows += nxt.rows
+        if not taken:
+            return [], np.zeros((0, self.feature_dim), np.float32), 0
+        feats = (
+            taken[0].features
+            if len(taken) == 1
+            else np.concatenate([p.features for p in taken], axis=0)
+        )
+        return taken, pad_rows_to(feats, self.row_multiple), rows
+
+    def complete(
+        self,
+        pendings: Sequence[_Pending],
+        logits,
+        head_version: int,
+        *,
+        batch_rows: int,
+    ) -> List[ServeResult]:
+        """Slice per-request rows out of the batch logits, resolve futures."""
+        logits = np.asarray(logits)
+        now = time.perf_counter()
+        offset = 0
+        results: List[ServeResult] = []
+        for p in pendings:
+            sl = logits[offset : offset + p.rows]
+            offset += p.rows
+            result = ServeResult(
+                logits=sl,
+                predictions=np.argmax(sl, axis=-1),
+                head_version=head_version,
+                latency_s=now - p.enqueued_at,
+                batch_rows=batch_rows,
+            )
+            results.append(result)
+            p.future.set_result(result)
+        return results
+
+    def fail(self, pendings: Sequence[_Pending], exc: BaseException) -> None:
+        for p in pendings:
+            if not p.future.done():
+                p.future.set_exception(exc)
+
+    def drain_pending(self) -> List[_Pending]:
+        """Pop EVERYTHING (shutdown without scoring — callers fail them)."""
+        with self._lock:
+            taken = list(self._queue)
+            self._queue.clear()
+            self._queued_rows = 0
+        return taken

@@ -1,0 +1,123 @@
+"""Serving metrics: latency percentiles, throughput, occupancy, pad waste.
+
+One thread-safe accumulator the server's run loop feeds per tick.  The
+counters answer the questions a dynamic batcher raises: how long do
+requests wait end-to-end (p50/p95/p99), how full are the batches the
+kernel actually sees (occupancy), and how many padded rows were burned
+to keep the jit-trace count bounded (pad waste).
+
+The wall-clock primitive itself lives in the dependency-free
+``repro.timing`` (re-exported here for the serve-facing API); the
+benchmark reporter's ``timeit`` and the serve CLI wrap the same
+function instead of hand-rolling ``time.time()`` pairs.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Dict, Optional
+
+from repro.timing import timed
+
+__all__ = ["ServeMetrics", "percentile", "timed"]
+
+
+def percentile(sorted_values, q: float) -> float:
+    """Nearest-rank percentile of an already-sorted sequence (q in [0, 1])."""
+    if not sorted_values:
+        return float("nan")
+    idx = min(len(sorted_values) - 1, max(0, round(q * (len(sorted_values) - 1))))
+    return float(sorted_values[idx])
+
+
+class ServeMetrics:
+    """Counters for the serving loop (all methods thread-safe).
+
+    ``capacity_rows`` (the batcher's max-rows admission bound) turns the
+    per-batch row counts into an occupancy fraction; without it the
+    snapshot reports mean rows per batch instead.
+    """
+
+    def __init__(self, *, capacity_rows: Optional[int] = None,
+                 latency_window: int = 65536):
+        self._lock = threading.Lock()
+        self._capacity_rows = capacity_rows
+        self._latencies = collections.deque(maxlen=latency_window)
+        self._requests = 0
+        self._rows = 0
+        self._padded_rows = 0
+        self._batches = 0
+        self._score_s = 0.0
+        self._swaps = 0
+        self._rejected = 0
+        self._first_t: Optional[float] = None
+        self._last_t: Optional[float] = None
+
+    # -- recording ----------------------------------------------------------
+
+    def record_batch(self, *, requests: int, rows: int, padded_rows: int,
+                     score_s: float) -> None:
+        now = time.perf_counter()
+        with self._lock:
+            self._batches += 1
+            self._requests += requests
+            self._rows += rows
+            self._padded_rows += padded_rows
+            self._score_s += score_s
+            if self._first_t is None:
+                self._first_t = now - score_s
+            self._last_t = now
+
+    def record_latency(self, seconds: float) -> None:
+        with self._lock:
+            self._latencies.append(seconds)
+
+    def record_swap(self) -> None:
+        with self._lock:
+            self._swaps += 1
+
+    def record_rejected(self) -> None:
+        with self._lock:
+            self._rejected += 1
+
+    # -- reading ------------------------------------------------------------
+
+    def snapshot(self) -> Dict[str, float]:
+        """A plain-dict view of everything (JSON-ready)."""
+        with self._lock:
+            lat = sorted(self._latencies)
+            span = (
+                (self._last_t - self._first_t)
+                if self._first_t is not None and self._last_t > self._first_t
+                else float("nan")
+            )
+            occupancy = (
+                self._rows / (self._batches * self._capacity_rows)
+                if self._batches and self._capacity_rows
+                else (self._rows / self._batches if self._batches else float("nan"))
+            )
+            return {
+                "requests": self._requests,
+                "rows": self._rows,
+                "batches": self._batches,
+                "rejected": self._rejected,
+                "head_swaps": self._swaps,
+                "latency_p50_ms": percentile(lat, 0.50) * 1e3,
+                "latency_p95_ms": percentile(lat, 0.95) * 1e3,
+                "latency_p99_ms": percentile(lat, 0.99) * 1e3,
+                "throughput_rps": (
+                    self._requests / span if span == span else float("nan")
+                ),
+                "throughput_rows_s": (
+                    self._rows / span if span == span else float("nan")
+                ),
+                "batch_occupancy": occupancy,
+                "pad_waste_frac": (
+                    1.0 - self._rows / self._padded_rows
+                    if self._padded_rows
+                    else float("nan")
+                ),
+                "score_time_s": self._score_s,
+            }

@@ -1,0 +1,131 @@
+"""Versioned GNB-head registry with atomic hot-swap.
+
+The serving loop reads heads from here; one-shot FL rounds write them.
+A head is an immutable :class:`~repro.core.classifier.LinearHead`
+published under a monotonically increasing version; ``current()``
+returns the live ``(version, head)`` as ONE tuple grabbed under the
+registry lock, so a reader can never observe version i paired with
+head j or a half-written (W, b) pair — swap atomicity is by
+construction (immutable value, single reference assignment), not by
+cooperation of the callers.
+
+``refit_from_round`` is the "one-shot FL round → live model update"
+call the tentpole asks for: give it a :class:`StatsPipeline` (ANY cell
+of the backend × placement × privacy knob matrix, dropout recovery
+included) plus the round's client data, and it aggregates the
+statistics, derives (μ, Σ, π), fits the training-free head via
+``core.classifier.gnb_head``, and publishes it — queued requests keep
+flowing and simply start scoring under the new version at their next
+batch tick.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.classifier import LinearHead, gnb_head
+from repro.core.statistics import FeatureStats, derive_global
+
+
+class HeadRegistry:
+    """Thread-safe versioned store of served heads."""
+
+    def __init__(self, head: Optional[LinearHead] = None, *, keep: int = 8):
+        if keep < 1:
+            raise ValueError(f"keep must be >= 1, got {keep}")
+        self._lock = threading.Lock()
+        self._keep = keep
+        self._heads: Dict[int, LinearHead] = {}
+        self._live: Optional[Tuple[int, LinearHead]] = None
+        self._next_version = 0
+        self._subscribers: List[Callable[[int], None]] = []
+        if head is not None:
+            self.publish(head)
+
+    # -- write side ---------------------------------------------------------
+
+    def publish(self, head: LinearHead) -> int:
+        """Atomically make ``head`` the live version; returns its number.
+
+        Old versions are retained (up to ``keep``) so in-flight
+        responses can still be audited against the exact head that
+        scored them.
+        """
+        if head.W.ndim != 2 or head.b.shape != (head.W.shape[0],):
+            raise ValueError(
+                f"malformed head: W {head.W.shape}, b {head.b.shape}"
+            )
+        with self._lock:
+            version = self._next_version
+            self._next_version += 1
+            self._heads[version] = head
+            self._live = (version, head)
+            while len(self._heads) > self._keep:
+                oldest = min(self._heads)
+                if oldest == version:
+                    break
+                del self._heads[oldest]
+            subscribers = list(self._subscribers)
+        for cb in subscribers:
+            cb(version)
+        return version
+
+    def refit_from_stats(self, stats: FeatureStats, *, ridge=None) -> int:
+        """Aggregated (A, B, N) → derive (μ, Σ, π) → GNB head → publish."""
+        return self.publish(gnb_head(derive_global(stats), ridge=ridge))
+
+    def refit_from_round(
+        self,
+        pipeline,
+        clients: Sequence,
+        *,
+        feature_dim: Optional[int] = None,
+        ridge=None,
+    ) -> int:
+        """Run one FedCGS aggregation round and hot-swap the result in.
+
+        ``pipeline`` is a :class:`repro.core.stats_pipeline.StatsPipeline`
+        carrying the round's knobs (backend, placement, privacy,
+        dropout/min_survivors); ``clients`` is its ``from_cohort``
+        cohort.  The registry stays serveable the whole time — the swap
+        is the last, atomic step.
+        """
+        stats = pipeline.from_cohort(clients, feature_dim=feature_dim)
+        return self.refit_from_stats(stats, ridge=ridge)
+
+    def subscribe(self, callback: Callable[[int], None]) -> None:
+        """``callback(version)`` fires after every publish (metrics hook)."""
+        with self._lock:
+            self._subscribers.append(callback)
+
+    # -- read side ----------------------------------------------------------
+
+    def current(self) -> Tuple[int, LinearHead]:
+        with self._lock:
+            if self._live is None:
+                raise LookupError("registry has no published head yet")
+            return self._live
+
+    def head(self, version: int) -> LinearHead:
+        with self._lock:
+            try:
+                return self._heads[version]
+            except KeyError:
+                raise LookupError(
+                    f"head version {version} unknown or evicted "
+                    f"(retained: {sorted(self._heads)})"
+                ) from None
+
+    @property
+    def latest_version(self) -> Optional[int]:
+        with self._lock:
+            return None if self._live is None else self._live[0]
+
+    def versions(self) -> List[int]:
+        with self._lock:
+            return sorted(self._heads)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._heads)

@@ -1,0 +1,74 @@
+"""Stateless GNB scoring: feature rows → logits through the fused kernel.
+
+The one compute path every serving layer shares.  Locally the jit'd
+``kernels.gnb_logits`` wrapper owns block padding; on a mesh the rows
+are first padded to divide the live client axes (zero rows score
+garbage logits that are sliced off — the head is replicated, logits
+are row-parallel, so the shard_map needs no collective).  The batcher
+feeds this function row counts that are already block multiples, so
+the whole serving workload compiles to a handful of traces.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.kernels import gnb_logits
+from repro.sharding import shard_map
+
+Array = jax.Array
+
+
+def live_axes(mesh: Mesh, client_axes: Tuple[str, ...]) -> Tuple[str, ...]:
+    return tuple(a for a in client_axes if a in mesh.axis_names)
+
+
+def num_shards(mesh: Mesh, client_axes: Tuple[str, ...]) -> int:
+    from repro.launch.stats_engine import _num_shards
+
+    return _num_shards(mesh, live_axes(mesh, client_axes))
+
+
+def score_features(
+    features: Array,
+    w: Array,
+    b: Array,
+    *,
+    mesh: Optional[Mesh] = None,
+    client_axes: Tuple[str, ...] = ("data",),
+    interpret: Optional[bool] = None,
+) -> Array:
+    """logits (n, C) for feature rows (n, d) under head (w (C, d), b (C,)).
+
+    With ``mesh`` the rows are sharded over the live ``client_axes``:
+    any row count is accepted — rows are zero-padded up to the shard
+    count (pad-to-shards) and the padding is sliced back off, so ragged
+    request batches never error out of the mesh path.
+    """
+    features = jnp.asarray(features)
+    n = features.shape[0]
+    if mesh is None:
+        return gnb_logits(features, w, b, interpret=interpret)
+
+    axes = live_axes(mesh, client_axes)
+    if not axes:
+        return gnb_logits(features, w, b, interpret=interpret)
+    shards = num_shards(mesh, client_axes)
+    pad = (-n) % shards
+    if pad:
+        features = jnp.pad(features, ((0, pad), (0, 0)))
+
+    def shard_fn(f_shard: Array, w_: Array, b_: Array) -> Array:
+        return gnb_logits(f_shard, w_, b_, interpret=interpret)
+
+    fn = shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(axes), P(), P()),
+        out_specs=P(axes),
+        check_rep=False,  # pallas_call has no replication rule
+    )
+    return fn(features, w, b)[:n]

@@ -1,0 +1,226 @@
+"""GNBServer — the thread-driven run loop tying the subsystem together.
+
+One worker thread owns every kernel call: it polls the batcher's
+admission policy, forms a block-padded batch, reads the live
+``(version, head)`` atomically from the registry, scores the batch
+(locally or row-sharded over a mesh via :func:`serve.scoring`), and
+resolves the per-request futures — recording latency percentiles,
+throughput, batch occupancy and pad waste into :class:`ServeMetrics`.
+
+Hot-swap is free here: the registry is read once per tick, so every
+request in a batch is scored by exactly one head version (the one
+recorded in its :class:`ServeResult`), and a ``refit_from_round``
+landing mid-traffic simply takes effect at the next tick without
+dropping anything queued.
+
+Lifecycle: ``start()`` (or use as a context manager) → ``submit()`` /
+``score()`` → ``drain()`` (flush the queue, keep serving) or
+``shutdown()`` (graceful by default: stop admissions, drain, stop the
+thread; ``drain=False`` fails whatever is still queued).
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+from concurrent.futures import Future
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.classifier import LinearHead
+from repro.serve.batcher import DynamicBatcher, ServeResult
+from repro.serve.metrics import ServeMetrics, timed
+from repro.serve.registry import HeadRegistry
+from repro.serve.scoring import num_shards, score_features
+
+from repro.kernels.classifier_kernel import BLOCK_N
+
+
+class GNBServer:
+    """Dynamic-batching server for the FedCGS GNB head."""
+
+    def __init__(
+        self,
+        head: Optional[LinearHead] = None,
+        *,
+        registry: Optional[HeadRegistry] = None,
+        feature_dim: Optional[int] = None,
+        mesh=None,
+        client_axes: Tuple[str, ...] = ("data",),
+        interpret: Optional[bool] = None,
+        max_batch_rows: int = 4 * BLOCK_N,
+        max_delay_s: float = 2e-3,
+        max_queue_rows: int = 64 * BLOCK_N,
+        poll_interval_s: float = 1e-4,
+    ):
+        if registry is None:
+            registry = HeadRegistry()
+        if head is not None:
+            registry.publish(head)
+        if registry.latest_version is None:
+            raise ValueError("need an initial head (or a non-empty registry)")
+        self.registry = registry
+        _, live = registry.current()
+        d = int(live.W.shape[1]) if feature_dim is None else feature_dim
+        self.mesh = mesh
+        self.client_axes = client_axes
+        self.interpret = interpret
+        # pad target: kernel block rows AND an even shard split — one
+        # number so the mesh path never re-pads what the batcher padded
+        multiple = BLOCK_N
+        if mesh is not None:
+            multiple = math.lcm(BLOCK_N, num_shards(mesh, client_axes))
+        self.batcher = DynamicBatcher(
+            d,
+            max_batch_rows=max_batch_rows,
+            max_delay_s=max_delay_s,
+            max_queue_rows=max_queue_rows,
+            row_multiple=multiple,
+        )
+        self.metrics = ServeMetrics(capacity_rows=max_batch_rows)
+        # count hot-swaps AFTER the initial head: every later publish is one
+        self.registry.subscribe(lambda _v: self.metrics.record_swap())
+        self._poll_interval_s = poll_interval_s
+        self._state_lock = threading.Lock()
+        self._closed = False
+        self._stop = threading.Event()
+        self._in_tick = False
+        self._thread: Optional[threading.Thread] = None
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> "GNBServer":
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        self._thread = threading.Thread(
+            target=self._run_loop, name="gnb-serve", daemon=True
+        )
+        self._thread.start()
+        return self
+
+    def __enter__(self) -> "GNBServer":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.shutdown(drain=exc_type is None)
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until everything queued has been scored (keeps serving)."""
+        deadline = None if timeout is None else timeout + _now()
+        while self.batcher.pending_requests or self._in_tick:
+            if deadline is not None and _now() > deadline:
+                raise TimeoutError("drain timed out")
+            _sleep(self._poll_interval_s)
+
+    def shutdown(self, *, drain: bool = True, timeout: Optional[float] = None) -> None:
+        """Stop admissions; drain (default) or fail the queue; stop the thread.
+
+        A drain timeout still stops the worker and fails whatever is
+        left queued (then re-raises), so the server is never left
+        half-shut with futures that can no longer resolve.
+        """
+        with self._state_lock:
+            self._closed = True
+        try:
+            if drain and self.running:
+                self.drain(timeout)
+        finally:
+            self._stop.set()
+            if self._thread is not None:
+                self._thread.join(timeout)
+            leftovers = self.batcher.drain_pending()
+            if leftovers:
+                self.batcher.fail(
+                    leftovers, RuntimeError("server shut down before scoring")
+                )
+
+    # -- request side -------------------------------------------------------
+
+    def submit(self, features) -> Future:
+        """Enqueue rows; the Future resolves to a :class:`ServeResult`.
+
+        Raises :class:`serve.batcher.QueueFull` under backpressure and
+        ``RuntimeError`` once the server stopped admitting.
+        """
+        # enqueue under the state lock: a concurrent shutdown() cannot
+        # close-and-fail the queue between our _closed check and the
+        # enqueue, which would strand this request's future forever
+        with self._state_lock:
+            if self._closed:
+                raise RuntimeError("server is shut down (not admitting)")
+            try:
+                return self.batcher.submit(features)
+            except Exception:
+                self.metrics.record_rejected()
+                raise
+
+    def score(self, features, timeout: Optional[float] = None) -> ServeResult:
+        """Synchronous convenience: submit + wait."""
+        return self.submit(features).result(timeout=timeout)
+
+    # -- worker -------------------------------------------------------------
+
+    def _run_loop(self) -> None:
+        while True:
+            if self._stop.is_set():
+                return
+            if self.batcher.ready():
+                self._in_tick = True
+                try:
+                    self._tick()
+                finally:
+                    self._in_tick = False
+            else:
+                _sleep(self._poll_interval_s)
+
+    def _tick(self) -> None:
+        pendings, padded, rows = self.batcher.form_batch()
+        if not pendings:
+            return
+        version, head = self.registry.current()  # atomic (version, head) read
+        try:
+            logits, dt = timed(self._score_padded, padded, head)
+            logits = np.asarray(logits)[:rows]  # blocks until ready
+        except Exception as exc:  # noqa: BLE001 — fail the batch, keep serving
+            self.batcher.fail(pendings, exc)
+            return
+        results = self.batcher.complete(pendings, logits, version, batch_rows=rows)
+        self.metrics.record_batch(
+            requests=len(pendings), rows=rows, padded_rows=padded.shape[0],
+            score_s=dt,
+        )
+        for r in results:
+            self.metrics.record_latency(r.latency_s)
+
+    def _score_padded(self, padded: np.ndarray, head: LinearHead):
+        return score_features(
+            padded, head.W, head.b,
+            mesh=self.mesh, client_axes=self.client_axes,
+            interpret=self.interpret,
+        )
+
+
+def _now() -> float:
+    import time
+
+    return time.perf_counter()
+
+
+def _sleep(seconds: float) -> None:
+    import time
+
+    time.sleep(seconds)
+
+
+def serve_requests(
+    server: GNBServer, requests: Sequence[np.ndarray],
+    timeout: Optional[float] = None,
+) -> List[ServeResult]:
+    """Submit a request list and gather results in order (test/CLI helper)."""
+    futures = [server.submit(r) for r in requests]
+    return [f.result(timeout=timeout) for f in futures]

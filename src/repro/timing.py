@@ -1,0 +1,19 @@
+"""The repo's one wall-clock primitive.
+
+Every layer that times something — the benchmark reporter, the serving
+metrics, the launch CLIs — wraps :func:`timed` instead of hand-rolling
+``time.perf_counter()`` pairs, so timing semantics can't drift between
+them.  Deliberately dependency-free: importing this pulls in nothing.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+
+def timed(fn: Callable, *args, **kwargs) -> Tuple[object, float]:
+    """(result, wall_seconds) for one call."""
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    return out, time.perf_counter() - t0

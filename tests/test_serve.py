@@ -1,0 +1,447 @@
+"""repro.serve: the dynamic-batching GNB serving subsystem.
+
+- batcher coalescing + block padding is EXACT: every request's rows,
+  scored as part of any coalesced padded batch, are bit-identical to
+  scoring that request alone through ``kernels.gnb_logits``
+  (hypothesis over ragged request sizes, plus a deterministic sweep);
+- hot-swap atomicity: under concurrent submits and repeated publishes,
+  every response is bit-identical to the head version it REPORTS —
+  no request is ever scored by a half-written or mixed head;
+- backpressure (QueueFull past the queue bound) and graceful
+  drain/shutdown semantics;
+- the acceptance end-to-end: ragged concurrent traffic, a secure +
+  dropout StatsPipeline cohort round hot-swapping the head mid-stream,
+  every response bit-identical to its recorded head version;
+- mesh-sharded smoke on 8 simulated devices via subprocess.
+"""
+
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import optional_hypothesis, subprocess_env
+
+given, settings, st = optional_hypothesis()
+
+from repro.core.classifier import LinearHead, gnb_head
+from repro.core.statistics import derive_global
+from repro.core.stats_pipeline import StatsPipeline
+from repro.kernels import gnb_logits
+from repro.serve import DynamicBatcher, GNBServer, HeadRegistry, QueueFull
+from repro.serve.metrics import ServeMetrics, percentile
+
+
+def _head(d, c, seed=0):
+    rng = np.random.default_rng(seed)
+    return LinearHead(
+        W=jnp.asarray(rng.standard_normal((c, d)), jnp.float32),
+        b=jnp.asarray(rng.standard_normal(c), jnp.float32),
+    )
+
+
+def _requests(sizes, d, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal((n, d)).astype(np.float32) for n in sizes]
+
+
+def _direct(head, feats):
+    return np.asarray(gnb_logits(jnp.asarray(feats), head.W, head.b))
+
+
+def _drive_batcher(batcher, head):
+    """Score everything queued exactly the way the server loop does."""
+    while batcher.pending_requests:
+        pendings, padded, rows = batcher.form_batch()
+        logits = _direct(head, padded)[:rows]
+        batcher.complete(pendings, logits, 0, batch_rows=rows)
+
+
+# ---------------------------------------------------------------------------
+# batcher: coalescing + padding exactness
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    sizes=st.lists(st.integers(min_value=1, max_value=40), min_size=1,
+                   max_size=8),
+    seed=st.integers(min_value=0, max_value=5),
+)
+def test_batcher_exactness_ragged(sizes, seed):
+    """Any ragged mix of request sizes: coalesced+padded scoring per
+    request is bit-identical to scoring the request alone."""
+    d, c = 8, 5
+    head = _head(d, c, seed)
+    reqs = _requests(sizes, d, seed)
+    batcher = DynamicBatcher(d, max_batch_rows=64, max_queue_rows=4096)
+    futures = [batcher.submit(r) for r in reqs]
+    _drive_batcher(batcher, head)
+    for fut, req in zip(futures, reqs):
+        res = fut.result(timeout=0)
+        np.testing.assert_array_equal(res.logits, _direct(head, req))
+        np.testing.assert_array_equal(
+            res.predictions, np.argmax(_direct(head, req), axis=-1)
+        )
+
+
+def test_batcher_exactness_deterministic():
+    """Bare-env (no hypothesis) version: ragged sizes incl. one request
+    larger than max_batch_rows (admitted whole, its own batch)."""
+    d, c = 16, 7
+    head = _head(d, c, 3)
+    sizes = [1, 33, 7, 300, 2, 64]
+    reqs = _requests(sizes, d, 3)
+    batcher = DynamicBatcher(d, max_batch_rows=128, max_queue_rows=4096)
+    futures = [batcher.submit(r) for r in reqs]
+    batches = 0
+    while batcher.pending_requests:
+        pendings, padded, rows = batcher.form_batch()
+        assert padded.shape[0] % batcher.row_multiple == 0
+        assert padded.shape[0] >= rows
+        logits = _direct(head, padded)[:rows]
+        batcher.complete(pendings, logits, 0, batch_rows=rows)
+        batches += 1
+    assert batches > 1  # the 300-row request forced a split
+    for fut, req in zip(futures, reqs):
+        np.testing.assert_array_equal(
+            fut.result(timeout=0).logits, _direct(head, req)
+        )
+
+
+def test_batcher_admission_policy():
+    d = 4
+    batcher = DynamicBatcher(
+        d, max_batch_rows=32, max_delay_s=10.0, max_queue_rows=64
+    )
+    assert not batcher.ready()
+    batcher.submit(np.zeros((8, d), np.float32))
+    now = time.perf_counter()
+    assert not batcher.ready(now)  # 8 rows < 32, no delay elapsed
+    assert batcher.ready(now + 11.0)  # oldest waited past max_delay_s
+    batcher.submit(np.zeros((24, d), np.float32))
+    assert batcher.ready(now)  # 32 rows reach max_batch_rows
+    batcher.drain_pending()
+
+
+def test_batcher_rejects_malformed():
+    batcher = DynamicBatcher(8)
+    with pytest.raises(ValueError):
+        batcher.submit(np.zeros((3, 9), np.float32))  # wrong feature dim
+    with pytest.raises(ValueError):
+        batcher.submit(np.zeros((0, 8), np.float32))  # empty request
+
+
+# ---------------------------------------------------------------------------
+# backpressure + drain/shutdown
+# ---------------------------------------------------------------------------
+
+
+def test_backpressure_queue_full():
+    d = 4
+    batcher = DynamicBatcher(d, max_batch_rows=16, max_queue_rows=16)
+    batcher.submit(np.zeros((10, d), np.float32))
+    with pytest.raises(QueueFull):
+        batcher.submit(np.zeros((7, d), np.float32))  # 17 > 16
+    batcher.submit(np.zeros((6, d), np.float32))  # exactly at the bound
+
+
+def test_server_backpressure_counts_rejections():
+    d, c = 8, 3
+    server = GNBServer(
+        _head(d, c), max_batch_rows=16, max_queue_rows=16,
+        max_delay_s=60.0,  # the worker never fires on its own
+    )
+    # not started: the queue only fills
+    server.submit(np.zeros((12, d), np.float32))
+    with pytest.raises(QueueFull):
+        server.submit(np.zeros((12, d), np.float32))
+    assert server.metrics.snapshot()["rejected"] == 1
+    server.shutdown(drain=False)
+
+
+def test_server_drain_and_shutdown():
+    d, c = 8, 3
+    head = _head(d, c)
+    server = GNBServer(head, max_delay_s=1e-3).start()
+    futures = [server.submit(r) for r in _requests([3, 50, 7, 129], d, 1)]
+    server.drain(timeout=60)
+    assert all(f.done() for f in futures)
+    server.shutdown()
+    with pytest.raises(RuntimeError):
+        server.submit(np.zeros((1, d), np.float32))
+    assert not server.running
+
+
+def test_server_shutdown_without_drain_fails_pending():
+    d, c = 8, 3
+    server = GNBServer(
+        _head(d, c), max_delay_s=60.0, max_batch_rows=1 << 14,
+    ).start()
+    fut = server.submit(np.zeros((2, d), np.float32))
+    server.shutdown(drain=False)
+    with pytest.raises(RuntimeError, match="shut down"):
+        fut.result(timeout=0)
+
+
+# ---------------------------------------------------------------------------
+# registry: versioning + refit
+# ---------------------------------------------------------------------------
+
+
+def test_registry_versions_and_eviction():
+    d, c = 4, 3
+    reg = HeadRegistry(keep=2)
+    assert reg.latest_version is None
+    with pytest.raises(LookupError):
+        reg.current()
+    v0 = reg.publish(_head(d, c, 0))
+    v1 = reg.publish(_head(d, c, 1))
+    v2 = reg.publish(_head(d, c, 2))
+    assert (v0, v1, v2) == (0, 1, 2)
+    assert reg.versions() == [1, 2]  # keep=2 evicted v0
+    with pytest.raises(LookupError):
+        reg.head(v0)
+    ver, live = reg.current()
+    assert ver == v2
+    np.testing.assert_array_equal(np.asarray(live.W), np.asarray(reg.head(v2).W))
+
+
+def test_registry_refit_matches_direct_head():
+    rng = np.random.default_rng(7)
+    n, d, c = 160, 8, 4
+    feats = rng.standard_normal((n, d)).astype(np.float32)
+    labels = rng.integers(0, c, n).astype(np.int32)
+    clients = [(feats[:80], labels[:80]), (feats[80:], labels[80:])]
+    pipe = StatsPipeline(c)
+    reg = HeadRegistry()
+    version = reg.refit_from_round(pipe, clients)
+    want = gnb_head(derive_global(pipe.from_cohort(clients)))
+    got = reg.head(version)
+    np.testing.assert_array_equal(np.asarray(got.W), np.asarray(want.W))
+    np.testing.assert_array_equal(np.asarray(got.b), np.asarray(want.b))
+
+
+# ---------------------------------------------------------------------------
+# hot-swap atomicity under concurrent submits
+# ---------------------------------------------------------------------------
+
+
+def test_hot_swap_atomicity_under_concurrent_submits():
+    """Producers hammer the queue while heads are republished; every
+    response must be bit-identical to a direct score under the exact
+    version it reports — a torn/mixed head would match neither."""
+    d, c = 8, 4
+    heads = {0: _head(d, c, 0)}
+    registry = HeadRegistry(heads[0], keep=64)
+    server = GNBServer(
+        registry=registry, max_delay_s=2e-4, poll_interval_s=5e-5,
+    ).start()
+
+    results, errors = [], []
+    stop = threading.Event()
+
+    def producer(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(25):
+                req = rng.standard_normal(
+                    (int(rng.integers(1, 24)), d)
+                ).astype(np.float32)
+                results.append((req, server.submit(req)))
+                time.sleep(float(rng.uniform(0, 1e-3)))
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=producer, args=(s,)) for s in range(4)]
+    for t in threads:
+        t.start()
+    # swap heads mid-traffic
+    for v in range(1, 6):
+        time.sleep(5e-3)
+        heads[v] = _head(d, c, seed=100 + v)
+        assert registry.publish(heads[v]) == v
+    for t in threads:
+        t.join()
+    server.drain(timeout=120)
+    server.shutdown()
+    assert not errors, errors
+
+    seen_versions = set()
+    for req, fut in results:
+        res = fut.result(timeout=0)
+        seen_versions.add(res.head_version)
+        np.testing.assert_array_equal(
+            res.logits, _direct(heads[res.head_version], req)
+        )
+    assert len(seen_versions) > 1, "traffic never crossed a swap"
+    assert server.metrics.snapshot()["head_swaps"] == 5
+
+
+# ---------------------------------------------------------------------------
+# acceptance end-to-end: FL round (secure + dropout) hot-swaps mid-traffic
+# ---------------------------------------------------------------------------
+
+
+def test_end_to_end_fl_round_hot_swap():
+    """Initial head → ragged concurrent traffic → a secure+dropout
+    StatsPipeline cohort round refits and hot-swaps mid-traffic → more
+    traffic.  Every response is bit-identical to directly scoring its
+    rows with the head version that was live when it was batched, and
+    both versions actually served."""
+    rng = np.random.default_rng(11)
+    n, d, c = 480, 16, 5
+    feats = rng.standard_normal((n, d)).astype(np.float32)
+    labels = rng.integers(0, c, n).astype(np.int32)
+
+    # initial head: plain round over the first half of the data
+    pipe0 = StatsPipeline(c)
+    registry = HeadRegistry(keep=8)
+    v0 = registry.refit_from_stats(pipe0.from_arrays(feats[: n // 2],
+                                                     labels[: n // 2]))
+    server = GNBServer(registry=registry, max_delay_s=5e-4).start()
+
+    reqs = _requests([3, 61, 7, 150, 1, 40], d, seed=21)
+    first = [(r, server.submit(r)) for r in reqs[:3]]
+
+    # the one-shot FL round, secure aggregation + dropout recovery on:
+    # 6 clients, two drop, Shamir threshold 3 — then the atomic swap
+    clients = [
+        (feats[i * 80 : (i + 1) * 80], labels[i * 80 : (i + 1) * 80])
+        for i in range(6)
+    ]
+    round_pipe = StatsPipeline(
+        c, privacy="secure", dropout=[1, 4], min_survivors=3,
+        mask_scale=10.0,
+    )
+    v1 = registry.refit_from_round(round_pipe, clients)
+    assert v1 == v0 + 1
+
+    second = [(r, server.submit(r)) for r in reqs[3:]]
+    server.drain(timeout=120)
+    server.shutdown()
+
+    versions = set()
+    for req, fut in first + second:
+        res = fut.result(timeout=0)
+        versions.add(res.head_version)
+        np.testing.assert_array_equal(
+            res.logits, _direct(registry.head(res.head_version), req)
+        )
+    # the swap landed mid-traffic: the late requests saw the new head
+    late = [f.result(timeout=0).head_version for _, f in second]
+    assert set(late) == {v1}
+    assert versions == {v0, v1}
+
+    snap = server.metrics.snapshot()
+    assert snap["requests"] == len(reqs)
+    assert snap["head_swaps"] == 1
+    assert snap["rows"] == sum(r.shape[0] for r in reqs)
+    assert 0.0 <= snap["pad_waste_frac"] < 1.0
+
+
+# ---------------------------------------------------------------------------
+# metrics unit behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_nearest_rank():
+    assert percentile([], 0.5) != percentile([], 0.5)  # NaN
+    assert percentile([1.0], 0.99) == 1.0
+    vals = sorted(range(1, 101))
+    # zero-based nearest rank: round(0.5 * 99) = 50 -> the 51st value
+    assert percentile(vals, 0.5) == 51
+    assert percentile(vals, 0.0) == 1
+    assert percentile(vals, 1.0) == 100
+
+
+def test_metrics_accounting():
+    m = ServeMetrics(capacity_rows=100)
+    m.record_batch(requests=2, rows=50, padded_rows=100, score_s=0.0)
+    m.record_batch(requests=1, rows=50, padded_rows=100, score_s=0.0)
+    m.record_latency(0.010)
+    m.record_latency(0.020)
+    snap = m.snapshot()
+    assert snap["requests"] == 3 and snap["batches"] == 2
+    assert snap["batch_occupancy"] == pytest.approx(0.5)
+    assert snap["pad_waste_frac"] == pytest.approx(0.5)
+    assert snap["latency_p50_ms"] == pytest.approx(10.0)
+    assert snap["latency_p99_ms"] == pytest.approx(20.0)
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded smoke (8 simulated devices, subprocess)
+# ---------------------------------------------------------------------------
+
+_MESH_SUBPROCESS_BODY = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np, jax.numpy as jnp
+    from repro.core.classifier import LinearHead
+    from repro.kernels import gnb_logits
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve import GNBServer
+    from repro.serve.server import serve_requests
+
+    assert len(jax.devices()) == 8
+    mesh = make_host_mesh(2)  # (data=4, model=2): 4 row shards
+    rng = np.random.default_rng(5)
+    d, c = 16, 5
+    head = LinearHead(
+        W=jnp.asarray(rng.standard_normal((c, d)), jnp.float32),
+        b=jnp.asarray(rng.standard_normal(c), jnp.float32),
+    )
+    # ragged sizes, none divisible by the 4-shard data axis
+    reqs = [rng.standard_normal((n, d)).astype(np.float32)
+            for n in (3, 61, 7, 259, 1)]
+    with GNBServer(head, mesh=mesh, max_delay_s=1e-3) as server:
+        assert server.batcher.row_multiple % 4 == 0
+        results = serve_requests(server, reqs, timeout=120)
+    for res, req in zip(results, reqs):
+        want = np.asarray(gnb_logits(jnp.asarray(req), head.W, head.b))
+        np.testing.assert_allclose(res.logits, want, rtol=1e-5, atol=1e-4)
+        assert res.logits.shape == (req.shape[0], c)
+    print("SERVE_MESH_OK")
+    """
+)
+
+
+def test_serve_mesh_sharded_subprocess():
+    proc = subprocess.run(
+        [sys.executable, "-c", _MESH_SUBPROCESS_BODY],
+        capture_output=True, text=True, timeout=300,
+        env=subprocess_env(),
+        cwd="/root/repo",
+    )
+    assert "SERVE_MESH_OK" in proc.stdout, proc.stderr[-2000:]
+
+
+# ---------------------------------------------------------------------------
+# serve_bench smoke: the CI artifact is well-formed
+# ---------------------------------------------------------------------------
+
+
+def test_serve_bench_smoke_emits_json(tmp_path):
+    sys.path.insert(0, "/root/repo")
+    try:
+        from benchmarks.common import Reporter
+        from benchmarks.serve_bench import run as bench_run
+    finally:
+        sys.path.pop(0)
+    out = tmp_path / "serve_bench.json"
+    bench_run(Reporter(), smoke=True, json_path=str(out))
+    import json
+
+    data = json.loads(out.read_text())
+    assert data["config"]["mode"] == "smoke"
+    (row,) = data["traffic"]
+    for key in ("latency_p50_ms", "latency_p95_ms", "latency_p99_ms",
+                "throughput_rps", "batch_occupancy", "pad_waste_frac"):
+        assert np.isfinite(row[key]), (key, row)
+    assert row["rejected"] == 0
