@@ -33,29 +33,38 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Reporter
+from benchmarks.roofline import kernel_roofline
 from repro.core.stats_pipeline import StatsPipeline
 from repro.kernels import client_stats, ref
 from repro.kernels.stats_kernel import BLOCK_D, BLOCK_N
 from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS
+from repro.serve.metrics import timed
 
 
 def _bench(fn, *args, iters=3):
     jax.block_until_ready(fn(*args))  # compile + warm
-    t0 = time.time()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.time() - t0) / iters
+
+    def loop():
+        for _ in range(iters):
+            out = fn(*args)
+        return jax.block_until_ready(out)
+
+    _, dt = timed(loop)
+    return dt / iters
 
 
 def _ceil_div(a, b):
     return -(-a // b)
+
+
+def stats_flops(n, d, c):
+    """2nd² + 2nCd: the Gram sweep plus the class-sum sweep."""
+    return 2.0 * n * d * d + 2.0 * n * c * d
 
 
 def traffic_model_bytes(n, d, c, *, fused, block_d=BLOCK_D, block_n=BLOCK_N):
@@ -91,6 +100,9 @@ def compare_fused(reporter: Reporter, n: int, d: int, c: int, *, seed: int = 0,
     t_fused = _bench(lambda: client_stats(f, y, c, fused=True), iters=iters)
     bytes_unfused = traffic_model_bytes(n, d, c, fused=False)
     bytes_fused = traffic_model_bytes(n, d, c, fused=True)
+    flops = stats_flops(n, d, c)
+    roof_fused = kernel_roofline(flops, bytes_fused)
+    roof_unfused = kernel_roofline(flops, bytes_unfused)
 
     reporter.add("kernels", tag, "stats_unfused_ms", t_unfused * 1e3)
     reporter.add("kernels", tag, "stats_fused_ms", t_fused * 1e3)
@@ -99,6 +111,10 @@ def compare_fused(reporter: Reporter, n: int, d: int, c: int, *, seed: int = 0,
     reporter.add("kernels", tag, "hbm_bytes_fused", bytes_fused)
     reporter.add(
         "kernels", tag, "hbm_traffic_ratio", bytes_unfused / bytes_fused
+    )
+    reporter.add(
+        "kernels", tag, "roofline_fused_compute_bound",
+        float(roof_fused["compute_bound"]),
     )
     return {
         "shape": {"n": n, "d": d, "C": c},
@@ -109,6 +125,7 @@ def compare_fused(reporter: Reporter, n: int, d: int, c: int, *, seed: int = 0,
         "hbm_bytes_unfused": bytes_unfused,
         "hbm_bytes_fused": bytes_fused,
         "hbm_traffic_ratio": bytes_unfused / bytes_fused,
+        "roofline": {"fused": roof_fused, "unfused": roof_unfused},
     }
 
 
@@ -160,6 +177,16 @@ def compare_streaming(
     mem_mat_prod = peak_feature_bytes(production_n, d, c)
     mem_stream_prod = peak_feature_bytes(production_n, d, c, batch=batch)
 
+    # roofline positions: the materialized sweep streams the fused tile
+    # traffic once; the streaming fold re-reads the carry every batch
+    flops = stats_flops(n, d, c)
+    bytes_mat = traffic_model_bytes(n, d, c, fused=True)
+    bytes_stream = _ceil_div(n, batch) * traffic_model_bytes(
+        batch, d, c, fused=True
+    )
+    roof_mat = kernel_roofline(flops, bytes_mat)
+    roof_stream = kernel_roofline(flops, bytes_stream)
+
     reporter.add("kernels", tag, "stats_materialized_ms", t_mat * 1e3)
     reporter.add("kernels", tag, "stats_streaming_ms", t_stream * 1e3)
     reporter.add("kernels", tag, "stats_streaming_overhead", t_stream / t_mat)
@@ -181,6 +208,7 @@ def compare_streaming(
         "peak_bytes_materialized_at_production_n": mem_mat_prod,
         "peak_bytes_streaming_at_production_n": mem_stream_prod,
         "peak_bytes_ratio_at_production_n": mem_mat_prod / mem_stream_prod,
+        "roofline": {"materialized": roof_mat, "streaming": roof_stream},
     }
 
 
@@ -213,7 +241,7 @@ def run(
         reporter.add("kernels", tag, "stats_oracle_us", us)
 
         # arithmetic intensity: 2nd² + 2nCd FLOPs over one feature stream
-        flops = 2.0 * n * d * d + 2.0 * n * c * d
+        flops = stats_flops(n, d, c)
         bytes_ = 4.0 * (n * d + d * d + c * d)
         ai = flops / bytes_
         reporter.add("kernels", tag, "stats_flops", flops)

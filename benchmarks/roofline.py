@@ -16,6 +16,34 @@ from benchmarks.common import Reporter
 ARTIFACT_DIR = os.environ.get("DRYRUN_DIR", "/root/repo/experiments/dryrun")
 
 
+def kernel_roofline(
+    flops: float, hbm_bytes: float, *, collective_bytes: float = 0.0,
+    chips: int = 1,
+) -> Dict:
+    """Roofline position of one kernel measurement (modelled numbers).
+
+    Reuses :class:`repro.launch.hlo_analysis.Roofline` — the same
+    machine classification the dry-run artifacts get — so the kernel
+    microbenchmarks (``kernel_bench.py``) and the full-model dry-runs
+    quote positions on the SAME roofline instead of two drifting ones.
+    Adds the arithmetic-intensity view (AI vs the ridge point) the
+    kernel table reasons in.
+    """
+    from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS, Roofline
+
+    roof = Roofline(
+        hlo_flops=flops, hlo_bytes=hbm_bytes,
+        collective_bytes_per_chip=collective_bytes, chips=chips,
+    )
+    out = roof.as_dict()
+    ridge = PEAK_FLOPS / HBM_BW
+    ai = flops / hbm_bytes if hbm_bytes else float("inf")
+    out["arith_intensity"] = ai
+    out["ridge_intensity"] = ridge
+    out["compute_bound"] = bool(ai > ridge)
+    return out
+
+
 def load_artifacts(directory: str = ARTIFACT_DIR) -> List[Dict]:
     out = []
     if not os.path.isdir(directory):

@@ -10,9 +10,9 @@ from __future__ import annotations
 
 import argparse
 import sys
-import time
 
 from benchmarks.common import Reporter
+from repro.serve.metrics import timed
 
 MODULES = [
     "table1_label_shift",
@@ -43,15 +43,14 @@ def main(argv=None) -> int:
     print("bench,config,metric,value")
     failures = []
     for name in mods:
-        t0 = time.time()
         print(f"# === {name} ===", flush=True)
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-            mod.run(reporter, quick=args.quick, seed=args.seed)
+            _, dt = timed(mod.run, reporter, quick=args.quick, seed=args.seed)
+            print(f"# {name} done in {dt:.1f}s", flush=True)
         except Exception as e:  # noqa: BLE001
             failures.append((name, repr(e)))
             print(f"# FAILED {name}: {e!r}", flush=True)
-        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
     if failures:
         print(f"# {len(failures)} benchmark module(s) failed")
         return 1

@@ -1,0 +1,28 @@
+"""repro.analysis — the repo's static-analysis and invariant-audit gate.
+
+Three layers, one finding model, one CLI (``python -m repro.analysis``
+/ ``fedcgs-audit``):
+
+- :mod:`repro.analysis.jaxpr_audit` / :mod:`repro.analysis.hlo_audit` —
+  traced-program rules: collective budgets (the one-psum-per-cohort
+  claim), donation/aliasing survival to compiled HLO, dtype discipline,
+  host-callback screening, and the retrace sentinel;
+- :mod:`repro.analysis.lockcheck` — an AST race checker that learns
+  which ``self._*`` attributes ``repro.serve`` guards with locks and
+  flags accesses outside them;
+- :mod:`repro.analysis.lint` — repo conventions as AST rules (raw
+  shard_map imports, ``time.time()`` timing, unseeded RNGs, the
+  uncentred-second-moment cancellation).
+
+:mod:`repro.analysis.budgets` declares the numeric budgets and runs the
+traced audits; :mod:`repro.analysis.plants` holds one known-bad fixture
+per rule so the gate is provably able to fail.
+
+This module deliberately imports NOTHING jax-flavoured: the CLI must be
+able to set XLA_FLAGS before the first jax import, and the AST rules
+must run in environments with no accelerator stack at all.
+"""
+
+from repro.analysis.findings import Baseline, Finding, as_json
+
+__all__ = ["Baseline", "Finding", "as_json"]

@@ -1,0 +1,246 @@
+"""Declared invariant budgets + the dynamic (traced) audit suite.
+
+Where the AST rules read source, these rules trace the real programs:
+for every cell of the StatsPipeline knob matrix the streaming engine is
+built on a host mesh, its fold/finalize are traced, and the jaxpr/HLO
+rules are applied against the budgets DECLARED here — fold: zero
+collectives, finalize: exactly one, per cohort, per cell.  Alongside
+the collective budgets the same traces are screened for host callbacks
+and dtype leaks, the carry kernel's donation is checked for survival
+to the compiled module, and the retrace sentinel replays a ragged
+batch stream against the one-trace-per-padded-shape contract.
+
+The jitted functions under audit are reached through each layer's
+``AUDITED_JITS`` registry (``core.stats_pipeline``, ``kernels.ops``,
+``serve.scoring``) — a public export, so the audit never pokes at
+privates and a renamed jit breaks the audit loudly instead of silently
+auditing nothing.
+
+Audit workloads use shapes unique to this module (``AUDIT_*``) and
+clear the target jit's cache first, so the retrace counts stay exact
+no matter what traced earlier in the process.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import hlo_audit, jaxpr_audit
+from repro.analysis.findings import Finding
+
+# Shapes no test or benchmark uses: the retrace sentinel counts NEW
+# jit-cache entries, so a colliding shape elsewhere would mask a miss.
+AUDIT_CLASSES = 7
+AUDIT_DIM = 17
+AUDIT_ROWS = 48
+
+# The paper's one-shot claim as numbers: a streaming cohort costs ZERO
+# collectives per fold and EXACTLY ONE at finalize — in every
+# backend × privacy cell.  New sharded paths declare their budget here.
+STREAM_FOLD_COLLECTIVES = 0
+STREAM_FINALIZE_COLLECTIVES = 1
+SCORING_COLLECTIVES = 0  # head replicated, logits row-parallel
+
+# Post-SPMD, XLA lowers the single tree-psum to one all-reduce PER
+# FeatureStats leaf (A, B, N) — still constant in the batch count,
+# which is the claim; the leaf count is the budget at the HLO level.
+STREAM_FINALIZE_HLO_COLLECTIVES = 3
+
+
+def streaming_cells() -> Iterator[Tuple[str, str]]:
+    for backend in ("jnp", "fused"):
+        for privacy in ("plain", "secure"):
+            yield backend, privacy
+
+
+def _streaming_jaxprs(backend: str, privacy: str):
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.stats_engine import make_streaming_engine
+
+    mesh = make_host_mesh(1)
+    carry, fold, finalize = make_streaming_engine(
+        AUDIT_CLASSES, AUDIT_DIM, mesh,
+        use_kernel=(backend == "fused"), secure=(privacy == "secure"),
+        mask_scale=10.0,
+    )
+    f = jnp.zeros((8, AUDIT_DIM))
+    y = jnp.zeros((8,), jnp.int32)
+    return jax.make_jaxpr(fold)(carry, f, y), jax.make_jaxpr(finalize)(carry)
+
+
+def audit_streaming_collectives() -> List[Finding]:
+    """Jaxpr-level budget + hygiene over every knob-matrix cell.
+
+    Jaxpr counts are pre-SPMD, so one host device suffices and the
+    numbers are device-count independent.
+    """
+    out: List[Finding] = []
+    for backend, privacy in streaming_cells():
+        cell = f"stream[{backend},{privacy}]"
+        fold_jx, fin_jx = _streaming_jaxprs(backend, privacy)
+        out += jaxpr_audit.check_collective_budget(
+            f"{cell}.fold", fold_jx, STREAM_FOLD_COLLECTIVES
+        )
+        out += jaxpr_audit.check_collective_budget(
+            f"{cell}.finalize", fin_jx, STREAM_FINALIZE_COLLECTIVES
+        )
+        out += jaxpr_audit.check_no_host_callbacks(f"{cell}.fold", fold_jx)
+        out += jaxpr_audit.check_no_host_callbacks(f"{cell}.finalize", fin_jx)
+        out += jaxpr_audit.check_dtype_discipline(f"{cell}.fold", fold_jx)
+        out += jaxpr_audit.check_dtype_discipline(f"{cell}.finalize", fin_jx)
+    return out
+
+
+def audit_finalize_hlo() -> List[Finding]:
+    """Post-SPMD re-check of the finalize budget on the compiled module.
+
+    The partitioner may insert collectives the jaxpr never asked for
+    (resharding), so the one-psum claim is re-counted on the per-device
+    HLO — loop-aware, in case a collective ever hides under a while.
+    Needs >1 device (the CLI forces 8 simulated CPU devices); on a
+    single device the psum compiles away and the check is vacuous.
+    """
+    if len(jax.devices()) < 2:
+        return []
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.stats_engine import make_streaming_engine
+
+    mesh = make_host_mesh(1)
+    out: List[Finding] = []
+    for privacy in ("plain", "secure"):
+        carry, _fold, finalize = make_streaming_engine(
+            AUDIT_CLASSES, AUDIT_DIM, mesh,
+            use_kernel=False, secure=(privacy == "secure"), mask_scale=10.0,
+        )
+        compiled = jax.jit(finalize).lower(carry).compile()
+        out += hlo_audit.check_hlo_collective_budget(
+            f"stream[jnp,{privacy}].finalize", compiled.as_text(),
+            STREAM_FINALIZE_HLO_COLLECTIVES,
+        )
+    return out
+
+
+def audit_scoring() -> List[Finding]:
+    """The serving scorer: collective-free, callback-free, dtype-clean —
+    both the local block-padded path and the pad-to-shards mesh path."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve.scoring import score_features
+
+    f = jnp.zeros((AUDIT_ROWS, AUDIT_DIM))
+    w = jnp.zeros((AUDIT_CLASSES, AUDIT_DIM))
+    b = jnp.zeros((AUDIT_CLASSES,))
+    out: List[Finding] = []
+    local = jax.make_jaxpr(
+        lambda f_, w_, b_: score_features(f_, w_, b_, interpret=True)
+    )(f, w, b)
+    out += jaxpr_audit.check_collective_budget(
+        "serve.score_features[local]", local, SCORING_COLLECTIVES
+    )
+    out += jaxpr_audit.check_no_host_callbacks("serve.score_features[local]", local)
+    out += jaxpr_audit.check_dtype_discipline("serve.score_features[local]", local)
+
+    mesh = make_host_mesh(1)
+    sharded = jax.make_jaxpr(
+        lambda f_, w_, b_: score_features(
+            f_, w_, b_, mesh=mesh, interpret=True
+        )
+    )(f, w, b)
+    out += jaxpr_audit.check_collective_budget(
+        "serve.score_features[sharded]", sharded, SCORING_COLLECTIVES
+    )
+    out += jaxpr_audit.check_no_host_callbacks(
+        "serve.score_features[sharded]", sharded
+    )
+    return out
+
+
+def audit_carry_donation(*, plant_missing: bool = False) -> List[Finding]:
+    """The streaming carry fold's donation must survive to the compiled
+    module — jax drops donation with at most a warning, and a dropped
+    alias costs a full (d+C, d) carry copy on every batch.
+
+    ``plant_missing`` audits the deliberately NON-donating twin of the
+    same fold (kept for CPU hosts, which can't donate) — the known-bad
+    fixture proving the rule can fail.
+    """
+    from repro.kernels import ops
+    from repro.kernels.stats_kernel import BLOCK_D, BLOCK_N
+
+    key = "kernels.stats_acc" if plant_missing else "kernels.stats_acc_donating"
+    fold = ops.AUDITED_JITS[key]
+    m, n = ops.stats_carry_init(AUDIT_CLASSES, AUDIT_DIM)
+    f = jnp.zeros((AUDIT_ROWS, AUDIT_DIM))
+    y = jnp.zeros((AUDIT_ROWS,), jnp.int32)
+    lowered = fold.lower(
+        m, n, f, y, interpret=True, block_d=BLOCK_D, block_n=BLOCK_N
+    )
+    return hlo_audit.check_donated_aliasing(
+        key,
+        lowered_text=lowered.as_text(),
+        compiled_text=lowered.compile().as_text(),
+    )
+
+
+def _clear_jit_cache(jitted) -> None:
+    clear = getattr(jitted, "clear_cache", None)
+    if clear is not None:
+        clear()
+
+
+def audit_retraces() -> List[Finding]:
+    """One jit trace per padded shape, measured on the real data paths."""
+    from repro.core import stats_pipeline
+    from repro.kernels import ops
+    from repro.serve.scoring import score_features
+
+    out: List[Finding] = []
+
+    # streaming fold: equal batches + a ragged tail, all padded to the
+    # first-seen shape => ONE new trace on the shared jitted fold
+    fold = stats_pipeline.AUDITED_JITS["stats_pipeline.fold_jnp"]
+    _clear_jit_cache(fold)
+    n = AUDIT_ROWS * 3 + 5  # forces a ragged tail batch
+    x = jnp.arange(n * AUDIT_DIM, dtype=jnp.float32).reshape(n, AUDIT_DIM)
+    y = jnp.arange(n, dtype=jnp.int32) % AUDIT_CLASSES
+
+    def stream_workload():
+        return stats_pipeline.StatsPipeline(AUDIT_CLASSES).from_batches(
+            (x[i : i + AUDIT_ROWS], y[i : i + AUDIT_ROWS])
+            for i in range(0, n, AUDIT_ROWS)
+        )
+
+    out += jaxpr_audit.check_single_trace(
+        "stats_pipeline.fold_jnp", fold, stream_workload
+    )
+
+    # serving scorer: repeated same-shape batches => one trace on the
+    # fused head kernel wrapper (the batcher pads rows to block
+    # multiples precisely so this holds for the whole workload)
+    gnb = ops.AUDITED_JITS["kernels.gnb_logits"]
+    _clear_jit_cache(gnb)
+    w = jnp.zeros((AUDIT_CLASSES, AUDIT_DIM))
+    b = jnp.zeros((AUDIT_CLASSES,))
+    rows = jnp.zeros((AUDIT_ROWS, AUDIT_DIM))
+
+    def score_workload():
+        for _ in range(3):
+            score_features(rows, w, b, interpret=True)
+
+    out += jaxpr_audit.check_single_trace(
+        "kernels.gnb_logits", gnb, score_workload
+    )
+    return out
+
+
+def run_dynamic_audits() -> List[Finding]:
+    """Every traced audit, in declaration order."""
+    out: List[Finding] = []
+    out += audit_streaming_collectives()
+    out += audit_finalize_hlo()
+    out += audit_scoring()
+    out += audit_carry_donation()
+    out += audit_retraces()
+    return out

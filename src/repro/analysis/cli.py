@@ -1,0 +1,124 @@
+"""fedcgs-audit — run every analysis rule and gate on the baseline.
+
+    PYTHONPATH=src python -m repro.analysis --check
+
+Static rules (AST, no jax): lock discipline over ``repro/serve``, repo
+lint over ``src/`` and ``benchmarks/``.  Dynamic rules (traced): the
+collective budgets, donation survival, host-callback/dtype screens and
+the retrace sentinel from ``repro.analysis.budgets`` — skipped with
+``--static-only``.
+
+Exit code 0 iff no finding survives baseline subtraction.  The
+baseline (``analysis_baseline.json``) grandfathers old findings keyed
+on (rule, path, message); every entry must carry a justification.
+
+``--plant <rule>`` injects that rule's known-bad fixture into the run —
+the exit code MUST go non-zero, which is how CI proves the gate can
+actually fail (``tests/test_analysis.py`` drives this).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional
+
+
+def repo_root() -> str:
+    """Nearest ancestor of this file holding pyproject.toml, else cwd."""
+    cur = os.path.abspath(os.path.dirname(__file__))
+    for _ in range(6):
+        if os.path.exists(os.path.join(cur, "pyproject.toml")):
+            return cur
+        nxt = os.path.dirname(cur)
+        if nxt == cur:
+            break
+        cur = nxt
+    return os.getcwd()
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    from repro.analysis.plants import PLANTS
+
+    parser = argparse.ArgumentParser(
+        prog="fedcgs-audit", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    parser.add_argument(
+        "--check", action="store_true",
+        help="gate mode (the default behaviour; the flag exists so the "
+             "CI invocation reads as what it is)",
+    )
+    parser.add_argument(
+        "--static-only", action="store_true",
+        help="AST rules only — no jax import, no tracing (fast)",
+    )
+    parser.add_argument(
+        "--baseline", default=None,
+        help="baseline JSON path (default: <repo>/analysis_baseline.json)",
+    )
+    parser.add_argument(
+        "--plant", choices=sorted(PLANTS), default=None,
+        help="inject the named rule's known-bad fixture (exit must be 1)",
+    )
+    parser.add_argument(
+        "--json", action="store_true", dest="as_json",
+        help="emit findings as JSON instead of human-readable lines",
+    )
+    args = parser.parse_args(argv)
+
+    needs_jax = not args.static_only or args.plant in (
+        "collective-budget", "donated-aliasing", "host-callback",
+        "dtype-discipline", "retrace-sentinel",
+    )
+    if needs_jax and "jax" not in sys.modules and "XLA_FLAGS" not in os.environ:
+        # BEFORE the first jax import: the HLO-level budget re-check
+        # needs a real multi-shard partition for a psum to survive SPMD
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+    from repro.analysis import lint, lockcheck
+    from repro.analysis.findings import Baseline, as_json
+
+    root = repo_root()
+    findings = []
+    findings += lockcheck.check_tree(
+        os.path.join(root, "src", "repro", "serve"), rel_to=root
+    )
+    findings += lint.check_paths(
+        [os.path.join(root, "src"), os.path.join(root, "benchmarks")],
+        rel_to=root,
+    )
+    if not args.static_only:
+        from repro.analysis import budgets
+
+        findings += budgets.run_dynamic_audits()
+    if args.plant:
+        planted = PLANTS[args.plant]()
+        if not planted:
+            print(f"PLANT FAILURE: --plant {args.plant} produced no findings "
+                  "(the rule cannot fail; the gate is vacuous)")
+            return 2
+        findings += planted
+
+    baseline = Baseline.load(
+        args.baseline or os.path.join(root, "analysis_baseline.json")
+    )
+    findings += baseline.validate()
+    new, grandfathered = baseline.split(findings)
+
+    if args.as_json:
+        print(as_json(new))
+    else:
+        for f in new:
+            print(f.format())
+        mode = "static rules" if args.static_only else "static + traced rules"
+        print(
+            f"fedcgs-audit: {len(new)} finding(s) "
+            f"({len(grandfathered)} baselined) [{mode}]"
+        )
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,108 @@
+"""The finding/severity model every analysis rule reports through.
+
+A rule never prints or raises: it returns :class:`Finding` rows, and the
+CLI (``repro.analysis.cli``) owns presentation, baseline subtraction,
+and the exit code.  That keeps each rule unit-testable against planted
+violations (``tests/test_analysis.py``) and lets CI gate on "no finding
+that isn't baselined".
+
+Baseline contract (``analysis_baseline.json``): grandfathered findings
+are committed as ``{rule, path, message, justification}`` entries —
+matching is on (rule, path, message), never line numbers, so moving
+code around cannot silently un-baseline or re-baseline a violation.
+Every entry MUST carry a non-empty justification; an unjustified entry
+is itself a gating finding, so the baseline can't become a dumping
+ground.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+SEVERITIES = ("error", "warning")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation.
+
+    ``path`` is a repo-relative file for AST rules, or a symbolic target
+    like ``jaxpr:stream-finalize[fused,secure]`` for traced audits.
+    ``line`` is 0 when the finding has no source location.  ``message``
+    must be stable across runs (no line numbers, no memory addresses) —
+    it is part of the baseline identity.
+    """
+
+    rule: str
+    path: str
+    message: str
+    line: int = 0
+    severity: str = "error"
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(
+                f"severity must be one of {SEVERITIES}, got {self.severity!r}"
+            )
+
+    @property
+    def key(self) -> Tuple[str, str, str]:
+        """Baseline identity: line-insensitive by design."""
+        return (self.rule, self.path, self.message)
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{loc}: [{self.rule}] {self.message}"
+
+
+@dataclasses.dataclass
+class Baseline:
+    """Committed grandfathered findings, keyed like :attr:`Finding.key`."""
+
+    entries: Dict[Tuple[str, str, str], str]  # key -> justification
+    path: str = ""
+
+    @classmethod
+    def load(cls, path: str) -> "Baseline":
+        if not os.path.exists(path):
+            return cls(entries={}, path=path)
+        with open(path) as fh:
+            raw = json.load(fh)
+        entries: Dict[Tuple[str, str, str], str] = {}
+        for row in raw.get("findings", []):
+            key = (row["rule"], row["path"], row["message"])
+            entries[key] = row.get("justification", "")
+        return cls(entries=entries, path=path)
+
+    def validate(self) -> List[Finding]:
+        """Unjustified baseline entries are findings themselves."""
+        out = []
+        for (rule, path, message), why in self.entries.items():
+            if not str(why).strip():
+                out.append(Finding(
+                    rule="baseline-justification",
+                    path=self.path or "analysis_baseline.json",
+                    message=(
+                        f"baselined finding [{rule}] at {path} has no "
+                        f"justification: {message!r}"
+                    ),
+                ))
+        return out
+
+    def split(
+        self, findings: Sequence[Finding]
+    ) -> Tuple[List[Finding], List[Finding]]:
+        """(new, grandfathered) partition of ``findings``."""
+        new, old = [], []
+        for f in findings:
+            (old if f.key in self.entries else new).append(f)
+        return new, old
+
+
+def as_json(findings: Iterable[Finding]) -> str:
+    return json.dumps(
+        {"findings": [dataclasses.asdict(f) for f in findings]}, indent=2
+    )

@@ -1,0 +1,98 @@
+"""HLO-level invariant rules: donation survival and compiled collectives.
+
+The jaxpr rules (:mod:`repro.analysis.jaxpr_audit`) check what we
+*asked* jax for; these check what the compiler actually *kept*:
+
+- donation/aliasing: ``donate_argnums`` + the carry kernel's
+  ``input_output_aliases`` must survive to the compiled module as an
+  ``input_output_alias`` directive — jax drops donation silently (a
+  warning at best), and a dropped alias means every streaming fold pays
+  a full (d+C, d) carry copy per batch;
+- collective budget, post-SPMD: the partitioner is free to insert
+  collectives the jaxpr never asked for (resharding, transpose-induced
+  all-to-alls), so the one-psum claim is re-checked on the compiled
+  per-device HLO via the loop-aware parser (``launch.hlo_parse`` — a
+  psum hidden under a while loop counts ×trip).
+
+Rules accept the text artifacts (``lowered.as_text()`` /
+``compiled.as_text()``) rather than live jax objects, so fixtures in
+tests can feed hand-written modules.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.analysis.findings import Finding
+from repro.launch import hlo_parse
+
+# What jax stamps on donated/aliased buffers at each stage.
+STABLEHLO_ALIAS_MARKERS = ("tf.aliasing_output", "jax.buffer_donor")
+COMPILED_ALIAS_MARKER = "input_output_alias"
+
+
+def has_stablehlo_aliasing(lowered_text: str) -> bool:
+    return any(m in lowered_text for m in STABLEHLO_ALIAS_MARKERS)
+
+
+def has_compiled_aliasing(compiled_text: str) -> bool:
+    return COMPILED_ALIAS_MARKER in compiled_text
+
+
+def check_donated_aliasing(
+    name: str,
+    *,
+    lowered_text: Optional[str] = None,
+    compiled_text: Optional[str] = None,
+) -> List[Finding]:
+    """Donation must be visible at every stage it was given to.
+
+    ``lowered_text`` checks the StableHLO (did the user-level donation
+    reach the module at all); ``compiled_text`` checks the executable
+    (did XLA honor it, or insert a silent defensive copy).
+    """
+    out: List[Finding] = []
+    if lowered_text is not None and not has_stablehlo_aliasing(lowered_text):
+        out.append(Finding(
+            rule="donated-aliasing",
+            path=f"hlo:{name}",
+            message=(
+                "no donation marker in the lowered module "
+                f"(looked for {', '.join(STABLEHLO_ALIAS_MARKERS)}) — the "
+                "carry is copied, not updated in place"
+            ),
+        ))
+    if compiled_text is not None and not has_compiled_aliasing(compiled_text):
+        out.append(Finding(
+            rule="donated-aliasing",
+            path=f"hlo:{name}",
+            message=(
+                "compiled executable carries no input_output_alias — XLA "
+                "dropped the donation (silent full-buffer copy per fold)"
+            ),
+        ))
+    return out
+
+
+def collective_counts(compiled_text: str) -> Dict[str, float]:
+    """Loop-corrected per-kind collective op counts of a compiled module."""
+    return dict(hlo_parse.analyze(compiled_text).collective_count)
+
+
+def check_hlo_collective_budget(
+    name: str, compiled_text: str, expected_total: int
+) -> List[Finding]:
+    """Exact post-SPMD collective count (see jaxpr twin for rationale)."""
+    counts = collective_counts(compiled_text)
+    total = sum(counts.values())
+    if total == expected_total:
+        return []
+    kinds = ", ".join(f"{k}={int(v)}" for k, v in counts.items() if v) or "none"
+    return [Finding(
+        rule="collective-budget",
+        path=f"hlo:{name}",
+        message=(
+            f"compiled module holds {int(total)} collective(s) "
+            f"({kinds}), expected exactly {expected_total}"
+        ),
+    )]

@@ -1,0 +1,204 @@
+"""Jaxpr-level invariant rules: collectives, callbacks, dtypes, retraces.
+
+The statistics pipeline's one-shot guarantee is a *communication* claim
+(one psum per cohort no matter how many batches streamed), and its
+performance claims are *trace* claims (one jit trace per padded shape,
+no host callback inside a hot path, no f64 sneaking into f32 kernels).
+These rules check all of that on the jaxpr — pre-SPMD, so the counts
+are device-count independent and runnable on any CPU host.
+
+Every checker returns :class:`~repro.analysis.findings.Finding` rows;
+``count_collectives`` is also the shared primitive the test suite uses
+directly (``tests/test_stats_pipeline.py`` — one implementation, no
+drift between the CI gate and the unit tests).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Iterator, List, Optional, Sequence, Tuple, Union
+
+import jax
+
+from repro.analysis.findings import Finding
+
+JaxprLike = Union["jax.core.Jaxpr", "jax.core.ClosedJaxpr"]
+
+# Primitive-name prefixes that cost inter-device communication.  jax
+# 0.4.x shard_map rewrites psum to psum2; matching on the prefix keeps
+# the rule stable across that rename.
+COLLECTIVE_PREFIXES: Tuple[str, ...] = (
+    "psum", "pmax", "pmin", "all_gather", "all_to_all", "ppermute",
+    "reduce_scatter", "pgather",
+)
+
+# Primitives that re-enter the host mid-trace: poison for a jitted hot
+# path (they serialize the device stream on every call).
+CALLBACK_PRIMS: Tuple[str, ...] = (
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "outside_call", "host_callback",
+)
+
+FORBIDDEN_DTYPES: Tuple[str, ...] = ("float64", "complex128")
+
+
+def _as_jaxpr(jaxpr: JaxprLike) -> "jax.core.Jaxpr":
+    return jaxpr.jaxpr if isinstance(jaxpr, jax.core.ClosedJaxpr) else jaxpr
+
+
+def iter_eqns(jaxpr: JaxprLike) -> Iterator["jax.core.JaxprEqn"]:
+    """Every equation, recursing through sub-jaxprs in eqn params."""
+    jaxpr = _as_jaxpr(jaxpr)
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            subs = jax.tree_util.tree_leaves(
+                v,
+                is_leaf=lambda x: isinstance(
+                    x, (jax.core.Jaxpr, jax.core.ClosedJaxpr)
+                ),
+            )
+            for sub in subs:
+                if isinstance(sub, (jax.core.Jaxpr, jax.core.ClosedJaxpr)):
+                    yield from iter_eqns(sub)
+
+
+def count_collectives(
+    jaxpr: JaxprLike, kinds: Optional[Sequence[str]] = None
+) -> int:
+    """Number of collective equations (recursive; prefix-matched).
+
+    ``kinds`` narrows to specific prefixes, e.g. ``("psum",)`` for the
+    streaming engine's one-psum-per-cohort assertion.
+    """
+    prefixes = tuple(kinds) if kinds is not None else COLLECTIVE_PREFIXES
+    return sum(
+        1 for eqn in iter_eqns(jaxpr)
+        if eqn.primitive.name.startswith(prefixes)
+    )
+
+
+def check_collective_budget(
+    name: str,
+    jaxpr: JaxprLike,
+    expected: int,
+    *,
+    kinds: Optional[Sequence[str]] = None,
+) -> List[Finding]:
+    """The declared budget is EXACT: a missing collective means the
+    aggregation silently stopped reducing, an extra one means the
+    communication bill grew with the batch count."""
+    got = count_collectives(jaxpr, kinds=kinds)
+    if got == expected:
+        return []
+    return [Finding(
+        rule="collective-budget",
+        path=f"jaxpr:{name}",
+        message=(
+            f"expected exactly {expected} collective(s), traced {got} "
+            f"(prefixes: {', '.join(kinds or COLLECTIVE_PREFIXES)})"
+        ),
+    )]
+
+
+def check_no_host_callbacks(name: str, jaxpr: JaxprLike) -> List[Finding]:
+    out = []
+    for eqn in iter_eqns(jaxpr):
+        if eqn.primitive.name in CALLBACK_PRIMS:
+            out.append(Finding(
+                rule="host-callback",
+                path=f"jaxpr:{name}",
+                message=(
+                    f"host callback primitive {eqn.primitive.name!r} inside "
+                    "a jitted hot path (serializes the device stream)"
+                ),
+            ))
+    return out
+
+
+def check_dtype_discipline(
+    name: str,
+    jaxpr: JaxprLike,
+    *,
+    forbidden: Sequence[str] = FORBIDDEN_DTYPES,
+    forbid_weak_outputs: bool = True,
+) -> List[Finding]:
+    """No f64 leaks outside ``core.shamir``'s local enable_x64 scope, and
+    no weak-type drift on a path's outputs (a weak output re-promotes at
+    the caller and silently widens downstream arithmetic)."""
+    out: List[Finding] = []
+    seen = set()
+    for eqn in iter_eqns(jaxpr):
+        for var in eqn.outvars:
+            dtype = getattr(var.aval, "dtype", None)
+            if dtype is not None and str(dtype) in forbidden and str(dtype) not in seen:
+                seen.add(str(dtype))
+                out.append(Finding(
+                    rule="dtype-discipline",
+                    path=f"jaxpr:{name}",
+                    message=(
+                        f"{dtype} value produced by {eqn.primitive.name!r} — "
+                        "wide dtypes are reserved for core/shamir.py's local "
+                        "enable_x64 scope"
+                    ),
+                ))
+    if forbid_weak_outputs:
+        closed = jaxpr if isinstance(jaxpr, jax.core.ClosedJaxpr) else None
+        avals = closed.out_avals if closed is not None else [
+            v.aval for v in _as_jaxpr(jaxpr).outvars
+        ]
+        for i, aval in enumerate(avals):
+            if getattr(aval, "weak_type", False):
+                out.append(Finding(
+                    rule="dtype-discipline",
+                    path=f"jaxpr:{name}",
+                    message=(
+                        f"output {i} is weak-typed ({aval.dtype}) — the "
+                        "caller's promotion rules, not the kernel's, would "
+                        "pick the working dtype"
+                    ),
+                ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Retrace sentinel: jit-cache-miss counters around a canonical workload.
+# ---------------------------------------------------------------------------
+
+
+def cache_size(jitted) -> int:
+    """Current compilation-cache entry count of a jitted function."""
+    return jitted._cache_size()
+
+
+def measure_new_traces(jitted, workload: Callable[[], object]) -> int:
+    """Run ``workload`` and report how many NEW traces ``jitted`` took."""
+    before = cache_size(jitted)
+    workload()
+    return cache_size(jitted) - before
+
+
+def check_single_trace(
+    name: str,
+    jitted,
+    workload: Callable[[], object],
+    *,
+    expected: int = 1,
+) -> List[Finding]:
+    """The "one trace per padded shape" claim, enforced.
+
+    ``workload`` must feed ``jitted`` (directly or through the layer
+    under audit) a stream of ragged inputs that all pad to one shape; if
+    the padding discipline regresses, every ragged size costs its own
+    trace and the count exceeds ``expected``.
+    """
+    got = measure_new_traces(jitted, workload)
+    if got == expected:
+        return []
+    return [Finding(
+        rule="retrace-sentinel",
+        path=f"jit:{name}",
+        message=(
+            f"workload cost {got} new jit trace(s), expected {expected} — "
+            "the one-trace-per-padded-shape contract is broken"
+        ),
+    )]

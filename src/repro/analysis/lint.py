@@ -1,0 +1,188 @@
+"""Repo lint: AST rules codifying conventions hard-won in PRs 2–5.
+
+Each rule exists because its violation already bit us once:
+
+- ``shard-map-import``: ``jax.experimental.shard_map`` moved between
+  jax 0.4.x and 0.5+; ``repro.sharding.shard_map`` papers over the skew
+  (auto-axes fallback, check_rep semantics).  A raw import anywhere else
+  reintroduces version-dependent behaviour — only ``repro/sharding.py``
+  may touch the experimental module.
+- ``time-time``: ``time.time()`` is not monotonic and every hand-rolled
+  pair drifts from the repo's one wall-clock primitive
+  (``serve.metrics.timed`` / ``repro.timing.timed``).  Timestamps via
+  ``time.perf_counter()`` are fine — the rule targets the wall-clock
+  call, not time handling in general.
+- ``unseeded-np-random``: an unseeded RNG makes the FL equivalence
+  tests (streaming == materialized, secure == plain-survivors)
+  unreproducible.  Legacy global-state ``np.random.*`` calls are flagged
+  outright; ``np.random.default_rng()`` must be given a seed.
+- ``uncentred-second-moment``: computing a covariance as
+  ``B − n·outer(μ, μ)`` cancels catastrophically in f32 when the
+  common-mode mean dominates the per-class spread — PR 3 replaced every
+  instance with centred sweeps (``class_conditional_moments``).  The
+  rule flags a subtraction whose right side contains a self outer
+  product (``outer(m, m)``, optionally scaled).
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from typing import Iterable, List, Optional, Sequence
+
+from repro.analysis.findings import Finding
+
+# the one module allowed to import jax.experimental.shard_map
+SHARD_MAP_HOME = "repro/sharding.py"
+
+# np.random attributes that are NOT the legacy global-state API
+_NP_RANDOM_OK = {"default_rng", "Generator", "SeedSequence", "BitGenerator",
+                 "PCG64", "Philox", "RandomState"}
+
+
+def _is_np_random(node: ast.AST) -> bool:
+    """Matches ``np.random`` / ``numpy.random`` attribute chains."""
+    return (
+        isinstance(node, ast.Attribute)
+        and node.attr == "random"
+        and isinstance(node.value, ast.Name)
+        and node.value.id in ("np", "numpy")
+    )
+
+
+def _self_outer_product(node: ast.AST) -> bool:
+    """``outer(m, m)`` (same name twice) anywhere inside ``node``."""
+    for sub in ast.walk(node):
+        if not isinstance(sub, ast.Call) or len(sub.args) != 2:
+            continue
+        fn = sub.func
+        fn_name = fn.attr if isinstance(fn, ast.Attribute) else (
+            fn.id if isinstance(fn, ast.Name) else None
+        )
+        if fn_name != "outer":
+            continue
+        a, b = sub.args
+        if (
+            isinstance(a, ast.Name) and isinstance(b, ast.Name)
+            and a.id == b.id
+        ):
+            return True
+    return False
+
+
+class _LintVisitor(ast.NodeVisitor):
+    def __init__(self, path: str):
+        self.path = path
+        self.findings: List[Finding] = []
+
+    def _add(self, rule: str, line: int, message: str) -> None:
+        self.findings.append(
+            Finding(rule=rule, path=self.path, line=line, message=message)
+        )
+
+    # -- shard-map-import ---------------------------------------------------
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            if alias.name.startswith("jax.experimental.shard_map"):
+                self._shard_map_finding(node.lineno)
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        mod = node.module or ""
+        if mod.startswith("jax.experimental.shard_map") or (
+            mod == "jax.experimental"
+            and any(a.name == "shard_map" for a in node.names)
+        ):
+            self._shard_map_finding(node.lineno)
+        self.generic_visit(node)
+
+    def _shard_map_finding(self, line: int) -> None:
+        if not self.path.replace(os.sep, "/").endswith(SHARD_MAP_HOME):
+            self._add(
+                "shard-map-import", line,
+                "raw jax.experimental.shard_map import — use "
+                "repro.sharding.shard_map (owns the 0.4.x/0.5+ API skew)",
+            )
+
+    # -- time-time / unseeded-np-random -------------------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        fn = node.func
+        if (
+            isinstance(fn, ast.Attribute)
+            and fn.attr == "time"
+            and isinstance(fn.value, ast.Name)
+            and fn.value.id == "time"
+        ):
+            self._add(
+                "time-time", node.lineno,
+                "hand-rolled time.time() timing — wrap the call in "
+                "serve.metrics.timed (one wall-clock primitive, monotonic)",
+            )
+        if isinstance(fn, ast.Attribute) and _is_np_random(fn.value):
+            if fn.attr not in _NP_RANDOM_OK:
+                self._add(
+                    "unseeded-np-random", node.lineno,
+                    f"legacy global-state np.random.{fn.attr}() — use a "
+                    "seeded np.random.default_rng(seed)",
+                )
+            elif fn.attr == "default_rng" and not node.args and not node.keywords:
+                self._add(
+                    "unseeded-np-random", node.lineno,
+                    "np.random.default_rng() without a seed — equivalence "
+                    "tests need reproducible draws",
+                )
+        self.generic_visit(node)
+
+    # -- uncentred-second-moment --------------------------------------------
+
+    def visit_BinOp(self, node: ast.BinOp) -> None:
+        if isinstance(node.op, ast.Sub) and _self_outer_product(node.right):
+            self._add(
+                "uncentred-second-moment", node.lineno,
+                "covariance via 'B - n*outer(mu, mu)' cancels in f32 — "
+                "centre first, then sweep (see "
+                "stats_pipeline.class_conditional_moments)",
+            )
+        self.generic_visit(node)
+
+
+def check_source(source: str, path: str) -> List[Finding]:
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(
+            rule="lint", path=path, line=e.lineno or 0,
+            message=f"unparseable source: {e.msg}",
+        )]
+    visitor = _LintVisitor(path)
+    visitor.visit(tree)
+    return visitor.findings
+
+
+def check_paths(
+    roots: Sequence[str], rel_to: Optional[str] = None,
+    exclude: Iterable[str] = (),
+) -> List[Finding]:
+    """Lint every ``.py`` under each root (files or directories)."""
+    excluded = {os.path.normpath(e) for e in exclude}
+    findings: List[Finding] = []
+    for root in roots:
+        files: List[str]
+        if os.path.isfile(root):
+            files = [root]
+        else:
+            files = []
+            for dirpath, _dirnames, filenames in os.walk(root):
+                files.extend(
+                    os.path.join(dirpath, f)
+                    for f in sorted(filenames) if f.endswith(".py")
+                )
+        for full in files:
+            if os.path.normpath(full) in excluded:
+                continue
+            rel = os.path.relpath(full, rel_to) if rel_to else full
+            with open(full) as fh:
+                findings.extend(check_source(fh.read(), rel))
+    return findings

@@ -1,0 +1,172 @@
+"""Lock-discipline race checker for the serving subsystem.
+
+``repro.serve`` promises thread safety by convention: every shared
+``self._*`` field of the batcher/registry/server/metrics classes is
+read and written under ``with self._lock`` (or ``self._state_lock``).
+Nothing enforced that — a new method touching ``self._queue`` without
+the lock would pass every existing test and race only under load.
+
+This AST pass *learns* the convention instead of hard-coding a field
+list: for each class it collects the attributes that are ever WRITTEN
+inside a ``with self.<…lock>:`` block, then flags any read or write of
+those same attributes outside such a block.  ``__init__`` is exempt
+(construction happens-before publication to other threads), and the
+body of a nested function is never considered guarded even when the
+``def`` sits inside a locked block — the lock is held at definition
+time, not call time.
+
+Single-writer flags that are deliberately unguarded (e.g. the server's
+``_in_tick``) are never written under a lock, so they are not tracked —
+the checker flags inconsistency, not lock-freedom.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import List, Optional, Set
+
+from repro.analysis.findings import Finding
+
+LOCK_ATTR_RE = re.compile(r"^_\w*lock$")
+
+
+def _is_self_attr(node: ast.AST) -> Optional[str]:
+    if (
+        isinstance(node, ast.Attribute)
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "self"
+    ):
+        return node.attr
+    return None
+
+
+def _lock_items(node: ast.With) -> bool:
+    for item in node.items:
+        attr = _is_self_attr(item.context_expr)
+        if attr is not None and LOCK_ATTR_RE.match(attr):
+            return True
+    return False
+
+
+class _Access:
+    __slots__ = ("attr", "is_write", "guarded", "line", "method")
+
+    def __init__(self, attr, is_write, guarded, line, method):
+        self.attr = attr
+        self.is_write = is_write
+        self.guarded = guarded
+        self.line = line
+        self.method = method
+
+
+class _MethodVisitor(ast.NodeVisitor):
+    """Collects self-attribute accesses with their lock context."""
+
+    def __init__(self, method_name: str):
+        self.method = method_name
+        self.accesses: List[_Access] = []
+        self._guard_depth = 0
+
+    def visit_With(self, node: ast.With) -> None:
+        for item in node.items:
+            self.visit(item.context_expr)
+            if item.optional_vars is not None:
+                self.visit(item.optional_vars)
+        if _lock_items(node):
+            self._guard_depth += 1
+            for stmt in node.body:
+                self.visit(stmt)
+            self._guard_depth -= 1
+        else:
+            for stmt in node.body:
+                self.visit(stmt)
+
+    # a nested def/lambda runs later, when the lock may not be held
+    def _visit_unguarded(self, node: ast.AST) -> None:
+        saved = self._guard_depth
+        self._guard_depth = 0
+        self.generic_visit(node)
+        self._guard_depth = saved
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._visit_unguarded(node)
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+        self._visit_unguarded(node)
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        self._visit_unguarded(node)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        attr = _is_self_attr(node)
+        if attr is not None and not LOCK_ATTR_RE.match(attr):
+            self.accesses.append(_Access(
+                attr=attr,
+                is_write=isinstance(node.ctx, (ast.Store, ast.Del)),
+                guarded=self._guard_depth > 0,
+                line=node.lineno,
+                method=self.method,
+            ))
+        self.generic_visit(node)
+
+
+def check_class(node: ast.ClassDef, path: str) -> List[Finding]:
+    accesses: List[_Access] = []
+    for child in node.body:
+        if not isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if child.name == "__init__":
+            continue
+        visitor = _MethodVisitor(child.name)
+        visitor.visit(child)
+        accesses.extend(visitor.accesses)
+
+    guarded_attrs: Set[str] = {
+        a.attr for a in accesses if a.is_write and a.guarded
+    }
+    findings: List[Finding] = []
+    for a in accesses:
+        if a.attr in guarded_attrs and not a.guarded:
+            kind = "written" if a.is_write else "read"
+            findings.append(Finding(
+                rule="lock-discipline",
+                path=path,
+                line=a.line,
+                message=(
+                    f"{node.name}.{a.method} {kind} self.{a.attr} outside "
+                    "the lock, but other methods write it under one "
+                    "(torn read/lost update under concurrent access)"
+                ),
+            ))
+    return findings
+
+
+def check_source(source: str, path: str) -> List[Finding]:
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(
+            rule="lock-discipline", path=path, line=e.lineno or 0,
+            message=f"unparseable source: {e.msg}",
+        )]
+    findings: List[Finding] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            findings.extend(check_class(node, path))
+    return findings
+
+
+def check_tree(root: str, rel_to: Optional[str] = None) -> List[Finding]:
+    """Run the checker over every ``.py`` file under ``root``."""
+    findings: List[Finding] = []
+    for dirpath, _dirnames, filenames in os.walk(root):
+        for fname in sorted(filenames):
+            if not fname.endswith(".py"):
+                continue
+            full = os.path.join(dirpath, fname)
+            rel = os.path.relpath(full, rel_to) if rel_to else full
+            with open(full) as fh:
+                findings.extend(check_source(fh.read(), rel))
+    return findings

@@ -1,0 +1,175 @@
+"""Planted violations: one known-bad fixture per rule.
+
+An analysis gate that has never failed is indistinguishable from one
+that can't.  Each function here constructs a program or source fragment
+that VIOLATES one rule and returns the rule's findings on it — the CLI
+exposes them via ``--plant <name>`` (exit code must go non-zero) and
+``tests/test_analysis.py`` asserts every plant yields findings while
+the real repo yields none.
+"""
+
+from __future__ import annotations
+
+import textwrap
+from typing import Callable, Dict, List
+
+from repro.analysis.findings import Finding
+
+
+def plant_collective_budget() -> List[Finding]:
+    """A shard_map body that psums twice, audited against a budget of 1."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.analysis import jaxpr_audit
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding import shard_map
+
+    mesh = make_host_mesh(1)
+
+    def body(x):
+        return jax.lax.psum(jax.lax.psum(x, "data"), "data")
+
+    fn = shard_map(body, mesh=mesh, in_specs=(P("data"),), out_specs=P())
+    jx = jax.make_jaxpr(fn)(jnp.ones((mesh.shape["data"], 4)))
+    return jaxpr_audit.check_collective_budget("planted.double-psum", jx, 1)
+
+
+def plant_donated_aliasing() -> List[Finding]:
+    """The real carry fold's NON-donating twin: no alias survives."""
+    from repro.analysis.budgets import audit_carry_donation
+
+    return audit_carry_donation(plant_missing=True)
+
+
+def plant_host_callback() -> List[Finding]:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.analysis import jaxpr_audit
+
+    def f(x):
+        return jax.pure_callback(
+            lambda a: np.asarray(a),
+            jax.ShapeDtypeStruct((2,), jnp.float32),
+            x,
+        )
+
+    jx = jax.make_jaxpr(f)(jnp.zeros((2,), jnp.float32))
+    return jaxpr_audit.check_no_host_callbacks("planted.pure-callback", jx)
+
+
+def plant_dtype_discipline() -> List[Finding]:
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.analysis import jaxpr_audit
+
+    with enable_x64():
+        jx = jax.make_jaxpr(lambda x: x * x)(jnp.zeros((2,), jnp.float64))
+    return jaxpr_audit.check_dtype_discipline("planted.f64-leak", jx)
+
+
+def plant_retrace_sentinel() -> List[Finding]:
+    """An unpadded ragged workload: every shape costs its own trace."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis import jaxpr_audit
+
+    jitted = jax.jit(lambda x: x + 1)
+
+    def workload():
+        jitted(jnp.zeros((2,)))
+        jitted(jnp.zeros((3,)))  # ragged: no padding discipline
+
+    return jaxpr_audit.check_single_trace(
+        "planted.ragged-workload", jitted, workload
+    )
+
+
+_BAD_LOCK_SRC = textwrap.dedent(
+    '''
+    import threading
+
+
+    class Counter:
+        """Writes _total under the lock, then reads it bare."""
+
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._total = 0
+
+        def add(self, k):
+            with self._lock:
+                self._total += k
+
+        def peek(self):
+            return self._total  # unguarded read of a guarded attr
+    '''
+)
+
+
+def plant_lock_discipline() -> List[Finding]:
+    from repro.analysis import lockcheck
+
+    return lockcheck.check_source(_BAD_LOCK_SRC, "planted/bad_lock.py")
+
+
+_BAD_IMPORT_SRC = "from jax.experimental.shard_map import shard_map\n"
+
+
+def plant_shard_map_import() -> List[Finding]:
+    from repro.analysis import lint
+
+    return lint.check_source(_BAD_IMPORT_SRC, "planted/bad_import.py")
+
+
+_BAD_TIMING_SRC = textwrap.dedent(
+    """
+    import time
+
+    def slow():
+        t0 = time.time()
+        work()
+        return time.time() - t0
+    """
+)
+
+
+def plant_time_time() -> List[Finding]:
+    from repro.analysis import lint
+
+    return lint.check_source(_BAD_TIMING_SRC, "planted/bad_timing.py")
+
+
+_BAD_MOMENT_SRC = textwrap.dedent(
+    """
+    import numpy as np
+
+    def cov_from_stats(B, mu, n):
+        return (B - n * np.outer(mu, mu)) / (n - 1)
+    """
+)
+
+
+def plant_uncentred_moment() -> List[Finding]:
+    from repro.analysis import lint
+
+    return lint.check_source(_BAD_MOMENT_SRC, "planted/bad_moment.py")
+
+
+PLANTS: Dict[str, Callable[[], List[Finding]]] = {
+    "collective-budget": plant_collective_budget,
+    "donated-aliasing": plant_donated_aliasing,
+    "host-callback": plant_host_callback,
+    "dtype-discipline": plant_dtype_discipline,
+    "retrace-sentinel": plant_retrace_sentinel,
+    "lock-discipline": plant_lock_discipline,
+    "shard-map-import": plant_shard_map_import,
+    "time-time": plant_time_time,
+    "uncentred-second-moment": plant_uncentred_moment,
+}

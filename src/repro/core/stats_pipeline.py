@@ -131,6 +131,12 @@ def _fold_jnp(
     return carry + _stats_jnp(features, labels, num_classes, accum_dtype=accum_dtype)
 
 
+# Jitted hot paths the invariant-audit suite (repro.analysis.budgets)
+# reaches by name: the retrace sentinel counts cache entries on these,
+# so renaming one must break the audit loudly, not silently skip it.
+AUDITED_JITS = {"stats_pipeline.fold_jnp": _fold_jnp}
+
+
 def _pad_batch(
     features: Array, labels: Array, rows: int
 ) -> Tuple[Array, Array]:

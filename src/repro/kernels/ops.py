@@ -201,6 +201,18 @@ def gnb_logits(
     return out[:n, :c]
 
 
+# Jitted hot paths the invariant-audit suite (repro.analysis.budgets)
+# reaches by name — donation survival is checked on the carry-fold pair
+# (the donating twin must alias, the CPU twin is the known-bad fixture),
+# the retrace sentinel counts cache entries on the head kernel.
+AUDITED_JITS = {
+    "kernels.client_stats": client_stats,
+    "kernels.stats_acc": _acc_jit,
+    "kernels.stats_acc_donating": _acc_jit_donating,
+    "kernels.gnb_logits": gnb_logits,
+}
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "interpret"))
 def flash_attention(
     q: Array,

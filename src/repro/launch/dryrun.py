@@ -16,7 +16,6 @@ import argparse
 import dataclasses
 import json
 import sys
-import time
 from typing import Any, Dict, Optional
 
 import jax
@@ -29,6 +28,7 @@ from repro.models import transformer as T
 from repro.models.common import spec_shapes
 from repro.models.config import INPUT_SHAPES, REDUCED_SHAPES, ModelConfig
 from repro.optim import adamw, sgd
+from repro.serve.metrics import timed
 from repro.sharding import tree_shardings
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -188,26 +188,26 @@ def run_one(
         rules = base_rules
 
     chips = mesh.devices.size
-    t0 = time.time()
     if moe_dispatch == -1:  # auto: one dispatch shard per (pod, data) slice
         moe_dispatch = 1
         for a in ("pod", "data"):
             if a in mesh.axis_names:
                 moe_dispatch *= mesh.shape[a]
-    fn, args, meta = build_step_and_inputs(
-        cfg, shape_name, mesh, optimizer=optimizer, step_kind=step_kind,
-        shapes=shapes, rules=rules, remat=remat, moe_dispatch=moe_dispatch,
-        stats_fold_dtype=jnp.bfloat16 if stats_fold == "bf16" else jnp.float32,
-    )
+
+    def build_and_lower():
+        fn, args, meta = build_step_and_inputs(
+            cfg, shape_name, mesh, optimizer=optimizer, step_kind=step_kind,
+            shapes=shapes, rules=rules, remat=remat, moe_dispatch=moe_dispatch,
+            stats_fold_dtype=jnp.bfloat16 if stats_fold == "bf16" else jnp.float32,
+        )
+        return fn.lower(*args), meta
+
+    (lowered, meta), t_lower = timed(build_and_lower)
     meta["variant"] = (
         f"act_shard={act_shard},mesh={mesh_shape or 'default'},remat={remat},"
         f"moe_dispatch={moe_dispatch},stats_fold={stats_fold}"
     )
-    lowered = fn.lower(*args)
-    t_lower = time.time() - t0
-    t0 = time.time()
-    compiled = lowered.compile()
-    t_compile = time.time() - t0
+    compiled, t_compile = timed(lowered.compile)
 
     mem = compiled.memory_analysis()
     mem_dict = {

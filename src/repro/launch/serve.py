@@ -12,7 +12,6 @@ Example:
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +20,7 @@ import numpy as np
 from repro.configs import PUBLIC_IDS, get_config
 from repro.models import transformer as T
 from repro.models.common import init_params
+from repro.serve.metrics import timed
 
 
 def serve(
@@ -57,10 +57,14 @@ def serve(
             cache_len=prompt_len + gen_tokens, **k,
         )
     )
-    t0 = time.time()
-    hidden, cache = prefill(params, prompt, **kw)
-    last = jnp.argmax(T.unembed(params, cfg, hidden[:, -1:]), axis=-1)[:, 0]
-    t_prefill = time.time() - t0
+    def run_prefill():
+        hidden, cache = prefill(params, prompt, **kw)
+        return (
+            jnp.argmax(T.unembed(params, cfg, hidden[:, -1:]), axis=-1)[:, 0],
+            cache,
+        )
+
+    (last, cache), t_prefill = timed(run_prefill)
 
     @jax.jit
     def decode_one(p, tok, cache):
@@ -69,12 +73,14 @@ def serve(
         return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
     out_tokens = [np.asarray(last)]
-    tok = last.astype(jnp.int32)
-    t0 = time.time()
-    for _ in range(gen_tokens - 1):
-        tok, cache = decode_one(params, tok, cache)
-        out_tokens.append(np.asarray(tok))
-    t_decode = time.time() - t0
+
+    def run_decode(tok, cache):
+        for _ in range(gen_tokens - 1):
+            tok, cache = decode_one(params, tok, cache)
+            out_tokens.append(np.asarray(tok))
+        return cache
+
+    _, t_decode = timed(run_decode, last.astype(jnp.int32), cache)
     gen = np.stack(out_tokens, axis=1)  # (B, gen)
     return gen, {"prefill_s": t_prefill, "decode_s": t_decode,
                  "tokens_per_s": batch * (gen_tokens - 1) / max(t_decode, 1e-9)}

@@ -12,7 +12,6 @@ Example:
 from __future__ import annotations
 
 import argparse
-import time
 from typing import Optional
 
 import jax
@@ -28,6 +27,7 @@ from repro.models import transformer as T
 from repro.models.common import init_params
 from repro.models.config import InputShape
 from repro.optim import adamw, sgd
+from repro.serve.metrics import timed
 from repro.sharding import tree_shardings, use_mesh
 
 
@@ -69,7 +69,7 @@ def train(
     rng = np.random.default_rng(seed)
 
     losses = []
-    t0 = time.time()
+    elapsed = 0.0
     for i in range(num_steps):
         tokens, targets = next(stream)
         feed = {"tokens": jnp.asarray(tokens), "targets": jnp.asarray(targets)}
@@ -86,13 +86,13 @@ def train(
                 rng.standard_normal((batch, cfg.encoder_seq_len, cfg.d_model)) * 0.02,
                 jnp.float32,
             )
-        params, opt_state, metrics = step(params, opt_state, feed)
+        (params, opt_state, metrics), dt_step = timed(step, params, opt_state, feed)
+        elapsed += dt_step
         losses.append(float(metrics["loss"]))
         if i % log_every == 0 or i == num_steps - 1:
-            dt = time.time() - t0
             print(
                 f"step {i:4d}  loss {losses[-1]:.4f}  nll {float(metrics['nll']):.4f}"
-                f"  ({dt:.1f}s)", flush=True,
+                f"  ({elapsed:.1f}s)", flush=True,
             )
     if checkpoint_dir:
         path = save_pytree({"params": params}, checkpoint_dir, num_steps)

@@ -22,6 +22,11 @@ from repro.sharding import shard_map
 
 Array = jax.Array
 
+# The one jitted kernel the serving hot path runs — exported for the
+# invariant-audit suite (repro.analysis.budgets): the whole serve
+# workload must compile to a handful of traces on exactly this jit.
+AUDITED_JITS = {"serve.scoring.gnb_logits": gnb_logits}
+
 
 def live_axes(mesh: Mesh, client_axes: Tuple[str, ...]) -> Tuple[str, ...]:
     return tuple(a for a in client_axes if a in mesh.axis_names)

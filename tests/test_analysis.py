@@ -1,0 +1,280 @@
+"""Self-tests for the static-analysis subsystem (``repro.analysis``).
+
+Every rule is exercised twice: once against its planted violation
+(``repro.analysis.plants`` — the finding MUST fire) and once against a
+clean fixture (the finding must NOT fire).  The CLI gate is driven as a
+subprocess the same way CI drives it, including ``--plant`` injections
+proving the gate can actually go non-zero.
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from conftest import subprocess_env as _subprocess_env
+
+from repro.analysis import hlo_audit, lint, lockcheck
+from repro.analysis.findings import Baseline, Finding, as_json
+from repro.analysis.plants import PLANTS
+
+REPO = "/root/repo"
+
+
+# ---------------------------------------------------------------------------
+# Finding / Baseline model
+# ---------------------------------------------------------------------------
+
+
+def test_finding_key_is_line_insensitive():
+    a = Finding(rule="r", path="p.py", message="m", line=10)
+    b = Finding(rule="r", path="p.py", message="m", line=99)
+    assert a.key == b.key
+    assert a.key != Finding(rule="r", path="p.py", message="other").key
+
+
+def test_finding_rejects_unknown_severity():
+    with pytest.raises(ValueError):
+        Finding(rule="r", path="p", message="m", severity="fatal")
+
+
+def test_finding_format_omits_zero_line():
+    assert Finding(rule="r", path="p.py", message="m").format() == "p.py: [r] m"
+    assert "p.py:7:" in Finding(rule="r", path="p.py", message="m", line=7).format()
+
+
+def test_baseline_missing_file_is_empty(tmp_path):
+    b = Baseline.load(str(tmp_path / "nope.json"))
+    assert b.entries == {}
+    assert b.validate() == []
+
+
+def test_baseline_unjustified_entry_is_itself_a_finding(tmp_path):
+    path = tmp_path / "baseline.json"
+    path.write_text(json.dumps({"findings": [
+        {"rule": "time-time", "path": "x.py", "message": "m",
+         "justification": "measured host wall time on purpose"},
+        {"rule": "time-time", "path": "y.py", "message": "m"},
+    ]}))
+    bad = Baseline.load(str(path)).validate()
+    assert len(bad) == 1
+    assert bad[0].rule == "baseline-justification"
+    assert "y.py" in bad[0].message
+
+
+def test_baseline_split_matches_on_key_not_line(tmp_path):
+    path = tmp_path / "baseline.json"
+    path.write_text(json.dumps({"findings": [
+        {"rule": "r", "path": "p.py", "message": "m", "justification": "ok"},
+    ]}))
+    b = Baseline.load(str(path))
+    grandfathered = Finding(rule="r", path="p.py", message="m", line=123)
+    fresh = Finding(rule="r", path="p.py", message="new violation")
+    new, old = b.split([grandfathered, fresh])
+    assert old == [grandfathered]
+    assert new == [fresh]
+
+
+def test_as_json_roundtrips():
+    f = Finding(rule="r", path="p.py", message="m", line=3)
+    data = json.loads(as_json([f]))
+    assert data["findings"][0]["rule"] == "r"
+    assert data["findings"][0]["line"] == 3
+
+
+# ---------------------------------------------------------------------------
+# Every plant fires; clean fixtures stay silent
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(PLANTS))
+def test_plant_fires(name):
+    findings = PLANTS[name]()
+    assert findings, f"plant {name!r} produced no findings — vacuous rule"
+    assert all(f.rule == name for f in findings), [f.rule for f in findings]
+
+
+_CLEAN_SRC = textwrap.dedent(
+    """
+    import numpy as np
+
+    from repro.serve.metrics import timed
+    from repro.sharding import shard_map
+
+
+    def cov_centred(x):
+        mu = x.mean(axis=0)
+        xc = x - mu  # centre FIRST, then sweep: no catastrophic cancel
+        return xc.T @ xc / (len(x) - 1)
+
+
+    def bench(fn):
+        rng = np.random.default_rng(0)
+        _, dt = timed(fn, rng.standard_normal(8))
+        return dt
+    """
+)
+
+
+def test_lint_clean_source_is_silent():
+    assert lint.check_source(_CLEAN_SRC, "clean.py") == []
+
+
+_CLEAN_LOCK_SRC = textwrap.dedent(
+    """
+    import threading
+
+
+    class Counter:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._total = 0
+
+        def add(self, k):
+            with self._lock:
+                self._total += k
+
+        def peek(self):
+            with self._lock:
+                return self._total
+    """
+)
+
+
+def test_lockcheck_clean_source_is_silent():
+    assert lockcheck.check_source(_CLEAN_LOCK_SRC, "clean_lock.py") == []
+
+
+def test_real_repo_static_rules_are_silent():
+    """The committed tree must hold zero static findings (empty baseline)."""
+    assert lockcheck.check_tree(f"{REPO}/src/repro/serve", rel_to=REPO) == []
+    assert lint.check_paths(
+        [f"{REPO}/src", f"{REPO}/benchmarks"], rel_to=REPO
+    ) == []
+
+
+# ---------------------------------------------------------------------------
+# HLO-level rules on text fixtures
+# ---------------------------------------------------------------------------
+
+_ALIASED_STABLEHLO = "func.func @main(%arg0: tensor<4xf32> {tf.aliasing_output = 0 : i32})"
+_ALIASED_COMPILED = "HloModule m, input_output_alias={ {0}: (0, {}, must-alias) }"
+_PLAIN = "HloModule m\nENTRY %main () -> f32[] {\n}\n"
+
+_ONE_ALLREDUCE_HLO = textwrap.dedent(
+    """
+    HloModule onepsum
+
+    %sum (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %add = f32[] add(%a, %b)
+    }
+
+    ENTRY %main (p0: f32[128]) -> f32[128] {
+      %p0 = f32[128]{0} parameter(0)
+      ROOT %ar = f32[128]{0} all-reduce(%p0), to_apply=%sum
+    }
+    """
+)
+
+
+def test_donated_aliasing_passes_when_markers_present():
+    assert hlo_audit.check_donated_aliasing(
+        "ok", lowered_text=_ALIASED_STABLEHLO, compiled_text=_ALIASED_COMPILED
+    ) == []
+
+
+def test_donated_aliasing_flags_each_missing_stage():
+    out = hlo_audit.check_donated_aliasing(
+        "bad", lowered_text=_PLAIN, compiled_text=_PLAIN
+    )
+    assert len(out) == 2
+    assert all(f.rule == "donated-aliasing" for f in out)
+
+
+def test_hlo_collective_budget_exact():
+    assert hlo_audit.check_hlo_collective_budget("m", _ONE_ALLREDUCE_HLO, 1) == []
+    over = hlo_audit.check_hlo_collective_budget("m", _ONE_ALLREDUCE_HLO, 0)
+    assert len(over) == 1 and over[0].rule == "collective-budget"
+    assert "all-reduce=1" in over[0].message
+
+
+# ---------------------------------------------------------------------------
+# jaxpr-level helpers
+# ---------------------------------------------------------------------------
+
+
+def test_count_collectives_zero_on_pure_math():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.jaxpr_audit import count_collectives
+
+    jx = jax.make_jaxpr(lambda x: jnp.tanh(x) @ x.T)(jnp.zeros((4, 4)))
+    assert count_collectives(jx) == 0
+
+
+def test_dtype_discipline_flags_weak_outputs():
+    import jax
+
+    from repro.analysis.jaxpr_audit import check_dtype_discipline
+
+    jx = jax.make_jaxpr(lambda x: x + x)(2.0)  # python float: weak f32
+    out = check_dtype_discipline("weak", jx)
+    assert any("weak-typed" in f.message for f in out)
+
+
+def test_measure_new_traces_counts_cache_misses():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.jaxpr_audit import measure_new_traces
+
+    jitted = jax.jit(lambda x: x * 2)
+    same = lambda: [jitted(jnp.zeros((5,))) for _ in range(3)]
+    assert measure_new_traces(jitted, same) == 1
+    assert measure_new_traces(jitted, same) == 0  # cache warm now
+
+
+# ---------------------------------------------------------------------------
+# The CLI gate, driven exactly the way CI drives it
+# ---------------------------------------------------------------------------
+
+
+def _run_cli(*flags):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *flags],
+        capture_output=True, text=True, timeout=600,
+        env=_subprocess_env(), cwd=REPO,
+    )
+
+
+def test_cli_static_only_exits_zero_on_repo():
+    proc = _run_cli("--static-only")
+    assert proc.returncode == 0, proc.stdout + proc.stderr[-2000:]
+    assert "0 finding(s)" in proc.stdout
+
+
+def test_cli_json_output_is_parseable():
+    proc = _run_cli("--static-only", "--json")
+    assert proc.returncode == 0, proc.stdout + proc.stderr[-2000:]
+    assert json.loads(proc.stdout) == {"findings": []}
+
+
+@pytest.mark.parametrize("plant", [
+    "collective-budget", "donated-aliasing",
+    "lock-discipline", "shard-map-import",
+])
+def test_cli_plant_exits_nonzero(plant):
+    """Acceptance: the gate must be able to FAIL, one subprocess per
+    planted violation class (static-only keeps the jax plants from
+    paying the full dynamic-audit bill on top of the plant)."""
+    proc = _run_cli("--check", "--static-only", "--plant", plant)
+    assert proc.returncode == 1, (
+        f"plant {plant} exit={proc.returncode}\n"
+        + proc.stdout + proc.stderr[-2000:]
+    )
+    assert f"[{plant}]" in proc.stdout

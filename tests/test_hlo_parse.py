@@ -121,3 +121,87 @@ def test_collectives_counted_with_loops():
     total = float(proc.stdout.split("COLL")[1].strip())
     # 5 iterations x (128x128 f32) ~ 320 KB; loop multiplication must show
     assert total >= 5 * 128 * 128 * 4 * 0.5, total
+
+
+# ---------------------------------------------------------------------------
+# Hand-written-module edge cases (no jax compile needed)
+# ---------------------------------------------------------------------------
+
+import textwrap as _textwrap
+
+_TYPED_OPERAND_HLO = _textwrap.dedent(
+    """
+    HloModule typed_operands
+
+    ENTRY %main (lhs: f32[256,256], rhs: f32[256,256]) -> f32[256,256] {
+      %lhs = f32[256,256]{1,0} parameter(0)
+      %rhs = f32[256,256]{1,0} parameter(1)
+      ROOT %dot.1 = f32[256,256]{1,0} dot(f32[256,256]{1,0} %lhs, f32[256,256]{1,0} %rhs), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+    }
+    """
+)
+
+
+def test_typed_operands_old_dump_style():
+    """Older XLA dumps print operands WITH their types; the operand name
+    is the trailing %name and the contraction dim must still resolve."""
+    costs = analyze(_TYPED_OPERAND_HLO)
+    assert costs.flops == pytest.approx(2 * 256**3)
+
+
+_FUSION_HLO = _textwrap.dedent(
+    """
+    HloModule fusion_body
+
+    %fused_computation (p0: f32[128,128], p1: f32[128,128]) -> f32[128,128] {
+      %p0 = f32[128,128]{1,0} parameter(0)
+      %p1 = f32[128,128]{1,0} parameter(1)
+      ROOT %dot.2 = f32[128,128]{1,0} dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+    }
+
+    ENTRY %main (a: f32[128,128], b: f32[128,128]) -> f32[128,128] {
+      %a = f32[128,128]{1,0} parameter(0)
+      %b = f32[128,128]{1,0} parameter(1)
+      ROOT %fusion = f32[128,128]{1,0} fusion(%a, %b), kind=kOutput, calls=%fused_computation
+    }
+    """
+)
+
+
+def test_fusion_body_flops_counted_bytes_fused():
+    """FLOPs recurse into the fusion body; HBM bytes count the fusion's
+    operands + result ONCE (internals are fused, not re-read)."""
+    costs = analyze(_FUSION_HLO)
+    assert costs.flops == pytest.approx(2 * 128**3)
+    # operands (2) + result (1), each 128*128*4 bytes — nothing more
+    assert costs.bytes == pytest.approx(3 * 128 * 128 * 4)
+
+
+def test_empty_module_is_all_zero():
+    costs = analyze("")
+    assert costs.flops == 0.0
+    assert costs.bytes == 0.0
+    assert costs.total_collective_bytes == 0.0
+    assert all(v == 0.0 for v in costs.collective_count.values())
+
+
+def test_no_entry_falls_back_to_largest_computation():
+    text = _textwrap.dedent(
+        """
+        HloModule no_entry
+
+        %small (x: f32[4]) -> f32[4] {
+          %x = f32[4]{0} parameter(0)
+          ROOT %neg = f32[4]{0} negate(%x)
+        }
+
+        %big (p0: f32[64,64], p1: f32[64,64]) -> f32[64,64] {
+          %p0 = f32[64,64]{1,0} parameter(0)
+          %p1 = f32[64,64]{1,0} parameter(1)
+          %t = f32[64,64]{1,0} tanh(%p0)
+          ROOT %dot.3 = f32[64,64]{1,0} dot(%t, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+        }
+        """
+    )
+    costs = analyze(text)
+    assert costs.flops == pytest.approx(2 * 64**3)

@@ -155,35 +155,17 @@ def test_from_batches_single_trace_per_shape():
     _assert_stats_close(out, want)
 
 
-def _count_collectives(jaxpr):
-    """psum eqns (shard_map rewrites them to psum2 on jax 0.4.x),
-    recursively through sub-jaxprs."""
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name.startswith("psum"):
-            n += 1
-        for v in eqn.params.values():
-            subs = jax.tree_util.tree_leaves(
-                v,
-                is_leaf=lambda x: isinstance(
-                    x, (jax.core.Jaxpr, jax.core.ClosedJaxpr)
-                ),
-            )
-            for sub in subs:
-                if isinstance(sub, jax.core.ClosedJaxpr):
-                    n += _count_collectives(sub.jaxpr)
-                elif isinstance(sub, jax.core.Jaxpr):
-                    n += _count_collectives(sub)
-    return n
-
-
 @pytest.mark.parametrize("use_kernel", [False, True])
 @pytest.mark.parametrize("secure", [False, True])
 def test_streaming_sharded_is_one_psum_per_cohort(secure, use_kernel):
     """The fold trace holds zero collectives (both carry layouts: the
     jnp FeatureStats fold AND the fused in-place (M, N) fold); finalize
     holds exactly one — so the communication bill is independent of the
-    batch count."""
+    batch count.  Counted by the SHARED audit rule
+    (``repro.analysis.jaxpr_audit``): the test, the 8-device subprocess
+    check, and the CI gate all call one implementation, so the
+    collective-counting logic cannot drift between them."""
+    from repro.analysis.jaxpr_audit import check_collective_budget
     from repro.launch.mesh import make_host_mesh
     from repro.launch.stats_engine import make_streaming_engine
 
@@ -193,8 +175,12 @@ def test_streaming_sharded_is_one_psum_per_cohort(secure, use_kernel):
     )
     f = jnp.zeros((8, 16))
     y = jnp.zeros((8,), jnp.int32)
-    assert _count_collectives(jax.make_jaxpr(fold)(carry, f, y).jaxpr) == 0
-    assert _count_collectives(jax.make_jaxpr(finalize)(carry).jaxpr) == 1
+    assert check_collective_budget(
+        "fold", jax.make_jaxpr(fold)(carry, f, y), 0
+    ) == []
+    assert check_collective_budget(
+        "finalize", jax.make_jaxpr(finalize)(carry), 1
+    ) == []
 
 
 DROPOUT_MATRIX = [
@@ -326,6 +312,16 @@ _SUBPROCESS_BODY = textwrap.dedent(
     )
     np.testing.assert_allclose(np.asarray(out.A), np.asarray(want.A), atol=1e-3)
     np.testing.assert_allclose(np.asarray(out.N), np.asarray(want.N), atol=1e-5)
+
+    # collective budget via the SHARED audit rule, on the real 8-device mesh
+    from repro.analysis.jaxpr_audit import check_collective_budget
+    from repro.launch.stats_engine import make_streaming_engine
+    carry, fold, finalize = make_streaming_engine(
+        c, d, mesh, use_kernel=False, secure=False, mask_scale=10.0
+    )
+    fb = jnp.zeros((8, d)); yb = jnp.zeros((8,), jnp.int32)
+    assert check_collective_budget("fold", jax.make_jaxpr(fold)(carry, fb, yb), 0) == []
+    assert check_collective_budget("finalize", jax.make_jaxpr(finalize)(carry), 1) == []
     print("STREAMING_MULTIDEVICE_OK")
     """
 )
