@@ -1,0 +1,146 @@
+"""Extractor benchmark: backbone-forward cost vs statistics-fold cost.
+
+The Extractor protocol turns the FedCGS round into a two-stage
+streaming pipeline — zoo-config forward pass, then (A, B, N) fold —
+and this bench answers the capacity-planning question that split
+raises: WHERE does the round's wall-clock go?  For each config the
+same token stream is timed three ways:
+
+- ``forward``  — extractor-forward alone (pooled features, jit warm);
+- ``fold``     — the statistics fold alone over pre-materialized
+  features (the pre-extractor pipeline's whole cost);
+- ``streamed`` — the fused path (`StatsPipeline(extractor=)`), one
+  extract→fold step per batch, what `fedcgs-extract` actually runs.
+
+Rows land in ``extract_bench.json`` next to ``kernel_bench.json`` /
+``serve_bench.json`` (CI uploads all three).  On every platform the
+forward dominates at transformer scale — the fold's share is the
+overhead the paper's "one extra statistics sweep" costs on top of
+inference the clients were running anyway.
+
+Standalone:  PYTHONPATH=src python -m benchmarks.extract_bench [--smoke]
+
+``--smoke`` (the CI step) is whisper_tiny only, tiny batches — a
+tripwire for the extractor stack plus the JSON emission.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.common import Reporter
+from repro.core.stats_pipeline import StatsPipeline
+from repro.fl.extractors import ModelExtractor, synthetic_token_clients
+from repro.timing import timed
+
+SMOKE_CONFIGS = ["whisper-tiny"]
+QUICK_CONFIGS = ["whisper-tiny", "gemma-2b"]
+FULL_CONFIGS = ["whisper-tiny", "gemma-2b", "mamba2-2.7b", "qwen2-moe-a2.7b"]
+
+
+def bench_config(
+    name: str,
+    *,
+    batches: int,
+    batch: int,
+    seq_len: int,
+    seed: int,
+    backend: str = "jnp",
+) -> Dict[str, float]:
+    ext = ModelExtractor(name, pooling="tokens", seed=seed)
+    cfg = ext.cfg
+    stream = synthetic_token_clients(
+        cfg, clients=1, batches_per_client=batches,
+        batch=batch, seq_len=seq_len, seed=seed,
+    )[0]
+    rows = batches * batch * seq_len
+
+    # warm every trace first: the bench measures steady state, not jit
+    np.asarray(ext.features(stream[0][0]))
+    feats = [(ext.features(t), y.reshape(-1)) for t, y in stream]
+    pipe = StatsPipeline(cfg.vocab_size, backend=backend)
+    streamed = pipe.replace(extractor=ext)
+    np.asarray(pipe.from_batches(iter(feats)).A)
+    np.asarray(streamed.from_batches(iter(stream)).A)
+
+    _, dt_fwd = timed(lambda: [
+        jax.block_until_ready(ext.features(t)) for t, _ in stream
+    ])
+    _, dt_fold = timed(
+        lambda: jax.block_until_ready(pipe.from_batches(iter(feats)).A)
+    )
+    _, dt_streamed = timed(
+        lambda: jax.block_until_ready(streamed.from_batches(iter(stream)).A)
+    )
+    return {
+        "config": name,
+        "feature_dim": ext.feature_dim,
+        "num_classes": cfg.vocab_size,
+        "rows": rows,
+        "forward_ms": dt_fwd * 1e3,
+        "fold_ms": dt_fold * 1e3,
+        "streamed_ms": dt_streamed * 1e3,
+        "fold_share": dt_fold / max(dt_fwd + dt_fold, 1e-12),
+        "rows_per_s_streamed": rows / max(dt_streamed, 1e-12),
+    }
+
+
+def run(
+    reporter: Reporter,
+    *,
+    quick: bool = False,
+    seed: int = 0,
+    json_path: str | None = "extract_bench.json",
+    smoke: bool = False,
+) -> None:
+    if smoke:
+        configs, batches, batch, seq_len = SMOKE_CONFIGS, 2, 2, 8
+    elif quick:
+        configs, batches, batch, seq_len = QUICK_CONFIGS, 2, 4, 16
+    else:
+        configs, batches, batch, seq_len = FULL_CONFIGS, 4, 8, 32
+    results: List[Dict[str, float]] = []
+    for name in configs:
+        row = bench_config(
+            name, batches=batches, batch=batch, seq_len=seq_len, seed=seed,
+        )
+        results.append(row)
+        for metric in (
+            "forward_ms", "fold_ms", "streamed_ms",
+            "fold_share", "rows_per_s_streamed",
+        ):
+            reporter.add("extract", name, metric, row[metric])
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(
+                {
+                    "config": {
+                        "batches": batches,
+                        "batch": batch,
+                        "seq_len": seq_len,
+                        "pooling": "tokens",
+                        "mode": "smoke" if smoke else ("quick" if quick else "full"),
+                    },
+                    "results": results,
+                },
+                fh,
+                indent=2,
+            )
+        print(f"# wrote {json_path} ({len(results)} configs)")
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument(
+        "--smoke", action="store_true",
+        help="whisper_tiny only, tiny sizes — CI's regression tripwire",
+    )
+    p.add_argument("--quick", action="store_true", help="reduced config set")
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args()
+    run(Reporter(), quick=args.quick, seed=args.seed, smoke=args.smoke)

@@ -25,6 +25,7 @@ MODULES = [
     "ablation_secureagg",
     "kernel_bench",
     "serve_bench",
+    "extract_bench",
     "roofline",
 ]
 

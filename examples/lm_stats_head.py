@@ -1,27 +1,36 @@
 """Beyond-paper: FedCGS statistics over an LLM backbone (class = next token).
 
 Trains a reduced gemma-2b for a few hundred steps on a synthetic Markov
-corpus, then builds the TRAINING-FREE GNB language-model head from
-federated (A, B, N) statistics captured across 4 simulated clients, and
-compares its next-token accuracy against the model's own trained head.
+corpus, wraps it as an **Extractor** (`repro.fl.extractors`), then builds
+the TRAINING-FREE GNB language-model head in one streamed pass: the
+`StatsPipeline(extractor=...)` round consumes RAW token batches and does
+extractor-forward → fold per batch, so no client ever materializes its
+feature matrix.  The result is compared against the model's own trained
+unembedding head.
 
-This is the end-to-end driver exercising the launch/train substrate:
-~100M-param-class reduced model, a few hundred steps.
+This is the same config → features → global head pipeline the
+`fedcgs-extract` console script drives end to end over an untrained zoo
+config:
+
+    fedcgs-extract --config gemma_2b --smoke
+
+Here the backbone is first trained, which is the one thing the
+one-command driver doesn't do:
 
     PYTHONPATH=src python examples/lm_stats_head.py [--steps 200]
 """
 
 import argparse
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.core.classifier import gnb_head
-from repro.core.secure_agg import secure_sum
-from repro.core.statistics import FeatureStats, client_statistics, derive_global
+from repro.core.statistics import derive_global
+from repro.core.stats_pipeline import StatsPipeline
 from repro.data.tokens import TokenStream, synthetic_corpus
+from repro.fl.extractors import ModelExtractor, token_labels
 from repro.launch.train import train
 from repro.models import transformer as T
 
@@ -41,36 +50,33 @@ cfg = get_config("gemma-2b", reduced=True)
 V, d = cfg.vocab_size, cfg.d_model
 print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f}\n")
 
-# --- 2. four "clients", each with its own shard of the corpus -----------
+# --- 2. the trained model, behind the one Extractor protocol ------------
+# pooling="tokens": one feature row per position, class = next-token id
+ext = ModelExtractor(cfg, pooling="tokens", params=params)
+
+# --- 3. four "clients", each a stream of RAW token batches --------------
 num_clients = 4
 corpus = synthetic_corpus(V, 200_000, seed=1)
 shards = np.array_split(corpus, num_clients)
-
-client_stats = []
+clients = []
 for i, shard in enumerate(shards):
     stream = iter(TokenStream(shard, batch=8, seq_len=args.seq, seed=i))
-    stats = FeatureStats.zeros(V, d)
-    for _ in range(4):
-        tokens, targets = next(stream)
-        hidden, _ = T.forward(params, cfg, jnp.asarray(tokens))
-        stats = stats + client_statistics(
-            hidden.reshape(-1, d), jnp.asarray(targets).reshape(-1), V
-        )
-    client_stats.append(stats)
-    print(f"client {i}: {int(jnp.sum(stats.N))} token statistics captured")
+    clients.append([next(stream) for _ in range(4)])
 
-# --- 3. SecureAgg + training-free LM head --------------------------------
-agg = secure_sum(client_stats)
+# --- 4. one secure FedCGS round: stream extractor-forward → fold --------
+pipe = StatsPipeline(V, extractor=ext, privacy="secure")
+agg = pipe.from_cohort(clients)
+print(f"{int(jnp.sum(agg.N))} token statistics captured across {num_clients} clients")
 head = gnb_head(derive_global(agg))
 
-# --- 4. evaluate both heads on held-out text ----------------------------
+# --- 5. evaluate both heads on held-out text ----------------------------
 stream = iter(TokenStream(corpus, batch=16, seq_len=args.seq, seed=999))
 tokens, targets = next(stream)
-hidden, _ = T.forward(params, cfg, jnp.asarray(tokens))
-feats = hidden.reshape(-1, d)
-tgt = jnp.asarray(targets).reshape(-1)
+feats = ext.features(jnp.asarray(tokens))
+tgt = token_labels(jnp.asarray(targets))
 
 stats_acc = float(head.accuracy(feats, tgt))
+hidden, _ = T.forward(params, cfg, jnp.asarray(tokens))
 logits = T.unembed(params, cfg, hidden)
 trained_acc = float(jnp.mean((jnp.argmax(logits, -1).reshape(-1) == tgt)))
 print(f"\ntrained unembedding head : next-token acc {trained_acc:.4f}")

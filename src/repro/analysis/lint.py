@@ -22,6 +22,15 @@ Each rule exists because its violation already bit us once:
   instance with centred sweeps (``class_conditional_moments``).  The
   rule flags a subtraction whose right side contains a self outer
   product (``outer(m, m)``, optionally scaled).
+- ``extractor-protocol``: feature extraction outside ``fl/`` and
+  ``models/`` must go through the Extractor protocol —
+  ``extractor.features(x)`` / ``models.transformer.features()`` — so
+  pooling, side-input stubs, and the raw-input StatsPipeline path stay
+  in one place.  The rule flags direct ``Backbone.apply`` calls and
+  direct model ``forward`` calls (via a tracked import alias of
+  ``repro.models.transformer``) in ``launch/``, ``serve/``, and
+  ``benchmarks/``.  Generation entry points (``prefill``,
+  ``decode_step``) are not extraction and stay legal.
 """
 
 from __future__ import annotations
@@ -34,6 +43,9 @@ from repro.analysis.findings import Finding
 
 # the one module allowed to import jax.experimental.shard_map
 SHARD_MAP_HOME = "repro/sharding.py"
+
+# consumers that must reach features through the Extractor protocol
+EXTRACTOR_SCOPE = ("repro/launch/", "repro/serve/", "benchmarks/")
 
 # np.random attributes that are NOT the legacy global-state API
 _NP_RANDOM_OK = {"default_rng", "Generator", "SeedSequence", "BitGenerator",
@@ -70,10 +82,20 @@ def _self_outer_product(node: ast.AST) -> bool:
     return False
 
 
+def _in_extractor_scope(path: str) -> bool:
+    p = path.replace(os.sep, "/")
+    return any(seg in p for seg in EXTRACTOR_SCOPE) or p.startswith("benchmarks/")
+
+
 class _LintVisitor(ast.NodeVisitor):
     def __init__(self, path: str):
         self.path = path
         self.findings: List[Finding] = []
+        self._extractor_scope = _in_extractor_scope(path)
+        # import aliases of repro.models.transformer (e.g. ``T``), and
+        # bare names imported from it that are model entry points
+        self._transformer_aliases: set = set()
+        self._transformer_fns: set = set()
 
     def _add(self, rule: str, line: int, message: str) -> None:
         self.findings.append(
@@ -86,6 +108,8 @@ class _LintVisitor(ast.NodeVisitor):
         for alias in node.names:
             if alias.name.startswith("jax.experimental.shard_map"):
                 self._shard_map_finding(node.lineno)
+            if alias.name == "repro.models.transformer" and alias.asname:
+                self._transformer_aliases.add(alias.asname)
         self.generic_visit(node)
 
     def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
@@ -95,6 +119,16 @@ class _LintVisitor(ast.NodeVisitor):
             and any(a.name == "shard_map" for a in node.names)
         ):
             self._shard_map_finding(node.lineno)
+        if mod == "repro.models" and any(
+            a.name == "transformer" for a in node.names
+        ):
+            for a in node.names:
+                if a.name == "transformer":
+                    self._transformer_aliases.add(a.asname or "transformer")
+        if mod == "repro.models.transformer":
+            for a in node.names:
+                if a.name == "forward":
+                    self._transformer_fns.add(a.asname or "forward")
         self.generic_visit(node)
 
     def _shard_map_finding(self, line: int) -> None:
@@ -133,7 +167,44 @@ class _LintVisitor(ast.NodeVisitor):
                     "np.random.default_rng() without a seed — equivalence "
                     "tests need reproducible draws",
                 )
+        if self._extractor_scope:
+            self._check_extractor_protocol(node, fn)
         self.generic_visit(node)
+
+    # -- extractor-protocol --------------------------------------------------
+
+    def _check_extractor_protocol(self, node: ast.Call, fn: ast.AST) -> None:
+        """Direct Backbone.apply / model forward in launch/serve/benchmarks."""
+        if isinstance(fn, ast.Attribute) and fn.attr == "forward" and (
+            (
+                isinstance(fn.value, ast.Name)
+                and fn.value.id in self._transformer_aliases
+            )
+            or ast.unparse(fn) == "repro.models.transformer.forward"
+        ):
+            self._add(
+                "extractor-protocol", node.lineno,
+                "direct model forward() in an FL consumer — go through the "
+                "Extractor protocol (models.transformer.features / "
+                "fl.extractors; pooling + raw-input ingest live there)",
+            )
+        if isinstance(fn, ast.Name) and fn.id in self._transformer_fns:
+            self._add(
+                "extractor-protocol", node.lineno,
+                "direct model forward() in an FL consumer — go through the "
+                "Extractor protocol (models.transformer.features / "
+                "fl.extractors; pooling + raw-input ingest live there)",
+            )
+        if (
+            isinstance(fn, ast.Attribute)
+            and fn.attr == "apply"
+            and "backbone" in ast.unparse(fn.value).lower()
+        ):
+            self._add(
+                "extractor-protocol", node.lineno,
+                "direct Backbone.apply() in an FL consumer — call "
+                "extractor.features(x) (the Extractor protocol) instead",
+            )
 
     # -- uncentred-second-moment --------------------------------------------
 

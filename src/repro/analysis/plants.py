@@ -162,6 +162,27 @@ def plant_uncentred_moment() -> List[Finding]:
     return lint.check_source(_BAD_MOMENT_SRC, "planted/bad_moment.py")
 
 
+_BAD_EXTRACTION_SRC = textwrap.dedent(
+    """
+    from repro.models import transformer as T
+
+    def client_features(params, cfg, batch, backbone, bparams):
+        hidden, _ = T.forward(params, cfg, batch["tokens"])
+        mlp_feats = backbone.apply(bparams, batch["x"])
+        return hidden.reshape(-1, cfg.d_model), mlp_feats
+    """
+)
+
+
+def plant_extractor_protocol() -> List[Finding]:
+    from repro.analysis import lint
+
+    # the path puts the fixture in scope (an FL consumer under launch/)
+    return lint.check_source(
+        _BAD_EXTRACTION_SRC, "src/repro/launch/planted_extract.py"
+    )
+
+
 PLANTS: Dict[str, Callable[[], List[Finding]]] = {
     "collective-budget": plant_collective_budget,
     "donated-aliasing": plant_donated_aliasing,
@@ -172,4 +193,5 @@ PLANTS: Dict[str, Callable[[], List[Finding]]] = {
     "shard-map-import": plant_shard_map_import,
     "time-time": plant_time_time,
     "uncentred-second-moment": plant_uncentred_moment,
+    "extractor-protocol": plant_extractor_protocol,
 }

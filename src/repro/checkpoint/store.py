@@ -64,6 +64,22 @@ def load_pytree(template: PyTree, directory: str, step: Optional[int] = None) ->
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def load_flat(directory: str, step: Optional[int] = None) -> dict:
+    """Template-free restore: the flat '/'-keyed mapping as saved.
+
+    For consumers whose tree structure is data-dependent (e.g. a head
+    registry whose retained versions are part of the state) and so
+    cannot supply :func:`load_pytree`'s template up front.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}.npz")
+    with np.load(path) as data:
+        return {k: data[k] for k in data.files}
+
+
 def latest_step(directory: str) -> Optional[int]:
     if not os.path.isdir(directory):
         return None

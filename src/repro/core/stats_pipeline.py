@@ -22,6 +22,17 @@ Inputs (one pipeline, three ingest shapes):
   an array pair or a batch iterator; per-client statistics are computed
   with the same fold and aggregated the way the knobs say.
 
+``extractor=`` (the Extractor protocol: ``feature_dim`` +
+``features(x) -> (rows, feature_dim)``, see ``repro.fl.extractors``)
+lets all three ingest shapes accept RAW inputs (tokens, images): each
+batch streams extractor-forward → fold as one per-batch step, then the
+pipeline delegates to itself with ``extractor=None`` — so the fold and
+finalize traces, and therefore the audited fold-0/finalize-1 psum
+budgets, are byte-identical to the features-in path.  Labels ride
+along flattened (``y.reshape(-1)``), which is the identity for (B,)
+labels and the next-token alignment for ``pooling="tokens"`` (B, S)
+targets.
+
 Knob matrix (all orthogonal):
 
 | knob        | values                | effect                                    |
@@ -192,6 +203,7 @@ class StatsPipeline:
         interpret: Optional[bool] = None,
         dropout: Optional[Sequence[int]] = None,
         min_survivors: Optional[int] = None,
+        extractor=None,
     ):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
@@ -211,6 +223,13 @@ class StatsPipeline:
             raise ValueError(f"dropout indices must be >= 0, got {dropped}")
         if min_survivors is not None and min_survivors < 1:
             raise ValueError(f"min_survivors must be >= 1, got {min_survivors}")
+        if extractor is not None and not (
+            hasattr(extractor, "features") and hasattr(extractor, "feature_dim")
+        ):
+            raise TypeError(
+                "extractor must satisfy the Extractor protocol "
+                "(feature_dim + features(x)); see repro.fl.extractors"
+            )
         self.num_classes = num_classes
         self.backend = backend
         self.placement = placement
@@ -223,6 +242,7 @@ class StatsPipeline:
         self.interpret = interpret
         self.dropout = dropped
         self.min_survivors = min_survivors
+        self.extractor = extractor
 
     # -- knob helpers -------------------------------------------------------
 
@@ -255,10 +275,52 @@ class StatsPipeline:
                 "dropout indexes shards)"
             )
 
+    # -- raw-input extraction (the Extractor protocol) ----------------------
+
+    def _extract(self, x: Any, y: Any) -> Tuple[Array, Array]:
+        """One extractor-forward step: raw batch → aligned feature rows."""
+        feats = self.extractor.features(x)
+        labels = jnp.asarray(y).astype(jnp.int32).reshape(-1)
+        if labels.shape[0] != feats.shape[0]:
+            raise ValueError(
+                f"extractor emitted {feats.shape[0]} feature rows but the "
+                f"batch carries {labels.shape[0]} labels — labels must be "
+                "one per feature row (flattened (B, S) targets for "
+                'pooling="tokens", (B,) labels otherwise)'
+            )
+        return feats, labels
+
+    def _extracting(self, batches: Iterable[Batch]) -> Iterator[Tuple[Array, Array]]:
+        """Stream extractor-forward → fold: one raw batch resident at a time."""
+        for x, y in batches:
+            yield self._extract(x, y)
+
+    def _extracted_client(self, client: ClientData) -> Iterator[Tuple[Array, Array]]:
+        """One raw client as a LAZY feature stream: extraction happens when
+        the pipeline consumes this client, so only one client's features
+        are ever resident."""
+        def gen():
+            if _is_array_pair(client):
+                yield self._extract(client[0], client[1])
+            else:
+                yield from self._extracting(client)
+
+        return gen()
+
+    def _featurized(self) -> "StatsPipeline":
+        """This pipeline with extraction already done (the delegate)."""
+        return self.replace(extractor=None)
+
     # -- single array pair --------------------------------------------------
 
     def from_arrays(self, features: Array, labels: Array) -> FeatureStats:
-        """Materialized one-shot sweep — the reference cell of the matrix."""
+        """Materialized one-shot sweep — the reference cell of the matrix.
+
+        With ``extractor=`` set, ``features`` is the RAW input batch
+        (e.g. (B, S) tokens) and extraction runs first.
+        """
+        if self.extractor is not None:
+            return self._featurized().from_arrays(*self._extract(features, labels))
         self._require_parties_for_dropout()
         if self.placement == "sharded":
             from repro.launch.stats_engine import sharded_client_stats
@@ -288,7 +350,19 @@ class StatsPipeline:
         tails are padded to the first-seen batch shape so the whole
         stream costs one jit trace.  ``feature_dim`` is only needed for
         an empty stream (the zero statistic's shape).
+
+        With ``extractor=`` set, batches are RAW ``(x, y)`` pairs and
+        each one streams extractor-forward → fold as one step; the
+        delegate's fold traces (and psum budget) are unchanged.
         """
+        if self.extractor is not None:
+            return self._featurized().from_batches(
+                self._extracting(batches),
+                feature_dim=(
+                    feature_dim if feature_dim is not None
+                    else self.extractor.feature_dim
+                ),
+            )
         self._require_parties_for_dropout()
         if self.placement == "sharded":
             from repro.launch.stats_engine import streaming_sharded_stats
@@ -367,7 +441,20 @@ class StatsPipeline:
         exact statistics of the surviving clients, provided at least
         ``min_survivors`` remain (default: a majority for secure rounds;
         plain rounds enforce the knob only when it is given).
+
+        With ``extractor=`` set, clients hold RAW data; each becomes a
+        lazy feature stream so only one client's feature matrix is
+        resident at a time, then the cohort aggregates as usual.
         """
+        if self.extractor is not None:
+            wrapped = [self._extracted_client(c) for c in clients]
+            return self._featurized().from_cohort(
+                wrapped,
+                feature_dim=(
+                    feature_dim if feature_dim is not None
+                    else self.extractor.feature_dim
+                ),
+            )
         from repro.core.secure_agg import round_plan
 
         clients = list(clients)
@@ -441,6 +528,14 @@ class StatsPipeline:
         masking) happens, so it is always a local computation; the
         placement knob only governs how the cohort aggregate is formed.
         """
+        if self.extractor is not None:
+            return self._featurized().client_statistics(
+                self._extracted_client(client),
+                feature_dim=(
+                    feature_dim if feature_dim is not None
+                    else self.extractor.feature_dim
+                ),
+            )
         if _is_array_pair(client):
             f, y = client
             if self.use_kernel:
@@ -494,6 +589,7 @@ class StatsPipeline:
             interpret=self.interpret,
             dropout=self.dropout,
             min_survivors=self.min_survivors,
+            extractor=self.extractor,
         )
         kwargs.update(overrides)
         return StatsPipeline(self.num_classes, **kwargs)

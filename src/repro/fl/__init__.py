@@ -1,4 +1,10 @@
 from repro.fl.backbone import Backbone, BACKBONES
+from repro.fl.extractors import (
+    ComposedExtractor,
+    Extractor,
+    ModelExtractor,
+    as_extractor,
+)
 from repro.fl.fedcgs import (
     FedCGSResult,
     run_fedcgs,
@@ -8,6 +14,10 @@ from repro.fl.fedcgs import (
 __all__ = [
     "Backbone",
     "BACKBONES",
+    "ComposedExtractor",
+    "Extractor",
+    "ModelExtractor",
+    "as_extractor",
     "FedCGSResult",
     "run_fedcgs",
     "run_fedcgs_personalized",

@@ -17,14 +17,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.stats_pipeline import StatsPipeline, class_conditional_moments
-from repro.fl.backbone import Backbone
+from repro.fl.extractors import Extractor
 from repro.fl.baselines.fedpft import _train_linear_head
 
 Dataset = Tuple[np.ndarray, np.ndarray]
 
 
 def run_ccvr(
-    backbone: Backbone,
+    backbone: Extractor,
     client_data: Sequence[Dataset],
     num_classes: int,
     test_data: Dataset,

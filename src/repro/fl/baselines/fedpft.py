@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.fl.backbone import Backbone
+from repro.fl.extractors import Extractor
 
 Array = jax.Array
 Dataset = Tuple[np.ndarray, np.ndarray]
@@ -121,7 +121,7 @@ def _train_linear_head(
 
 
 def run_fedpft(
-    backbone: Backbone,
+    backbone: Extractor,
     client_data: Sequence[Dataset],
     num_classes: int,
     test_data: Dataset,

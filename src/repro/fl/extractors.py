@@ -1,0 +1,202 @@
+"""The streaming Extractor protocol: one feature surface for FedCGS.
+
+FedCGS's premise is "leveraging pre-trained models": clients run a
+frozen backbone and upload only feature statistics.  Everything that
+turns raw inputs into feature rows — the random-feature MLPs in
+:mod:`repro.fl.backbone`, the full model zoo in :mod:`repro.models`,
+and any feature expansion stacked on top — implements ONE protocol:
+
+    extractor.feature_dim : int
+    extractor.features(x) -> (rows, feature_dim)
+
+:class:`repro.core.stats_pipeline.StatsPipeline` accepts any such
+object via its ``extractor=`` knob and streams extractor-forward →
+fold per batch; :mod:`repro.launch.extract` drives "config name →
+client features → one-shot global head" as a single command; and
+:mod:`repro.serve` scores raw inputs through the same object.  The
+``extractor-protocol`` audit rule keeps direct ``forward``/``apply``
+calls out of those consumers.
+
+:class:`ModelExtractor` is the zoo-config implementation: a frozen,
+jit-compiled pooled forward pass (one trace per input shape) over
+deterministic seeded parameters, optionally mesh-sharded — activating
+the mesh reuses the model stack's logical-axis ``constrain`` calls, so
+the batch rows shard over the data axis exactly as in `launch/`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Protocol, Tuple, Union, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.expansion import FeatureExpansion
+from repro.models import transformer as T
+from repro.models.common import init_params
+from repro.models.config import ModelConfig
+from repro.sharding import use_mesh
+
+Array = jax.Array
+
+
+@runtime_checkable
+class Extractor(Protocol):
+    """Anything mapping raw inputs to feature rows ``(rows, feature_dim)``.
+
+    :class:`repro.fl.backbone.Backbone` satisfies this structurally;
+    so do :class:`ModelExtractor` and :class:`ComposedExtractor`.
+    """
+
+    feature_dim: int
+
+    def features(self, x: Array) -> Array:
+        ...
+
+
+class ModelExtractor:
+    """Any zoo config as a frozen, jit-compiled feature extractor.
+
+    Parameters are a deterministic function of ``seed`` (the offline
+    stand-in for "pre-trained" weights, as in ``fl/backbone.py``), the
+    pooled forward is jit-compiled once per token shape, and encoder /
+    vision side-inputs (``frames``/``patches``) are seeded stubs cached
+    per batch size so repeated calls are bit-identical.
+    """
+
+    def __init__(
+        self,
+        cfg: Union[ModelConfig, str],
+        *,
+        pooling: str = "mean",
+        seed: int = 0,
+        reduced: bool = True,
+        params=None,
+        mesh=None,
+    ):
+        if isinstance(cfg, str):
+            from repro.configs import get_config  # local import, avoids cycle
+
+            cfg = get_config(cfg, reduced=reduced)
+        if pooling not in T.POOLINGS:
+            raise ValueError(f"pooling must be one of {T.POOLINGS}, got {pooling!r}")
+        self.cfg = cfg
+        self.pooling = pooling
+        self.seed = seed
+        self.mesh = mesh
+        self.params = (
+            init_params(T.build_specs(cfg), jax.random.key(seed))
+            if params is None
+            else params
+        )
+        self.feature_dim = T.feature_dim(cfg)
+        self._side_inputs: Dict[int, Dict[str, Array]] = {}
+        self._pooled = jax.jit(
+            functools.partial(T.features, cfg=cfg, pooling=pooling)
+        )
+
+    def rows_per_batch(self, batch: int, seq_len: int) -> int:
+        """How many feature rows a (batch, seq_len) token block yields."""
+        return batch * seq_len if self.pooling == "tokens" else batch
+
+    def _extras(self, batch: int) -> Dict[str, Array]:
+        """Seeded stub side-inputs (vision patches / encoder frames).
+
+        Offline stand-ins, like the random-feature backbones: real
+        deployments pass genuine patches/frames through ``features``'s
+        keyword arguments instead.
+        """
+        cached = self._side_inputs.get(batch)
+        if cached is not None:
+            return cached
+        rng = np.random.default_rng(self.seed + 1)
+        kw: Dict[str, Array] = {}
+        if self.cfg.vision_tokens:
+            kw["patches"] = jnp.asarray(
+                rng.standard_normal((batch, self.cfg.vision_tokens, self.cfg.d_model))
+                * 0.02,
+                jnp.float32,
+            )
+        if self.cfg.is_encdec:
+            kw["frames"] = jnp.asarray(
+                rng.standard_normal((batch, self.cfg.encoder_seq_len, self.cfg.d_model))
+                * 0.02,
+                jnp.float32,
+            )
+        self._side_inputs[batch] = kw
+        return kw
+
+    def features(self, x: Array, **side_inputs: Array) -> Array:
+        """Pooled features for a ``(batch, seq_len)`` token block."""
+        tokens = jnp.asarray(x)
+        if tokens.ndim != 2:
+            raise ValueError(f"expected (batch, seq_len) tokens, got {tokens.shape}")
+        kw = dict(self._extras(tokens.shape[0]))
+        kw.update(side_inputs)
+        if self.mesh is not None:
+            with use_mesh(self.mesh):
+                return self._pooled(self.params, tokens=tokens, **kw)
+        return self._pooled(self.params, tokens=tokens, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ComposedExtractor:
+    """An extractor with a :class:`FeatureExpansion` stacked on top."""
+
+    base: Extractor
+    expansion: FeatureExpansion
+
+    @property
+    def feature_dim(self) -> int:
+        return self.expansion.expanded_dim
+
+    def features(self, x: Array) -> Array:
+        return self.expansion(self.base.features(x))
+
+
+def as_extractor(
+    base: Extractor, expansion: Optional[FeatureExpansion] = None
+) -> Extractor:
+    """Normalize (backbone-or-extractor, optional expansion) to ONE extractor."""
+    if expansion is None:
+        return base
+    return ComposedExtractor(base=base, expansion=expansion)
+
+
+def token_labels(targets: Array) -> Array:
+    """Per-row labels for ``pooling="tokens"``: class = next-token id."""
+    return jnp.asarray(targets).reshape(-1)
+
+
+def synthetic_token_clients(
+    cfg: ModelConfig,
+    *,
+    clients: int,
+    batches_per_client: int,
+    batch: int,
+    seq_len: int,
+    seed: int = 0,
+):
+    """Synthetic client token streams for the extract driver / benches.
+
+    Each client is a list of ``(tokens, targets)`` pairs drawn from a
+    per-client Markov corpus (distinct branching → non-IID next-token
+    distributions), shaped for :func:`ModelExtractor.features` with
+    ``pooling="tokens"``.
+    """
+    from repro.data.tokens import TokenStream, synthetic_corpus
+
+    out = []
+    for c in range(clients):
+        corpus = synthetic_corpus(
+            cfg.vocab_size,
+            batches_per_client * batch * (seq_len + 1) + seq_len + 1,
+            seed=seed + 17 * c,
+            branching=2 + (c % 3),
+        )
+        stream = iter(TokenStream(corpus, batch, seq_len, seed=seed + 31 * c))
+        out.append([next(stream) for _ in range(batches_per_client)])
+    return out

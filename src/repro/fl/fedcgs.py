@@ -32,6 +32,7 @@ from repro.core.expansion import FeatureExpansion
 from repro.core.statistics import FeatureStats, GlobalStatistics, derive_global
 from repro.core.stats_pipeline import StatsPipeline
 from repro.fl.backbone import Backbone
+from repro.fl.extractors import as_extractor
 from repro.fl.trainer import ClassifierModel, train_local
 from repro.optim import sgd
 
@@ -55,6 +56,7 @@ def _make_pipeline(
     mesh=None,
     dropout: Sequence[int] = (),
     min_survivors: Optional[int] = None,
+    extractor=None,
 ) -> StatsPipeline:
     """fl-layer switches -> the pipeline's knob matrix."""
     return StatsPipeline(
@@ -65,6 +67,7 @@ def _make_pipeline(
         mesh=mesh,
         dropout=dropout,
         min_survivors=min_survivors,
+        extractor=extractor,
     )
 
 
@@ -86,32 +89,16 @@ def client_stats_pass(
     over ``mesh``'s client axes (default: a host mesh over all local
     devices) and aggregates with one psum — the multi-device engine in
     ``repro.launch.stats_engine``, reached through the pipeline.
+
+    Extraction goes through the pipeline's ``extractor=`` knob (the
+    Extractor protocol; backbone + optional expansion as ONE object),
+    the same raw-input path every other consumer uses.
     """
-    feats = backbone.features(jnp.asarray(x))
-    if expansion is not None:
-        feats = expansion(feats)
     pipeline = _make_pipeline(
-        num_classes, use_kernel=use_kernel, distributed=distributed, mesh=mesh
+        num_classes, use_kernel=use_kernel, distributed=distributed, mesh=mesh,
+        extractor=as_extractor(backbone, expansion),
     )
-    return pipeline.from_arrays(feats, jnp.asarray(y))
-
-
-def _lazy_client_batches(
-    backbone: Backbone,
-    x: np.ndarray,
-    y: np.ndarray,
-    expansion: Optional[FeatureExpansion],
-):
-    """One client as a single-batch iterator: features are extracted when
-    the pipeline CONSUMES this client, so only one client's feature
-    matrix is ever resident (the pre-pipeline loop's footprint)."""
-    def gen():
-        feats = backbone.features(jnp.asarray(x))
-        if expansion is not None:
-            feats = expansion(feats)
-        yield feats, jnp.asarray(y)
-
-    return gen()
+    return pipeline.from_arrays(jnp.asarray(x), jnp.asarray(y))
 
 
 def aggregate_client_stats(
@@ -140,11 +127,11 @@ def aggregate_client_stats(
         num_classes, use_kernel=use_kernel, distributed=distributed,
         secure=use_secure_agg, mesh=mesh, dropout=dropout,
         min_survivors=min_survivors,
+        extractor=as_extractor(backbone, expansion),
     )
-    cohort = [
-        _lazy_client_batches(backbone, x, y, expansion) for x, y in client_data
-    ]
-    agg = pipeline.from_cohort(cohort)
+    # raw (x, y) clients: the pipeline wraps each as a LAZY feature
+    # stream, so only one client's feature matrix is ever resident
+    agg = pipeline.from_cohort(list(client_data))
     return agg, FeatureStats.upload_size(num_classes, agg.feature_dim)
 
 
@@ -182,9 +169,7 @@ def run_fedcgs(
     acc = None
     if test_data is not None:
         xt, yt = test_data
-        feats = backbone.features(jnp.asarray(xt))
-        if expansion is not None:
-            feats = expansion(feats)
+        feats = as_extractor(backbone, expansion).features(jnp.asarray(xt))
         acc = float(head.accuracy(feats, jnp.asarray(yt)))
     return FedCGSResult(
         head=head,

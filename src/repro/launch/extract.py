@@ -1,0 +1,177 @@
+"""fedcgs-extract — config name → client features → one-shot global head.
+
+The paper's deployment story ("leveraging pre-trained models") as ONE
+command: pick any zoo config, wrap it as a frozen
+:class:`~repro.fl.extractors.ModelExtractor`, stream synthetic
+per-client token batches through extractor-forward → fold
+(:class:`~repro.core.stats_pipeline.StatsPipeline` with ``extractor=``,
+which reuses ``launch.stats_engine``'s streaming mesh path when
+``--placement sharded``), derive the global statistics, and fit the
+training-free GNB head — then score a held-out batch through the same
+extractor + head to close the loop.
+
+Examples:
+    PYTHONPATH=src python -m repro.launch.extract --config whisper_tiny
+    fedcgs-extract --config gemma_2b --placement sharded --backend fused
+    PYTHONPATH=src python -m repro.launch.extract --smoke   # CI smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.classifier import LinearHead, gnb_head
+from repro.core.statistics import FeatureStats, derive_global
+from repro.core.stats_pipeline import StatsPipeline
+from repro.fl.extractors import ModelExtractor, synthetic_token_clients
+from repro.timing import timed
+
+Array = jax.Array
+
+
+def _client_batches(pooling: str, batches) -> List[Tuple[Array, Array]]:
+    """Align labels to the pooling mode: per-token targets for ``tokens``,
+    the final next-token id (one label per sequence) for ``mean``/``last``."""
+    if pooling == "tokens":
+        return list(batches)
+    return [(toks, tgts[:, -1]) for toks, tgts in batches]
+
+
+def run_extract(
+    config: str = "whisper_tiny",
+    *,
+    pooling: str = "tokens",
+    clients: int = 4,
+    batches_per_client: int = 2,
+    batch: int = 4,
+    seq_len: int = 16,
+    seed: int = 0,
+    backend: str = "jnp",
+    placement: str = "local",
+    secure: bool = False,
+    ridge: Optional[float] = None,
+    reduced: bool = True,
+) -> Dict[str, object]:
+    """The whole one-shot pipeline; returns a JSON-able report."""
+    ext = ModelExtractor(config, pooling=pooling, seed=seed, reduced=reduced)
+    cfg = ext.cfg
+    num_classes = cfg.vocab_size  # class = next-token id for every pooling
+
+    mesh = None
+    if placement == "sharded":
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh()
+
+    raw = synthetic_token_clients(
+        cfg, clients=clients, batches_per_client=batches_per_client,
+        batch=batch, seq_len=seq_len, seed=seed,
+    )
+    cohort = [_client_batches(pooling, c) for c in raw]
+
+    pipeline = StatsPipeline(
+        num_classes,
+        backend=backend,
+        placement=placement,
+        privacy="secure" if secure else "plain",
+        mesh=mesh,
+        extractor=ext,
+    )
+    def _round() -> FeatureStats:
+        agg = pipeline.from_cohort(cohort)
+        jax.block_until_ready(agg.A)
+        return agg
+
+    agg, dt_round = timed(_round)
+    gstats = derive_global(agg)
+    head, dt_head = timed(lambda: gnb_head(gstats, ridge=ridge))
+
+    # close the loop: held-out batch → same extractor → GNB head accuracy
+    holdout = _client_batches(
+        pooling,
+        synthetic_token_clients(
+            cfg, clients=1, batches_per_client=1,
+            batch=batch, seq_len=seq_len, seed=seed + 9973,
+        )[0],
+    )
+    xh, yh = holdout[0]
+    acc = float(head.accuracy(ext.features(xh), jnp.asarray(yh).reshape(-1)))
+
+    rows = int(np.asarray(agg.N).sum())
+    return {
+        "config": config,
+        "pooling": pooling,
+        "feature_dim": ext.feature_dim,
+        "num_classes": num_classes,
+        "clients": clients,
+        "rows_folded": rows,
+        "backend": backend,
+        "placement": placement,
+        "secure": secure,
+        "upload_floats_per_client": FeatureStats.upload_size(
+            num_classes, ext.feature_dim
+        ),
+        "round_seconds": dt_round,
+        "head_fit_seconds": dt_head,
+        "holdout_accuracy": acc,
+        "head_shape": list(np.asarray(head.W).shape),
+    }
+
+
+def fit_head_from_stats(stats: FeatureStats, *, ridge=None) -> LinearHead:
+    """Aggregated statistics → the closed-form GNB head (re-export for
+    callers that already hold a round's statistics)."""
+    return gnb_head(derive_global(stats), ridge=ridge)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--config", default="whisper_tiny",
+                   help="any id repro.configs.get_config accepts")
+    p.add_argument("--pooling", default="tokens",
+                   choices=("tokens", "mean", "last"))
+    p.add_argument("--clients", type=int, default=4)
+    p.add_argument("--batches-per-client", type=int, default=2)
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--seq-len", type=int, default=16)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--backend", default="jnp", choices=("jnp", "fused"))
+    p.add_argument("--placement", default="local", choices=("local", "sharded"))
+    p.add_argument("--secure", action="store_true",
+                   help="SecureAgg the per-client statistics")
+    p.add_argument("--ridge", type=float, default=None)
+    p.add_argument("--full-size", action="store_true",
+                   help="use the config at full size (default: reduced)")
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny CPU-friendly sizes (the CI smoke step)")
+    args = p.parse_args(argv)
+
+    kw = dict(
+        pooling=args.pooling,
+        clients=args.clients,
+        batches_per_client=args.batches_per_client,
+        batch=args.batch,
+        seq_len=args.seq_len,
+        seed=args.seed,
+        backend=args.backend,
+        placement=args.placement,
+        secure=args.secure,
+        ridge=args.ridge,
+        reduced=not args.full_size,
+    )
+    if args.smoke:
+        kw.update(clients=2, batches_per_client=2, batch=2, seq_len=8)
+
+    report = run_extract(args.config, **kw)
+    print(json.dumps(report, indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -110,21 +110,23 @@ def make_stats_step(
     """
 
     def stats_step(params, batch):
-        hidden, _ = T.forward(
+        # per-token feature rows via the Extractor protocol's models-layer
+        # entry point (class = next token, so pooling="tokens")
+        rows = T.features(
             params, cfg,
             batch["tokens"],
+            pooling="tokens",
             positions=batch.get("positions"),
             patches=batch.get("patches"),
             frames=batch.get("frames"),
             remat=False,
             moe_dispatch_shards=moe_dispatch_shards,
         )
-        d = cfg.d_model
         # §Perf knob: fold in bf16 (halves scatter/Gram read traffic) with
         # f32 accumulation via preferred_element_type — the running (A, B)
         # stay f32 so the paper's exactness claim is unaffected at the
         # aggregate level (validated in tests at reduced scale).
-        feats = hidden.reshape(-1, d).astype(fold_dtype)
+        feats = rows.astype(fold_dtype)
         labels = batch["targets"].reshape(-1)
         stats = batch["stats"]
         A = stats["A"].at[labels].add(feats.astype(jnp.float32))

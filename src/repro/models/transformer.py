@@ -415,6 +415,59 @@ def unembed(params: PyTree, cfg: ModelConfig, hidden: Array) -> Array:
 
 
 # ===========================================================================
+# feature extraction (the Extractor protocol's models-layer entry point)
+# ===========================================================================
+
+POOLINGS = ("mean", "last", "tokens")
+
+
+def feature_dim(cfg: ModelConfig) -> int:
+    """Feature dimension every pooling mode emits: the final hidden width."""
+    return cfg.d_model
+
+
+def features(
+    params: PyTree,
+    cfg: ModelConfig,
+    tokens: Array,
+    *,
+    pooling: str = "mean",
+    positions: Optional[Array] = None,
+    patches: Optional[Array] = None,
+    frames: Optional[Array] = None,
+    remat: bool = False,
+    moe_dispatch_shards: int = 1,
+) -> Array:
+    """Pooled final hidden states: ``R^tokens -> R^feature_dim`` rows.
+
+    The one sanctioned feature surface for every zoo architecture —
+    FedCGS consumers (`fl/extractors`, `launch/`, `serve/`) go through
+    this rather than calling :func:`forward` directly (enforced by the
+    ``extractor-protocol`` audit rule).
+
+    - ``mean``   — mean over sequence positions, one row per sequence (B, d).
+    - ``last``   — final-position hidden state, one row per sequence (B, d).
+    - ``tokens`` — every position as its own row (B*S, d); the LM-stats
+      pooling where class = next-token id.
+    """
+    if pooling not in POOLINGS:
+        raise ValueError(f"pooling must be one of {POOLINGS}, got {pooling!r}")
+    hidden, _ = forward(
+        params, cfg, tokens,
+        positions=positions,
+        patches=patches,
+        frames=frames,
+        remat=remat,
+        moe_dispatch_shards=moe_dispatch_shards,
+    )
+    if pooling == "mean":
+        return jnp.mean(hidden, axis=1)
+    if pooling == "last":
+        return hidden[:, -1, :]
+    return hidden.reshape(-1, hidden.shape[-1])
+
+
+# ===========================================================================
 # caches
 # ===========================================================================
 

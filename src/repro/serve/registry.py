@@ -24,6 +24,9 @@ from __future__ import annotations
 import threading
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+import jax.numpy as jnp
+import numpy as np
+
 from repro.core.classifier import LinearHead, gnb_head
 from repro.core.statistics import FeatureStats, derive_global
 
@@ -82,17 +85,81 @@ class HeadRegistry:
         *,
         feature_dim: Optional[int] = None,
         ridge=None,
+        extractor=None,
     ) -> int:
         """Run one FedCGS aggregation round and hot-swap the result in.
 
         ``pipeline`` is a :class:`repro.core.stats_pipeline.StatsPipeline`
         carrying the round's knobs (backend, placement, privacy,
         dropout/min_survivors); ``clients`` is its ``from_cohort``
-        cohort.  The registry stays serveable the whole time — the swap
-        is the last, atomic step.
+        cohort.  Pass ``extractor=`` (the Extractor protocol) when the
+        cohort holds RAW inputs — the round then streams
+        extractor-forward → fold, so backbone + GNB refit as one
+        pipeline.  The registry stays serveable the whole time — the
+        swap is the last, atomic step.
         """
+        if extractor is not None:
+            pipeline = pipeline.replace(extractor=extractor)
         stats = pipeline.from_cohort(clients, feature_dim=feature_dim)
         return self.refit_from_stats(stats, ridge=ridge)
+
+    # -- durable snapshots (checkpoint.store) -------------------------------
+
+    def snapshot(self, directory: str, *, step: Optional[int] = None) -> str:
+        """Persist every retained head (and the live version) as a pytree.
+
+        Written through :mod:`repro.checkpoint.store` (flat npz, atomic
+        rename), so replicas can pick the same round's heads off shared
+        storage.  ``step`` defaults to one past the directory's latest
+        snapshot.  Returns the written path.
+        """
+        from repro.checkpoint import store
+
+        with self._lock:
+            heads = dict(self._heads)
+            live = -1 if self._live is None else self._live[0]
+            next_version = self._next_version
+        if step is None:
+            last = store.latest_step(directory)
+            step = 0 if last is None else last + 1
+        tree = {
+            "meta": {
+                "live": np.int64(live),
+                "next_version": np.int64(next_version),
+            },
+            "heads": {
+                str(v): {"W": np.asarray(h.W), "b": np.asarray(h.b)}
+                for v, h in heads.items()
+            },
+        }
+        return store.save_pytree(tree, directory, step)
+
+    def restore(self, directory: str, *, step: Optional[int] = None) -> Optional[int]:
+        """Load a :meth:`snapshot` back in (atomic swap of ALL state).
+
+        Returns the restored live version (None if the snapshot had no
+        published head).  Version numbering continues from the
+        snapshot's counter, so publishes after a restore never reuse a
+        persisted version number.
+        """
+        from repro.checkpoint import store
+
+        flat = store.load_flat(directory, step)
+        live = int(flat["meta/live"])
+        next_version = int(flat["meta/next_version"])
+        heads: Dict[int, LinearHead] = {}
+        for key, arr in flat.items():
+            parts = key.split("/")
+            if parts[0] == "heads" and parts[-1] == "W":
+                v = int(parts[1])
+                heads[v] = LinearHead(
+                    W=jnp.asarray(arr), b=jnp.asarray(flat[f"heads/{v}/b"])
+                )
+        with self._lock:
+            self._heads = heads
+            self._live = None if live < 0 else (live, heads[live])
+            self._next_version = max(next_version, (max(heads) + 1) if heads else 0)
+        return None if live < 0 else live
 
     def subscribe(self, callback: Callable[[int], None]) -> None:
         """``callback(version)`` fires after every publish (metrics hook)."""

@@ -46,6 +46,7 @@ def score_features(
     mesh: Optional[Mesh] = None,
     client_axes: Tuple[str, ...] = ("data",),
     interpret: Optional[bool] = None,
+    extractor=None,
 ) -> Array:
     """logits (n, C) for feature rows (n, d) under head (w (C, d), b (C,)).
 
@@ -53,7 +54,14 @@ def score_features(
     any row count is accepted — rows are zero-padded up to the shard
     count (pad-to-shards) and the padding is sliced back off, so ragged
     request batches never error out of the mesh path.
+
+    With ``extractor=`` (the Extractor protocol), ``features`` is the
+    RAW input batch and backbone + GNB score as one pipeline: the
+    extractor's own jit runs first, then its rows flow through the
+    audited scoring path unchanged (same traces, zero collectives).
     """
+    if extractor is not None:
+        features = extractor.features(features)
     features = jnp.asarray(features)
     n = features.shape[0]
     if mesh is None:

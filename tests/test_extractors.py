@@ -1,0 +1,281 @@
+"""The Extractor protocol, end to end.
+
+- every implementation (random-feature Backbone, zoo ModelExtractor,
+  expansion-composed) satisfies ONE structural protocol;
+- the streamed raw-input path (`StatsPipeline(extractor=)`) is pinned
+  BIT-IDENTICAL to materializing the forward pass first and folding the
+  features through the identical pipeline (hypothesis over batch
+  splits) — same fold traces on same inputs, so equality is exact, not
+  allclose.  The single-batch case additionally pins the streamed path
+  against the one-shot ``from_arrays`` reference.  (A multi-split fold
+  vs one concatenated ``from_arrays`` matmul is NOT bitwise on every
+  backend — f32 matmul reduction order differs with shape — which is
+  why the bit-exactness contract is stated per-split and the cross-
+  split check is allclose.)
+- `fedcgs-extract`'s driver, the registry refit, and serve scoring all
+  consume the same object: config → features → global head → served.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
+
+from repro.configs import get_config
+from repro.core.expansion import FeatureExpansion
+from repro.core.statistics import aggregate
+from repro.core.stats_pipeline import StatsPipeline
+from repro.fl.backbone import make_backbone
+from repro.fl.extractors import (
+    ComposedExtractor,
+    Extractor,
+    ModelExtractor,
+    as_extractor,
+    synthetic_token_clients,
+    token_labels,
+)
+
+# one tiny dense config for the property tests (fast forward), one real
+# reduced zoo config (whisper = enc-dec, exercises the frames stub)
+TINY = get_config("gemma-2b", reduced=True).reduced(d_model=64, vocab_size=64)
+
+
+@pytest.fixture(scope="module")
+def tiny_ext():
+    return ModelExtractor(TINY, pooling="tokens", seed=3)
+
+
+def _token_batches(cfg, *, batches, batch, seq_len, seed=0):
+    return synthetic_token_clients(
+        cfg, clients=1, batches_per_client=batches,
+        batch=batch, seq_len=seq_len, seed=seed,
+    )[0]
+
+
+def _assert_stats_equal(got, want):
+    np.testing.assert_array_equal(np.asarray(got.A), np.asarray(want.A))
+    np.testing.assert_array_equal(np.asarray(got.B), np.asarray(want.B))
+    np.testing.assert_array_equal(np.asarray(got.N), np.asarray(want.N))
+
+
+# ---------------------------------------------------------------------------
+# protocol conformance
+# ---------------------------------------------------------------------------
+
+
+def test_every_implementation_satisfies_protocol(tiny_ext):
+    bb = make_backbone("mobilenet-like", 8)
+    exp = FeatureExpansion(in_dim=bb.feature_dim, out_dim=16, seed=0)
+    for impl in (bb, tiny_ext, as_extractor(bb, exp)):
+        assert isinstance(impl, Extractor)
+        assert isinstance(impl.feature_dim, int)
+
+
+def test_pooling_shapes_and_determinism():
+    toks = _token_batches(TINY, batches=1, batch=3, seq_len=8)[0][0]
+    d = TINY.d_model
+    for pooling, rows in (("mean", 3), ("last", 3), ("tokens", 24)):
+        ext = ModelExtractor(TINY, pooling=pooling, seed=7)
+        f = ext.features(toks)
+        assert f.shape == (rows, d)
+        assert bool(jnp.isfinite(f).all())
+        # frozen + seeded: a second call AND a fresh instance are bitwise
+        np.testing.assert_array_equal(np.asarray(f), np.asarray(ext.features(toks)))
+        twin = ModelExtractor(TINY, pooling=pooling, seed=7)
+        np.testing.assert_array_equal(np.asarray(f), np.asarray(twin.features(toks)))
+
+
+def test_whisper_side_input_stub_is_deterministic():
+    ext = ModelExtractor("whisper_tiny", pooling="mean", seed=1)
+    assert ext.cfg.is_encdec
+    toks = _token_batches(ext.cfg, batches=1, batch=2, seq_len=8)[0][0]
+    f1, f2 = ext.features(toks), ext.features(toks)
+    assert f1.shape == (2, ext.feature_dim)
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+
+
+def test_validation_errors(tiny_ext):
+    with pytest.raises(ValueError, match="pooling"):
+        ModelExtractor(TINY, pooling="max")
+    with pytest.raises(TypeError, match="Extractor protocol"):
+        StatsPipeline(4, extractor=object())
+    toks, tgts = _token_batches(TINY, batches=1, batch=2, seq_len=8)[0]
+    pipe = StatsPipeline(TINY.vocab_size, extractor=tiny_ext)
+    with pytest.raises(ValueError, match="labels"):
+        pipe.from_arrays(toks, tgts[:, :4])  # 8 rows of labels missing
+    with pytest.raises(ValueError, match="tokens"):
+        tiny_ext.features(np.zeros((2, 3, 4)))
+
+
+def test_composed_extractor_matches_manual_stack():
+    bb = make_backbone("mobilenet-like", 8)
+    exp = FeatureExpansion(in_dim=bb.feature_dim, out_dim=16, seed=5)
+    comp = as_extractor(bb, exp)
+    assert isinstance(comp, ComposedExtractor)
+    assert comp.feature_dim == exp.expanded_dim
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((6, 8)), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(comp.features(x)), np.asarray(exp(bb.features(x)))
+    )
+    assert as_extractor(bb) is bb
+
+
+# ---------------------------------------------------------------------------
+# the bit-exactness contract (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    batches=st.integers(1, 4),
+    batch=st.integers(1, 4),
+    seq_len=st.integers(2, 10),
+    ragged_tail=st.booleans(),
+    backend=st.sampled_from(["jnp", "fused"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_streamed_extractor_fold_bit_identical(
+    batches, batch, seq_len, ragged_tail, backend, seed
+):
+    """Streamed extractor+fold over raw tokens == materialize the
+    forward pass, then fold the SAME features — bitwise, every split,
+    both backends; plus the from_arrays reference for one batch."""
+    ext = ModelExtractor(TINY, pooling="tokens", seed=3)
+    raw = _token_batches(
+        TINY, batches=batches, batch=batch, seq_len=seq_len, seed=seed % 997
+    )
+    if ragged_tail and batch > 1:
+        toks, tgts = raw[-1]
+        raw[-1] = (toks[: batch - 1], tgts[: batch - 1])
+
+    streamed = StatsPipeline(
+        TINY.vocab_size, backend=backend, extractor=ext
+    ).from_batches(iter(raw))
+
+    feats = [(ext.features(t), token_labels(y)) for t, y in raw]
+    ref = StatsPipeline(TINY.vocab_size, backend=backend).from_batches(iter(feats))
+    _assert_stats_equal(streamed, ref)
+
+    # cross-split sanity vs the one-shot materialized reference
+    f_all = jnp.concatenate([f for f, _ in feats])
+    y_all = jnp.concatenate([y for _, y in feats])
+    one_shot = StatsPipeline(TINY.vocab_size, backend=backend).from_arrays(
+        f_all, y_all
+    )
+    np.testing.assert_allclose(
+        np.asarray(streamed.B), np.asarray(one_shot.B), rtol=1e-4, atol=1e-3
+    )
+    np.testing.assert_array_equal(np.asarray(streamed.N), np.asarray(one_shot.N))
+
+    if len(raw) == 1:
+        # single batch: the streamed raw-ingest from_arrays IS the
+        # materialized forward-pass-then-from_arrays, bit for bit
+        direct = StatsPipeline(
+            TINY.vocab_size, backend=backend, extractor=ext
+        ).from_arrays(raw[0][0], raw[0][1])
+        _assert_stats_equal(
+            direct,
+            StatsPipeline(TINY.vocab_size, backend=backend).from_arrays(
+                feats[0][0], feats[0][1]
+            ),
+        )
+
+
+def test_cohort_extractor_matches_materialized(tiny_ext):
+    clients = synthetic_token_clients(
+        TINY, clients=3, batches_per_client=2, batch=2, seq_len=8, seed=4
+    )
+    got = StatsPipeline(TINY.vocab_size, extractor=tiny_ext).from_cohort(clients)
+    feat_clients = [
+        [(tiny_ext.features(t), token_labels(y)) for t, y in c] for c in clients
+    ]
+    want = aggregate([
+        StatsPipeline(TINY.vocab_size).from_batches(iter(c)) for c in feat_clients
+    ])
+    _assert_stats_equal(got, want)
+
+
+def test_cohort_extractor_secure_matches_plain(tiny_ext):
+    clients = synthetic_token_clients(
+        TINY, clients=4, batches_per_client=1, batch=2, seq_len=6, seed=9
+    )
+    plain = StatsPipeline(TINY.vocab_size, extractor=tiny_ext).from_cohort(clients)
+    secure = StatsPipeline(
+        TINY.vocab_size, extractor=tiny_ext, privacy="secure", mask_scale=10.0,
+    ).from_cohort(clients)
+    np.testing.assert_allclose(
+        np.asarray(secure.A), np.asarray(plain.A), rtol=1e-4, atol=5e-2
+    )
+    np.testing.assert_allclose(
+        np.asarray(secure.N), np.asarray(plain.N), atol=5e-2
+    )
+
+
+# ---------------------------------------------------------------------------
+# config → features → global head → served (one pipeline)
+# ---------------------------------------------------------------------------
+
+
+def test_run_extract_one_command():
+    from repro.launch.extract import run_extract
+
+    report = run_extract(
+        "whisper_tiny", clients=2, batches_per_client=1, batch=2, seq_len=8,
+    )
+    assert report["rows_folded"] == 2 * 1 * 2 * 8
+    assert report["feature_dim"] == 256
+    assert report["head_shape"] == [512, 256]
+    assert 0.0 <= report["holdout_accuracy"] <= 1.0
+    assert report["round_seconds"] > 0
+
+
+def test_registry_refit_and_scoring_through_extractor(tiny_ext):
+    from repro.serve.registry import HeadRegistry
+    from repro.serve.scoring import score_features
+
+    clients = synthetic_token_clients(
+        TINY, clients=2, batches_per_client=1, batch=2, seq_len=8, seed=2
+    )
+    reg = HeadRegistry()
+    version = reg.refit_from_round(
+        StatsPipeline(TINY.vocab_size), clients,
+        extractor=tiny_ext, ridge=1e-3,
+    )
+    _, head = reg.current()
+    assert version == 0 and head.W.shape == (TINY.vocab_size, TINY.d_model)
+
+    toks = clients[0][0][0]
+    logits = score_features(toks, head.W, head.b, extractor=tiny_ext)
+    want = score_features(tiny_ext.features(toks), head.W, head.b)
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(want))
+
+
+def test_fedcgs_round_through_model_extractor(tiny_ext):
+    """run_fedcgs accepts ANY Extractor: a zoo config drives the paper's
+    one-shot protocol end to end (raw tokens in, GNB head out)."""
+    from repro.fl.fedcgs import run_fedcgs
+
+    rng = np.random.default_rng(0)
+    clients = [
+        tuple(
+            np.asarray(a)
+            for a in synthetic_token_clients(
+                TINY, clients=1, batches_per_client=1, batch=2, seq_len=8,
+                seed=11 + i,
+            )[0][0]
+        )
+        for i in range(2)
+    ]
+    clients = [(t, np.asarray(y).reshape(-1)) for t, y in clients]
+    del rng
+    result = run_fedcgs(
+        tiny_ext, clients, TINY.vocab_size, use_secure_agg=False, ridge=1e-3,
+    )
+    assert result.head.W.shape == (TINY.vocab_size, TINY.d_model)
+    assert result.uploaded_floats_per_client > 0

@@ -227,6 +227,53 @@ def test_registry_refit_matches_direct_head():
     np.testing.assert_array_equal(np.asarray(got.b), np.asarray(want.b))
 
 
+def test_registry_snapshot_restore_round_trip(tmp_path):
+    """Durable snapshots via checkpoint.store: every retained head, the
+    live pointer, AND the version counter survive the round trip, so a
+    replica restored off shared storage serves bit-identical logits and
+    never reuses a persisted version number."""
+    d, c = 6, 3
+    reg = HeadRegistry(keep=4)
+    for seed in range(3):
+        reg.publish(_head(d, c, seed))
+    path = reg.snapshot(str(tmp_path))
+    assert path.endswith("step_00000000.npz")
+
+    replica = HeadRegistry()
+    live = replica.restore(str(tmp_path))
+    assert live == reg.latest_version == 2
+    assert replica.versions() == reg.versions() == [0, 1, 2]
+    for v in reg.versions():
+        np.testing.assert_array_equal(
+            np.asarray(replica.head(v).W), np.asarray(reg.head(v).W)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(replica.head(v).b), np.asarray(reg.head(v).b)
+        )
+    ver, head = replica.current()
+    assert ver == 2
+    np.testing.assert_array_equal(np.asarray(head.W), np.asarray(reg.head(2).W))
+    # numbering continues past the snapshot's counter
+    assert replica.publish(_head(d, c, 9)) == 3
+
+    # step defaults to one past the latest snapshot in the directory
+    assert reg.snapshot(str(tmp_path)).endswith("step_00000001.npz")
+
+
+def test_registry_snapshot_empty_and_missing(tmp_path):
+    empty = HeadRegistry()
+    empty.snapshot(str(tmp_path / "empty"))
+    replica = HeadRegistry(_head(4, 2, 0))
+    assert replica.restore(str(tmp_path / "empty")) is None
+    assert replica.latest_version is None and len(replica) == 0
+    with pytest.raises(LookupError):
+        replica.current()
+    assert replica.publish(_head(4, 2, 1)) == 0  # counter restored to 0
+
+    with pytest.raises(FileNotFoundError):
+        HeadRegistry().restore(str(tmp_path / "nowhere"))
+
+
 # ---------------------------------------------------------------------------
 # hot-swap atomicity under concurrent submits
 # ---------------------------------------------------------------------------

@@ -419,3 +419,52 @@ def test_dropout_sharded_multidevice_subprocess():
         cwd="/root/repo",
     )
     assert "DROPOUT_MULTIDEVICE_OK" in proc.stdout, proc.stderr[-2000:]
+
+
+# ---------------------------------------------------------------------------
+# canonical_batch_stream edge cases (the pad-to-first-seen contract)
+# ---------------------------------------------------------------------------
+
+
+def test_canonical_stream_empty_iterator():
+    """An empty stream yields nothing; the pipeline turns it into the
+    zero statistic only when told its shape."""
+    from repro.core.stats_pipeline import canonical_batch_stream
+
+    assert list(canonical_batch_stream(iter([]))) == []
+    p = StatsPipeline(4)
+    z = p.from_batches(iter([]), feature_dim=6)
+    assert z.A.shape == (4, 6) and z.B.shape == (6, 6)
+    assert float(np.asarray(z.N).sum()) == 0.0
+    with pytest.raises(ValueError, match="feature_dim"):
+        p.from_batches(iter([]))
+
+
+def test_canonical_stream_single_ragged_tail():
+    """One ragged tail: padded UP to the first-seen row count with zero
+    features and label −1; oversized batches pass through untouched."""
+    from repro.core.stats_pipeline import canonical_batch_stream
+
+    x, y = _random_data(10, 5, 3, seed=0)
+    out = list(canonical_batch_stream(iter([(x[:8], y[:8]), (x[8:], y[8:])])))
+    assert [f.shape for f, _ in out] == [(8, 5), (8, 5)]
+    tail_f, tail_y = np.asarray(out[1][0]), np.asarray(out[1][1])
+    np.testing.assert_array_equal(tail_f[:2], x[8:])
+    assert (tail_f[2:] == 0).all()
+    np.testing.assert_array_equal(tail_y[2:], -1)
+    # an oversized batch keeps its own shape (its own cached trace)
+    big = list(canonical_batch_stream(iter([(x[:2], y[:2]), (x[2:], y[2:])])))
+    assert big[1][0].shape == (8, 5)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "fused"])
+def test_ragged_tail_label_padding_contributes_nothing(backend):
+    """The −1 padding discipline under both backends: a ragged stream's
+    statistics equal the materialized sweep, and N proves the padded
+    rows fell out of every statistic."""
+    x, y = _random_data(11, 6, 4, seed=1)
+    batches = _split_batches(x, y, [4, 8])  # 4 + 4 + 3-row ragged tail
+    got = StatsPipeline(4, backend=backend).from_batches(iter(batches))
+    want = client_statistics(jnp.asarray(x), jnp.asarray(y), 4)
+    _assert_stats_close(got, want)
+    assert float(np.asarray(got.N).sum()) == 11.0
