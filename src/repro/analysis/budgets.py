@@ -166,16 +166,21 @@ def audit_carry_donation(*, plant_missing: bool = False) -> List[Finding]:
     same fold (kept for CPU hosts, which can't donate) — the known-bad
     fixture proving the rule can fail.
     """
+    from repro import tune
     from repro.kernels import ops
-    from repro.kernels.stats_kernel import BLOCK_D, BLOCK_N
 
     key = "kernels.stats_acc" if plant_missing else "kernels.stats_acc_donating"
     fold = ops.AUDITED_JITS[key]
-    m, n = ops.stats_carry_init(AUDIT_CLASSES, AUDIT_DIM)
+    # the blocks the real fold would run with (tuned or default) — the
+    # donation claim must hold for whatever the dispatch layer picks
+    block_n, block_d = tune.stats_acc_blocks(
+        AUDIT_CLASSES, AUDIT_DIM, rows=AUDIT_ROWS
+    )
+    m, n = ops.stats_carry_init(AUDIT_CLASSES, AUDIT_DIM, block_d=block_d)
     f = jnp.zeros((AUDIT_ROWS, AUDIT_DIM))
     y = jnp.zeros((AUDIT_ROWS,), jnp.int32)
     lowered = fold.lower(
-        m, n, f, y, interpret=True, block_d=BLOCK_D, block_n=BLOCK_N
+        m, n, f, y, interpret=True, block_d=block_d, block_n=block_n
     )
     return hlo_audit.check_donated_aliasing(
         key,
@@ -206,8 +211,12 @@ def audit_retraces() -> List[Finding]:
     x = jnp.arange(n * AUDIT_DIM, dtype=jnp.float32).reshape(n, AUDIT_DIM)
     y = jnp.arange(n, dtype=jnp.int32) % AUDIT_CLASSES
 
+    # backend pinned: the sentinel counts entries on the jnp fold jit,
+    # so the workload must not be re-routed by the auto dispatcher
     def stream_workload():
-        return stats_pipeline.StatsPipeline(AUDIT_CLASSES).from_batches(
+        return stats_pipeline.StatsPipeline(
+            AUDIT_CLASSES, backend="jnp"
+        ).from_batches(
             (x[i : i + AUDIT_ROWS], y[i : i + AUDIT_ROWS])
             for i in range(0, n, AUDIT_ROWS)
         )
@@ -217,8 +226,9 @@ def audit_retraces() -> List[Finding]:
     )
 
     # serving scorer: repeated same-shape batches => one trace on the
-    # fused head kernel wrapper (the batcher pads rows to block
-    # multiples precisely so this holds for the whole workload)
+    # fused head kernel (the batcher pads rows to block multiples
+    # precisely so this holds for the whole workload); backend pinned
+    # for the same reason as above
     gnb = ops.AUDITED_JITS["kernels.gnb_logits"]
     _clear_jit_cache(gnb)
     w = jnp.zeros((AUDIT_CLASSES, AUDIT_DIM))
@@ -227,11 +237,53 @@ def audit_retraces() -> List[Finding]:
 
     def score_workload():
         for _ in range(3):
-            score_features(rows, w, b, interpret=True)
+            score_features(rows, w, b, interpret=True, backend="fused")
 
     out += jaxpr_audit.check_single_trace(
         "kernels.gnb_logits", gnb, score_workload
     )
+
+    # the jnp twin the dispatcher can select must obey the same contract
+    gnb_jnp = ops.AUDITED_JITS["kernels.gnb_logits_jnp"]
+    _clear_jit_cache(gnb_jnp)
+
+    def score_jnp_workload():
+        for _ in range(3):
+            score_features(rows, w, b, interpret=True, backend="jnp")
+
+    out += jaxpr_audit.check_single_trace(
+        "kernels.gnb_logits_jnp", gnb_jnp, score_jnp_workload
+    )
+    return out
+
+
+def audit_tuned_budgets() -> List[Finding]:
+    """The collective budgets must be block-size invariant.
+
+    Records a synthetic tuned decision with NON-default fold blocks
+    into a scoped cache, rebuilds the fused streaming engine under it,
+    and re-counts fold/finalize collectives — proving the tuner can
+    never buy throughput by smuggling a collective into the fold.
+    """
+    from repro import tune
+
+    cache = tune.TuneCache()
+    cache.record(
+        tune.Decision(
+            kernel="stats_acc", n=AUDIT_ROWS, d=AUDIT_DIM, c=AUDIT_CLASSES,
+            winner="fused", blocks={"block_n": 256, "block_d": 128},
+        )
+    )
+    out: List[Finding] = []
+    with tune.using_cache(cache):
+        cell = "stream[fused,plain,tuned]"
+        fold_jx, fin_jx = _streaming_jaxprs("fused", "plain")
+        out += jaxpr_audit.check_collective_budget(
+            f"{cell}.fold", fold_jx, STREAM_FOLD_COLLECTIVES
+        )
+        out += jaxpr_audit.check_collective_budget(
+            f"{cell}.finalize", fin_jx, STREAM_FINALIZE_COLLECTIVES
+        )
     return out
 
 
@@ -243,4 +295,5 @@ def run_dynamic_audits() -> List[Finding]:
     out += audit_scoring()
     out += audit_carry_donation()
     out += audit_retraces()
+    out += audit_tuned_budgets()
     return out

@@ -22,6 +22,16 @@ Each rule exists because its violation already bit us once:
   instance with centred sweeps (``class_conditional_moments``).  The
   rule flags a subtraction whose right side contains a self outer
   product (``outer(m, m)``, optionally scaled).
+- ``block-constants``: kernel block sizes are the autotuner's business
+  (``repro.tune``): a call site in ``launch/``, ``serve/``, or
+  ``benchmarks/`` that imports the kernels' ``BLOCK_*`` module
+  constants or passes a literal ``block_n=``/``block_d=``/``block_c=``/
+  ``block_k=`` override hardcodes one shape's tile choice into every
+  shape — exactly the 0.86×-at-n=4096 regression the tuner exists to
+  kill — and desyncs from the tune cache's per-bucket verdicts.  Blocks
+  must come through the ``repro.tune`` accessors (``stats_blocks``,
+  ``gnb_blocks``, ``serve_row_multiple``, …); ``repro/tune.py`` itself
+  and the kernel layer are the sanctioned owners.
 - ``extractor-protocol``: feature extraction outside ``fl/`` and
   ``models/`` must go through the Extractor protocol —
   ``extractor.features(x)`` / ``models.transformer.features()`` — so
@@ -46,6 +56,11 @@ SHARD_MAP_HOME = "repro/sharding.py"
 
 # consumers that must reach features through the Extractor protocol
 EXTRACTOR_SCOPE = ("repro/launch/", "repro/serve/", "benchmarks/")
+
+# consumers that must reach kernel block sizes through repro.tune
+# (same scope: the kernel layer and the tuner itself are the owners)
+BLOCK_SCOPE = EXTRACTOR_SCOPE
+_BLOCK_KWARGS = frozenset({"block_n", "block_d", "block_c", "block_k"})
 
 # np.random attributes that are NOT the legacy global-state API
 _NP_RANDOM_OK = {"default_rng", "Generator", "SeedSequence", "BitGenerator",
@@ -92,10 +107,14 @@ class _LintVisitor(ast.NodeVisitor):
         self.path = path
         self.findings: List[Finding] = []
         self._extractor_scope = _in_extractor_scope(path)
+        self._block_scope = _in_extractor_scope(path)
         # import aliases of repro.models.transformer (e.g. ``T``), and
         # bare names imported from it that are model entry points
         self._transformer_aliases: set = set()
         self._transformer_fns: set = set()
+        # names bound to repro.kernels modules (``BLOCK_*`` attr access
+        # through any of these is a block-constants finding)
+        self._kernel_aliases: set = set()
 
     def _add(self, rule: str, line: int, message: str) -> None:
         self.findings.append(
@@ -110,6 +129,11 @@ class _LintVisitor(ast.NodeVisitor):
                 self._shard_map_finding(node.lineno)
             if alias.name == "repro.models.transformer" and alias.asname:
                 self._transformer_aliases.add(alias.asname)
+            if alias.name == "repro.kernels" or alias.name.startswith(
+                "repro.kernels."
+            ):
+                # no asname: the chain is rooted at the bare top name
+                self._kernel_aliases.add(alias.asname or alias.name.split(".")[0])
         self.generic_visit(node)
 
     def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
@@ -129,6 +153,30 @@ class _LintVisitor(ast.NodeVisitor):
             for a in node.names:
                 if a.name == "forward":
                     self._transformer_fns.add(a.asname or "forward")
+        if mod == "repro.kernels" or mod.startswith("repro.kernels."):
+            for a in node.names:
+                if self._block_scope and a.name.startswith("BLOCK_"):
+                    self._add(
+                        "block-constants", node.lineno,
+                        f"kernel constant {a.name} imported outside the "
+                        "tuner — block sizes come from repro.tune "
+                        "accessors (stats_blocks / gnb_blocks / "
+                        "serve_row_multiple), tuned per shape bucket",
+                    )
+                else:
+                    self._kernel_aliases.add(a.asname or a.name)
+        self.generic_visit(node)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        if self._block_scope and node.attr.startswith("BLOCK_"):
+            root = ast.unparse(node.value).split(".")[0]
+            if root in self._kernel_aliases:
+                self._add(
+                    "block-constants", node.lineno,
+                    f"kernel constant .{node.attr} read outside the tuner "
+                    "— block sizes come from repro.tune accessors, tuned "
+                    "per shape bucket",
+                )
         self.generic_visit(node)
 
     def _shard_map_finding(self, line: int) -> None:
@@ -169,6 +217,16 @@ class _LintVisitor(ast.NodeVisitor):
                 )
         if self._extractor_scope:
             self._check_extractor_protocol(node, fn)
+        if self._block_scope:
+            for kw in node.keywords:
+                if kw.arg in _BLOCK_KWARGS and isinstance(kw.value, ast.Constant):
+                    self._add(
+                        "block-constants", node.lineno,
+                        f"literal {kw.arg}={kw.value.value!r} override "
+                        "outside the tuner — pass blocks from the "
+                        "repro.tune accessors (or omit for the tuned "
+                        "default) so the cache's per-bucket verdicts apply",
+                    )
         self.generic_visit(node)
 
     # -- extractor-protocol --------------------------------------------------

@@ -183,6 +183,30 @@ def plant_extractor_protocol() -> List[Finding]:
     )
 
 
+_BAD_BLOCKS_SRC = textwrap.dedent(
+    """
+    from repro.kernels import client_stats
+    from repro.kernels.stats_kernel import BLOCK_N
+
+    def sweep(f, y, c):
+        # hardcodes one shape's tile choice into every shape
+        return client_stats(f, y, c, block_n=1024, block_d=128)
+
+    def pad_rows(n):
+        return ((n + BLOCK_N - 1) // BLOCK_N) * BLOCK_N
+    """
+)
+
+
+def plant_block_constants() -> List[Finding]:
+    from repro.analysis import lint
+
+    # the path puts the fixture in scope (a kernel consumer under launch/)
+    return lint.check_source(
+        _BAD_BLOCKS_SRC, "src/repro/launch/planted_blocks.py"
+    )
+
+
 PLANTS: Dict[str, Callable[[], List[Finding]]] = {
     "collective-budget": plant_collective_budget,
     "donated-aliasing": plant_donated_aliasing,
@@ -194,4 +218,5 @@ PLANTS: Dict[str, Callable[[], List[Finding]]] = {
     "time-time": plant_time_time,
     "uncentred-second-moment": plant_uncentred_moment,
     "extractor-protocol": plant_extractor_protocol,
+    "block-constants": plant_block_constants,
 }

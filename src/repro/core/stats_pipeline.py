@@ -37,10 +37,19 @@ Knob matrix (all orthogonal):
 
 | knob        | values                | effect                                    |
 |-------------|-----------------------|-------------------------------------------|
-| ``backend`` | ``"jnp"`` | ``"fused"``| per-shard sweep: XLA matmuls vs the       |
-|             |                       | single-pass Pallas engine (carry variant  |
-|             |                       | ``kernels.client_stats_acc`` when         |
-|             |                       | streaming: in-place padded (M, N) folds)  |
+| ``backend`` | ``"auto"`` (default)  | per-shard sweep: XLA matmuls vs the       |
+|             | | ``"jnp"`` | ``"fused"`` | single-pass Pallas engine (carry      |
+|             |                       | variant ``kernels.client_stats_acc`` when |
+|             |                       | streaming: in-place padded (M, N) folds). |
+|             |                       | ``auto`` peeks the ingest shape and asks  |
+|             |                       | ``repro.tune`` — the measured jnp-vs-fused|
+|             |                       | winner for the (device, shape) bucket, or |
+|             |                       | the crossover heuristic when untuned —    |
+|             |                       | then delegates to that concrete backend,  |
+|             |                       | so results are bitwise those of the       |
+|             |                       | backend it picked.  Fused block sizes     |
+|             |                       | come from the same tune cache (kernel     |
+|             |                       | defaults on a miss).                      |
 | ``placement``| ``"local"`` | ``"sharded"`` | this host vs row-sharded over a   |
 |             |                       | mesh's client axes (``launch.stats_engine``; |
 |             |                       | streaming keeps a per-shard running carry |
@@ -96,7 +105,7 @@ Batch = Tuple[Any, Any]
 # a cohort client: a materialized (features, labels) pair or a batch stream
 ClientData = Union[Batch, Iterable[Batch]]
 
-BACKENDS = ("jnp", "fused")
+BACKENDS = ("auto", "jnp", "fused")
 PLACEMENTS = ("local", "sharded")
 PRIVACY = ("plain", "secure")
 
@@ -121,11 +130,16 @@ def _stats_fused(
     *,
     interpret: Optional[bool] = None,
 ) -> FeatureStats:
+    from repro import tune
     from repro.kernels import client_stats  # deferred: keeps core jnp-only
 
+    f = jnp.asarray(features)
+    block_n, block_d = tune.stats_blocks(
+        int(f.shape[0]), int(f.shape[1]), num_classes
+    )
     A, B, N = client_stats(
-        features, jnp.asarray(labels).astype(jnp.int32), num_classes,
-        interpret=interpret,
+        f, jnp.asarray(labels).astype(jnp.int32), num_classes,
+        interpret=interpret, block_n=block_n, block_d=block_d,
     )
     return FeatureStats(A=A, B=B, N=N)
 
@@ -192,7 +206,7 @@ class StatsPipeline:
         self,
         num_classes: int,
         *,
-        backend: str = "jnp",
+        backend: str = "auto",
         placement: str = "local",
         privacy: str = "plain",
         mesh=None,
@@ -248,7 +262,23 @@ class StatsPipeline:
 
     @property
     def use_kernel(self) -> bool:
+        if self.backend == "auto":
+            raise RuntimeError(
+                "backend='auto' is resolved per ingest (shape peek → "
+                "tune.stats_backend) before any kernel choice is read — "
+                "reaching use_kernel unresolved is a pipeline bug"
+            )
         return self.backend == "fused"
+
+    def _resolved(self, rows: int, dim: int) -> "StatsPipeline":
+        """Pin ``backend="auto"`` to the tuner's verdict for this shape."""
+        if self.backend != "auto":
+            return self
+        from repro import tune
+
+        return self.replace(
+            backend=tune.stats_backend(int(rows), int(dim), self.num_classes)
+        )
 
     @property
     def secure(self) -> bool:
@@ -321,6 +351,9 @@ class StatsPipeline:
         """
         if self.extractor is not None:
             return self._featurized().from_arrays(*self._extract(features, labels))
+        if self.backend == "auto":
+            f = jnp.asarray(features)
+            return self._resolved(f.shape[0], f.shape[1]).from_arrays(f, labels)
         self._require_parties_for_dropout()
         if self.placement == "sharded":
             from repro.launch.stats_engine import sharded_client_stats
@@ -363,6 +396,19 @@ class StatsPipeline:
                     else self.extractor.feature_dim
                 ),
             )
+        if self.backend == "auto":
+            # resolve on the FIRST batch's shape (what the fold kernel
+            # sees), then delegate with the peeked batch re-chained
+            it = iter(batches)
+            first = next(it, None)
+            if first is None:
+                return self.replace(backend="jnp").from_batches(
+                    iter(()), feature_dim=feature_dim
+                )
+            fb = jnp.asarray(first[0])
+            return self._resolved(fb.shape[0], fb.shape[1]).from_batches(
+                itertools.chain([first], it), feature_dim=feature_dim
+            )
         self._require_parties_for_dropout()
         if self.placement == "sharded":
             from repro.launch.stats_engine import streaming_sharded_stats
@@ -381,11 +427,11 @@ class StatsPipeline:
                 )
             return FeatureStats.zeros(self.num_classes, feature_dim)
 
-        d = jnp.asarray(first[0]).shape[1]
+        rows, d = jnp.asarray(first[0]).shape
         stream = canonical_batch_stream(itertools.chain([first], it))
 
         if self.use_kernel:
-            return self._fold_fused(stream, d)
+            return self._fold_fused(stream, d, rows=rows)
 
         carry = FeatureStats.zeros(self.num_classes, d, self.accum_dtype)
         for fb, yb in stream:
@@ -395,23 +441,36 @@ class StatsPipeline:
         return carry
 
     def _fold_fused(
-        self, stream: Iterator[Tuple[Array, Array]], d: int
+        self,
+        stream: Iterator[Tuple[Array, Array]],
+        d: int,
+        rows: Optional[int] = None,
     ) -> FeatureStats:
         """Streaming fold through the carry/accumulate Pallas kernel.
 
         The carry stays in the kernel's padded (M, N) layout across the
         whole stream — updated in place via input-donation — and is
-        unpacked to (A, B, N) exactly once at the end.
+        unpacked to (A, B, N) exactly once at the end.  Block sizes come
+        from the tune cache at the (batch rows, d, C) bucket (kernel
+        defaults on a miss); the carry layout is allocated with the same
+        ``block_d`` the folds use, so they cannot desync.
         """
+        from repro import tune
         from repro.kernels import (
             client_stats_acc,
             stats_carry_finalize,
             stats_carry_init,
         )
 
-        m, n = stats_carry_init(self.num_classes, d)
+        block_n, block_d = tune.stats_acc_blocks(
+            self.num_classes, d, rows=rows
+        )
+        m, n = stats_carry_init(self.num_classes, d, block_d=block_d)
         for fb, yb in stream:
-            m, n = client_stats_acc(m, n, fb, yb, interpret=self.interpret)
+            m, n = client_stats_acc(
+                m, n, fb, yb, interpret=self.interpret,
+                block_n=block_n, block_d=block_d,
+            )
         A, B, N = stats_carry_finalize(m, n, self.num_classes, d)
         return FeatureStats(A=A, B=B, N=N)
 
@@ -455,11 +514,23 @@ class StatsPipeline:
                     else self.extractor.feature_dim
                 ),
             )
-        from repro.core.secure_agg import round_plan
-
         clients = list(clients)
         if not clients:
             raise ValueError("from_cohort() needs at least one client")
+        if self.backend == "auto":
+            # one verdict for the whole cohort, from the first client's
+            # shape — clients of one round are statistically alike, and
+            # a uniform backend keeps the sharded/secure paths on one
+            # trace family
+            peeked, clients = _peek_client_shape(clients)
+            resolved = (
+                self._resolved(*peeked)
+                if peeked is not None
+                else self.replace(backend="jnp")
+            )
+            return resolved.from_cohort(clients, feature_dim=feature_dim)
+        from repro.core.secure_agg import round_plan
+
         k = len(clients)
         dropped = self.dropout
         # validates dropout ids and the survivor threshold for BOTH
@@ -538,6 +609,11 @@ class StatsPipeline:
             )
         if _is_array_pair(client):
             f, y = client
+            if self.backend == "auto":
+                fa = jnp.asarray(f)
+                return self._resolved(
+                    fa.shape[0], fa.shape[1]
+                ).client_statistics(client, feature_dim=feature_dim)
             if self.use_kernel:
                 return _stats_fused(
                     jnp.asarray(f), jnp.asarray(y), self.num_classes,
@@ -565,6 +641,11 @@ class StatsPipeline:
         single k-sweep for all three statistics, so there it costs
         nothing extra.  Empty classes keep a zero mean.
         """
+        if self.backend == "auto":
+            f = jnp.asarray(features)
+            return self._resolved(f.shape[0], f.shape[1]).class_means(
+                features, labels
+            )
         if self.use_kernel:
             stats = self.from_arrays(features, labels)
             A, N = stats.A, stats.N
@@ -638,6 +719,25 @@ def class_conditional_moments(
             )
             cov[c] = np.asarray(stats.B) / (n - 1)
     return mu, cov, counts
+
+
+def _peek_client_shape(clients):
+    """((rows, dim) or None, clients) — first client's batch shape.
+
+    A batch-stream first client is consumed one batch deep and handed
+    back re-chained, so the peek is invisible to the caller.
+    """
+    first = clients[0]
+    if _is_array_pair(first):
+        f = jnp.asarray(first[0])
+        return (f.shape[0], f.shape[1]), clients
+    it = iter(first)
+    b0 = next(it, None)
+    if b0 is None:
+        return None, clients
+    f = jnp.asarray(b0[0])
+    rest = list(clients[1:])
+    return (f.shape[0], f.shape[1]), [itertools.chain([b0], it)] + rest
 
 
 def _is_array_pair(client: ClientData) -> bool:

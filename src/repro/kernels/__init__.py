@@ -16,6 +16,7 @@ from repro.kernels.ops import (
     expand_features,
     flash_attention,
     gnb_logits,
+    gnb_logits_jnp,
     stats_carry_finalize,
     stats_carry_init,
 )
@@ -26,6 +27,7 @@ __all__ = [
     "stats_carry_init",
     "stats_carry_finalize",
     "gnb_logits",
+    "gnb_logits_jnp",
     "expand_features",
     "flash_attention",
 ]

@@ -181,35 +181,82 @@ def stats_carry_finalize(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def gnb_logits(
-    features: Array, w: Array, b: Array, *, interpret: bool | None = None
+@functools.partial(
+    jax.jit, static_argnames=("interpret", "block_n", "block_c", "block_k")
+)
+def _gnb_logits_fused(
+    features: Array,
+    w: Array,
+    b: Array,
+    *,
+    interpret: bool,
+    block_n: int,
+    block_c: int,
+    block_k: int,
 ) -> Array:
-    """logits = features · wᵀ + b via the fused head kernel."""
-    interpret = (not _on_tpu()) if interpret is None else interpret
     n, d = features.shape
     c = w.shape[0]
-    bn, bc, bk = (
-        classifier_kernel.BLOCK_N,
-        classifier_kernel.BLOCK_C,
-        classifier_kernel.BLOCK_K,
+    f = _pad_to(_pad_to(features, 0, block_n), 1, block_k)
+    wp = _pad_to(_pad_to(w, 0, block_c), 1, block_k)
+    bp = _pad_to(b[None, :], 1, block_c)
+    out = classifier_kernel.gnb_logits_kernel(
+        f, wp, bp, block_n=block_n, block_c=block_c, block_k=block_k,
+        interpret=interpret,
     )
-    f = _pad_to(_pad_to(features, 0, bn), 1, bk)
-    wp = _pad_to(_pad_to(w, 0, bc), 1, bk)
-    bp = _pad_to(b[None, :], 1, bc)
-    out = classifier_kernel.gnb_logits_kernel(f, wp, bp, interpret=interpret)
     return out[:n, :c]
+
+
+def gnb_logits(
+    features: Array,
+    w: Array,
+    b: Array,
+    *,
+    interpret: bool | None = None,
+    block_n: int | None = None,
+    block_c: int | None = None,
+    block_k: int | None = None,
+) -> Array:
+    """logits = features · wᵀ + b via the fused head kernel.
+
+    Block sizes default to the tuner's verdict for this (n, d, C)
+    bucket (``repro.tune.gnb_blocks``) — the kernel constants when no
+    tune cache is active — so serving picks up tuned tiles without any
+    call-site change.  One jit trace per (padded shape, blocks).
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    if block_n is None or block_c is None or block_k is None:
+        from repro import tune  # deferred: dispatch layer sits above kernels
+
+        tn, tc, tk = tune.gnb_blocks(
+            int(features.shape[0]), int(features.shape[1]), int(w.shape[0])
+        )
+        block_n = tn if block_n is None else block_n
+        block_c = tc if block_c is None else block_c
+        block_k = tk if block_k is None else block_k
+    return _gnb_logits_fused(
+        features, w, b,
+        interpret=interpret, block_n=block_n, block_c=block_c, block_k=block_k,
+    )
+
+
+@jax.jit
+def gnb_logits_jnp(features: Array, w: Array, b: Array) -> Array:
+    """The scoring kernel's XLA twin — what ``backend="auto"`` serving
+    dispatches to when the tuner measured a jnp win at the bucket."""
+    f = features.astype(jnp.float32)
+    return f @ w.astype(jnp.float32).T + b.astype(jnp.float32)
 
 
 # Jitted hot paths the invariant-audit suite (repro.analysis.budgets)
 # reaches by name — donation survival is checked on the carry-fold pair
 # (the donating twin must alias, the CPU twin is the known-bad fixture),
-# the retrace sentinel counts cache entries on the head kernel.
+# the retrace sentinel counts cache entries on both scoring twins.
 AUDITED_JITS = {
     "kernels.client_stats": client_stats,
     "kernels.stats_acc": _acc_jit,
     "kernels.stats_acc_donating": _acc_jit_donating,
-    "kernels.gnb_logits": gnb_logits,
+    "kernels.gnb_logits": _gnb_logits_fused,
+    "kernels.gnb_logits_jnp": gnb_logits_jnp,
 }
 
 

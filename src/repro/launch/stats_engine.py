@@ -194,19 +194,23 @@ def make_streaming_engine(
     from ≥ ``min_survivors`` Shamir shares and subtracts the dangling
     masks, returning the exact statistics over the surviving shards.
     """
+    from repro import tune
     from repro.kernels.ops import (
         _client_stats_acc_impl,
         _padded_dims,
         stats_carry_finalize,
     )
-    from repro.kernels.stats_kernel import BLOCK_D, BLOCK_N
+
+    # tuned fold blocks for this (d, C) family (kernel defaults on a
+    # cache miss); the carry layout and every fold share one block_d
+    block_n, block_d = tune.stats_acc_blocks(num_classes, feature_dim)
 
     axes = tuple(a for a in client_axes if a in mesh.axis_names)
     n_shards = _num_shards(mesh, axes)
     shard_sharding = NamedSharding(mesh, P(axes))
 
     if use_kernel:
-        d_pad, c_pad = _padded_dims(num_classes, feature_dim, BLOCK_D)
+        d_pad, c_pad = _padded_dims(num_classes, feature_dim, block_d)
         carry0 = (
             jnp.zeros((n_shards, d_pad + c_pad, d_pad), jnp.float32),
             jnp.zeros((n_shards, 1, c_pad), jnp.float32),
@@ -218,7 +222,7 @@ def make_streaming_engine(
                 carry[0][0], carry[1][0], f, y,
                 interpret=(jax.default_backend() != "tpu"
                            if interpret is None else interpret),
-                block_d=BLOCK_D, block_n=BLOCK_N,
+                block_d=block_d, block_n=block_n,
             )
             return m[None], n[None]
 

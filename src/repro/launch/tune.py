@@ -1,0 +1,89 @@
+"""fedcgs-tune — tune kernel block shapes and persist the winners.
+
+Times the bounded candidate grids from :mod:`repro.tune` for all three
+Pallas entry points (one-shot stats sweep, streaming carry fold, GNB
+scoring) at each requested shape, records the per-bucket winners into a
+:class:`repro.tune.TuneCache`, and saves it as JSON.  Point
+``FEDCGS_TUNE_CACHE`` at the saved file and every ``backend="auto"``
+call site dispatches on the measured verdicts instead of the static
+crossover heuristic.
+
+``--smoke`` shrinks both the shape list and the candidate grids to a
+seconds-long run — CI uses it to prove the tune→save→dispatch loop
+end to end on every push.
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import List, Tuple
+
+# shapes that matter to this repo: serve-batch scale through bench scale
+DEFAULT_SHAPES: Tuple[Tuple[int, int, int], ...] = (
+    (1024, 512, 100),
+    (4096, 512, 100),
+    (16384, 512, 100),
+)
+SMOKE_SHAPES: Tuple[Tuple[int, int, int], ...] = ((256, 128, 16),)
+
+
+def _parse_shape(text: str) -> Tuple[int, int, int]:
+    try:
+        n, d, c = (int(part) for part in text.split(","))
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"shape must be 'n,d,C' (got {text!r})"
+        ) from None
+    return n, d, c
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="fedcgs-tune", description=__doc__.splitlines()[0]
+    )
+    parser.add_argument(
+        "--cache", default="tune_cache.json",
+        help="cache JSON to load, merge into, and save (default: %(default)s)",
+    )
+    parser.add_argument(
+        "--shapes", type=_parse_shape, nargs="*", metavar="N,D,C",
+        help="shapes to tune (default: a serve-to-bench ladder)",
+    )
+    parser.add_argument(
+        "--smoke", action="store_true",
+        help="tiny shape + candidate grids: seconds, not minutes (CI)",
+    )
+    parser.add_argument("--iters", type=int, default=3, help="timing reps per candidate")
+    parser.add_argument("--seed", type=int, default=0, help="input data seed")
+    args = parser.parse_args(argv)
+
+    from repro import tune
+
+    shapes: List[Tuple[int, int, int]] = list(
+        args.shapes or (SMOKE_SHAPES if args.smoke else DEFAULT_SHAPES)
+    )
+    cache = tune.TuneCache.load(args.cache)  # merge into prior runs
+    print(f"device={tune.device_kind()}  cache={args.cache} ({len(cache)} entries)")
+    decisions = tune.tune_all(
+        shapes, cache=cache, smoke=args.smoke,
+        iters=max(1, args.iters), seed=args.seed,
+    )
+    cache.save(args.cache)
+
+    header = f"{'kernel':<10}{'shape':<20}{'winner':<8}{'blocks':<28}" \
+             f"{'jnp ms':>10}{'fused ms':>10}{'default ms':>12}"
+    print(header)
+    print("-" * len(header))
+    for dec in decisions:
+        blocks = ",".join(f"{k}={v}" for k, v in sorted(dec.blocks.items()))
+        print(
+            f"{dec.kernel:<10}{f'({dec.n},{dec.d},{dec.c})':<20}"
+            f"{dec.winner:<8}{blocks:<28}"
+            f"{dec.jnp_ms:>10.3f}{dec.fused_ms:>10.3f}{dec.default_ms:>12.3f}"
+        )
+    print(f"saved {len(cache)} entries -> {args.cache}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

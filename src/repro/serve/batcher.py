@@ -2,7 +2,9 @@
 
 Requests are ragged (any row count ≥ 1); the batcher coalesces whatever
 is in flight each tick into one feature matrix, pads the row count up
-to the ``gnb_logits`` kernel's block multiple (the same zero-row pad
+to the scoring path's row multiple — ``repro.tune.serve_row_multiple``:
+the tuned ``gnb_logits`` block, or a small lane-aligned quantum when
+the tuner picked the jnp matmul (the same zero-row pad
 discipline as ``stats_pipeline._pad_batch`` — padded rows are pure
 garbage lanes that get sliced off, they never reach a caller), scores
 the padded batch ONCE, and slices each request's rows back out.  Row
@@ -34,7 +36,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.kernels.classifier_kernel import BLOCK_N
+from repro import tune
 
 Array = np.ndarray
 
@@ -77,11 +79,22 @@ class DynamicBatcher:
         self,
         feature_dim: int,
         *,
-        max_batch_rows: int = 4 * BLOCK_N,
+        num_classes: Optional[int] = None,
+        max_batch_rows: Optional[int] = None,
         max_delay_s: float = 2e-3,
-        max_queue_rows: int = 64 * BLOCK_N,
-        row_multiple: int = BLOCK_N,
+        max_queue_rows: Optional[int] = None,
+        row_multiple: Optional[int] = None,
     ):
+        # the pad-to multiple is COUPLED to the scoring dispatch: the
+        # tuned kernel's block_n (or the jnp quantum) via the one shared
+        # accessor, so tuning can't desync batcher padding from what the
+        # kernel pads to internally.  Explicit row_multiple= overrides.
+        if row_multiple is None:
+            row_multiple = tune.serve_row_multiple(feature_dim, num_classes)
+        if max_batch_rows is None:
+            max_batch_rows = 4 * row_multiple
+        if max_queue_rows is None:
+            max_queue_rows = 64 * row_multiple
         if max_batch_rows < 1 or max_queue_rows < max_batch_rows:
             raise ValueError(
                 "need max_queue_rows >= max_batch_rows >= 1, got "

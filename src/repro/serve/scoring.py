@@ -1,4 +1,5 @@
-"""Stateless GNB scoring: feature rows → logits through the fused kernel.
+"""Stateless GNB scoring: feature rows → logits through the fused kernel
+or its jnp twin — ``backend="auto"`` picks per shape via ``repro.tune``.
 
 The one compute path every serving layer shares.  Locally the jit'd
 ``kernels.gnb_logits`` wrapper owns block padding; on a mesh the rows
@@ -17,15 +18,21 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.kernels import gnb_logits
+from repro.kernels import gnb_logits, gnb_logits_jnp
+from repro.kernels.ops import AUDITED_JITS as _KERNEL_JITS
 from repro.sharding import shard_map
 
 Array = jax.Array
 
-# The one jitted kernel the serving hot path runs — exported for the
-# invariant-audit suite (repro.analysis.budgets): the whole serve
-# workload must compile to a handful of traces on exactly this jit.
-AUDITED_JITS = {"serve.scoring.gnb_logits": gnb_logits}
+# The jitted twins the serving hot path dispatches between — exported
+# for the invariant-audit suite (repro.analysis.budgets): the whole
+# serve workload must compile to a handful of traces on exactly these.
+AUDITED_JITS = {
+    "serve.scoring.gnb_logits": _KERNEL_JITS["kernels.gnb_logits"],
+    "serve.scoring.gnb_logits_jnp": gnb_logits_jnp,
+}
+
+BACKENDS = ("auto", "jnp", "fused")
 
 
 def live_axes(mesh: Mesh, client_axes: Tuple[str, ...]) -> Tuple[str, ...]:
@@ -47,6 +54,7 @@ def score_features(
     client_axes: Tuple[str, ...] = ("data",),
     interpret: Optional[bool] = None,
     extractor=None,
+    backend: str = "auto",
 ) -> Array:
     """logits (n, C) for feature rows (n, d) under head (w (C, d), b (C,)).
 
@@ -59,24 +67,46 @@ def score_features(
     RAW input batch and backbone + GNB score as one pipeline: the
     extractor's own jit runs first, then its rows flow through the
     audited scoring path unchanged (same traces, zero collectives).
+
+    ``backend="auto"`` (default) asks ``repro.tune`` to pick the fused
+    kernel vs its jitted jnp twin for this (rows, d, C) bucket — the
+    tuner's measured winner, or the crossover heuristic when untuned
+    (which keeps non-TPU hosts on the fused path, today's behaviour).
+    Either twin compiles to one trace per padded shape, zero
+    collectives, so the audited serving invariants hold regardless of
+    the verdict.
     """
     if extractor is not None:
         features = extractor.features(features)
     features = jnp.asarray(features)
     n = features.shape[0]
+    if backend == "auto":
+        from repro import tune
+
+        backend = tune.gnb_backend(
+            int(n), int(features.shape[1]), int(w.shape[0])
+        )
+    if backend not in ("jnp", "fused"):
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+
+    def _score(f_: Array, w_: Array, b_: Array) -> Array:
+        if backend == "jnp":
+            return gnb_logits_jnp(f_, w_, b_)
+        return gnb_logits(f_, w_, b_, interpret=interpret)
+
     if mesh is None:
-        return gnb_logits(features, w, b, interpret=interpret)
+        return _score(features, w, b)
 
     axes = live_axes(mesh, client_axes)
     if not axes:
-        return gnb_logits(features, w, b, interpret=interpret)
+        return _score(features, w, b)
     shards = num_shards(mesh, client_axes)
     pad = (-n) % shards
     if pad:
         features = jnp.pad(features, ((0, pad), (0, 0)))
 
     def shard_fn(f_shard: Array, w_: Array, b_: Array) -> Array:
-        return gnb_logits(f_shard, w_, b_, interpret=interpret)
+        return _score(f_shard, w_, b_)
 
     fn = shard_map(
         shard_fn, mesh=mesh,

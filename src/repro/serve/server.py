@@ -34,7 +34,7 @@ from repro.serve.metrics import ServeMetrics, timed
 from repro.serve.registry import HeadRegistry
 from repro.serve.scoring import num_shards, score_features
 
-from repro.kernels.classifier_kernel import BLOCK_N
+from repro import tune
 
 
 class GNBServer:
@@ -49,9 +49,9 @@ class GNBServer:
         mesh=None,
         client_axes: Tuple[str, ...] = ("data",),
         interpret: Optional[bool] = None,
-        max_batch_rows: int = 4 * BLOCK_N,
+        max_batch_rows: Optional[int] = None,
         max_delay_s: float = 2e-3,
-        max_queue_rows: int = 64 * BLOCK_N,
+        max_queue_rows: Optional[int] = None,
         poll_interval_s: float = 1e-4,
     ):
         if registry is None:
@@ -66,11 +66,16 @@ class GNBServer:
         self.mesh = mesh
         self.client_axes = client_axes
         self.interpret = interpret
-        # pad target: kernel block rows AND an even shard split — one
-        # number so the mesh path never re-pads what the batcher padded
-        multiple = BLOCK_N
+        # pad target: the TUNED scoring row multiple AND an even shard
+        # split — one number so the mesh path never re-pads what the
+        # batcher padded (same accessor the batcher itself defaults to)
+        multiple = tune.serve_row_multiple(d, int(live.W.shape[0]))
         if mesh is not None:
-            multiple = math.lcm(BLOCK_N, num_shards(mesh, client_axes))
+            multiple = math.lcm(multiple, num_shards(mesh, client_axes))
+        if max_batch_rows is None:
+            max_batch_rows = 4 * multiple
+        if max_queue_rows is None:
+            max_queue_rows = 64 * multiple
         self.batcher = DynamicBatcher(
             d,
             max_batch_rows=max_batch_rows,

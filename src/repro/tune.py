@@ -1,0 +1,639 @@
+"""repro.tune — per-shape kernel autotuning + jnp↔fused dispatch.
+
+The Pallas kernels' block constants (``stats_kernel.BLOCK_N/D``,
+``classifier_kernel.BLOCK_N/C/K``) are one-size defaults: good tile
+shapes at bench scale, 2× padding waste for a 256-row serving batch,
+and — the committed ``kernel_bench.json`` regression — slower than the
+plain XLA formulation at some shapes on some backends.  This module
+makes every kernel call site shape-aware instead:
+
+- **Tuner** (:func:`tune_stats` / :func:`tune_stats_acc` /
+  :func:`tune_gnb`, driven by ``fedcgs-tune``): times a bounded grid of
+  block candidates against the jnp reference at the same shape and
+  records the winner in a :class:`TuneCache`.
+- **Cache**: persistent JSON keyed ``(device_kind, kernel,
+  shape_bucket)`` — shapes bucket to powers of two, so one tuning run
+  covers a family.  A corrupt or absent cache loads as empty; every
+  accessor's miss path returns today's compiled-in defaults, so
+  behaviour without a cache is exactly the pre-tuning behaviour.
+- **Dispatch accessors**: ``StatsPipeline(backend="auto")`` asks
+  :func:`stats_backend`, ``serve.scoring.score_features`` asks
+  :func:`gnb_backend`, the kernel wrappers ask ``*_blocks``, and
+  ``serve.batcher`` derives its pad-to multiple from
+  :func:`serve_row_multiple` — one funnel, so tuned blocks can never
+  desync a caller's padding from the kernel's expectations.  On a cache
+  miss the backend accessors fall back to a static crossover heuristic
+  calibrated from the ``kernel_bench.py`` crossover sweep (see
+  ``STATS_CROSSOVER_FLOPS`` / ``GNB_CROSSOVER_FLOPS``).
+
+Cache resolution is deliberately explicit: :func:`get_cache` consults
+only an in-process override (:func:`set_cache` / :func:`using_cache`)
+or the ``FEDCGS_TUNE_CACHE`` env var — never the CWD or home directory,
+so tests and CI can't be flipped by a stray file.
+
+This module is the ONE sanctioned importer of the kernels' ``BLOCK_*``
+constants outside ``repro.kernels`` itself — the ``block-constants``
+lint rule (``repro.analysis.lint``) holds launch/serve/benchmarks to
+that.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import math
+import os
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+from repro.kernels import classifier_kernel, stats_kernel
+from repro.timing import timed
+
+# today's compiled-in constants — the miss path of every accessor
+DEFAULT_STATS_BLOCK_N = stats_kernel.BLOCK_N
+DEFAULT_STATS_BLOCK_D = stats_kernel.BLOCK_D
+DEFAULT_GNB_BLOCK_N = classifier_kernel.BLOCK_N
+DEFAULT_GNB_BLOCK_C = classifier_kernel.BLOCK_C
+DEFAULT_GNB_BLOCK_K = classifier_kernel.BLOCK_K
+
+# A jnp-winner head needs no kernel block multiple; pad serving batches
+# to a lane-aligned quantum instead (8× less pad waste than BLOCK_N).
+JNP_ROW_MULTIPLE = 64
+
+KERNELS = ("stats", "stats_acc", "gnb")
+
+# Crossover thresholds for the untuned miss path, in stats/score FLOPs
+# (2nd(d+C) and 2ndC respectively) — calibrated from the kernel_bench
+# crossover sweep: off-TPU the Pallas kernels run in interpret mode
+# (an emulation XLA always beats), so the fused stats path only pays on
+# a real TPU once the sweep is big enough to amortize grid setup; the
+# GNB kernel's padded block (256×512×128) sets its floor.
+STATS_CROSSOVER_FLOPS = 1e8
+GNB_CROSSOVER_FLOPS = 3.4e7
+
+
+def _on_tpu() -> bool:
+    import jax
+
+    return jax.default_backend() == "tpu"
+
+
+def bucket(x: int) -> int:
+    """Power-of-two shape bucket: one tuning run covers a family."""
+    return 1 << max(0, int(x) - 1).bit_length() if x > 1 else 1
+
+
+def device_kind() -> str:
+    """Sanitized accelerator kind (``cpu``, ``tpu_v5e``, …) — cache key."""
+    import jax
+
+    kind = jax.devices()[0].device_kind
+    return "".join(c if c.isalnum() else "_" for c in kind.lower()).strip("_")
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """One tuning verdict: measured winner + blocks at a shape bucket."""
+
+    kernel: str  # "stats" | "stats_acc" | "gnb"
+    n: int  # the ACTUAL tuned shape (buckets derive from it)
+    d: int
+    c: int
+    winner: str  # "jnp" | "fused"
+    blocks: Dict[str, int]
+    jnp_ms: Optional[float] = None
+    fused_ms: Optional[float] = None  # best fused candidate
+    default_ms: Optional[float] = None  # fused at the default blocks
+
+    def key(self, device: Optional[str] = None) -> str:
+        device = device_kind() if device is None else device
+        return (
+            f"{device}/{self.kernel}/"
+            f"n{bucket(self.n)}-d{bucket(self.d)}-C{bucket(self.c)}"
+        )
+
+
+class TuneCache:
+    """Persistent (device_kind, kernel, shape_bucket) → Decision map."""
+
+    VERSION = 1
+
+    def __init__(self, entries: Optional[Dict[str, Decision]] = None):
+        self._entries: Dict[str, Decision] = dict(entries or {})
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def decisions(self) -> List[Decision]:
+        return list(self._entries.values())
+
+    def record(self, decision: Decision) -> None:
+        if decision.kernel not in KERNELS:
+            raise ValueError(
+                f"kernel must be one of {KERNELS}, got {decision.kernel!r}"
+            )
+        if decision.winner not in ("jnp", "fused"):
+            raise ValueError(f"winner must be jnp|fused, got {decision.winner!r}")
+        self._entries[decision.key()] = decision
+
+    def lookup(
+        self,
+        kernel: str,
+        n: Optional[int],
+        d: int,
+        c: Optional[int] = None,
+    ) -> Optional[Decision]:
+        """Best-matching decision for this device, or None (miss).
+
+        Exact bucket first; otherwise the nearest-``n`` entry whose
+        ``d`` (and ``c``, when given) buckets match — a tuning run at
+        one batch size still informs neighbouring batch sizes, which
+        matters for callers like the serve batcher that must pick a pad
+        multiple BEFORE any batch shape exists (``n=None``).
+        """
+        if not self._entries:  # stays jax-free on the empty-cache path
+            return None
+        dev = device_kind()
+        if n is not None and c is not None:
+            hit = self._entries.get(
+                f"{dev}/{kernel}/n{bucket(n)}-d{bucket(d)}-C{bucket(c)}"
+            )
+            if hit is not None:
+                return hit
+        matches = [
+            dec
+            for key, dec in self._entries.items()
+            if key.startswith(f"{dev}/{kernel}/")
+            and bucket(dec.d) == bucket(d)
+            and (c is None or bucket(dec.c) == bucket(c))
+        ]
+        if not matches:
+            return None
+        if n is None:
+            return max(matches, key=lambda dec: bucket(dec.n))
+        target = math.log2(bucket(n))
+        return min(
+            matches, key=lambda dec: abs(math.log2(bucket(dec.n)) - target)
+        )
+
+    # -- persistence ---------------------------------------------------------
+
+    def save(self, path: str) -> None:
+        payload = {
+            "version": self.VERSION,
+            "entries": {
+                key: dataclasses.asdict(dec)
+                for key, dec in sorted(self._entries.items())
+            },
+        }
+        with open(path, "w") as fh:
+            json.dump(payload, fh, indent=2)
+
+    @classmethod
+    def load(cls, path: str) -> "TuneCache":
+        """Load a cache; corrupt/absent/foreign files yield an EMPTY cache
+        (the miss path — today's defaults), never an error."""
+        try:
+            with open(path) as fh:
+                payload = json.load(fh)
+            if payload.get("version") != cls.VERSION:
+                return cls()
+            entries = {
+                key: Decision(**raw)
+                for key, raw in payload.get("entries", {}).items()
+            }
+            return cls(entries)
+        except (OSError, ValueError, TypeError, KeyError, AttributeError):
+            return cls()
+
+
+# -- active-cache resolution (explicit only: override or env var) -----------
+
+_EMPTY = TuneCache()
+_active: Optional[TuneCache] = None
+_env_cache: Optional[Tuple[str, TuneCache]] = None
+
+
+def get_cache() -> TuneCache:
+    global _env_cache
+    if _active is not None:
+        return _active
+    path = os.environ.get("FEDCGS_TUNE_CACHE")
+    if not path:
+        return _EMPTY
+    if _env_cache is None or _env_cache[0] != path:
+        _env_cache = (path, TuneCache.load(path))
+    return _env_cache[1]
+
+
+def set_cache(cache: Optional[TuneCache]) -> None:
+    global _active
+    _active = cache
+
+
+@contextlib.contextmanager
+def using_cache(cache: Optional[TuneCache]) -> Iterator[TuneCache]:
+    global _active
+    prev, _active = _active, cache
+    try:
+        yield cache if cache is not None else get_cache()
+    finally:
+        _active = prev
+
+
+def _resolve(cache: Optional[TuneCache]) -> TuneCache:
+    return get_cache() if cache is None else cache
+
+
+# -- dispatch accessors (the ONLY block/backend source for call sites) ------
+
+
+def stats_blocks(
+    n: int, d: int, num_classes: int, *, cache: Optional[TuneCache] = None
+) -> Tuple[int, int]:
+    """(block_n, block_d) for the one-shot fused stats sweep."""
+    dec = _resolve(cache).lookup("stats", n, d, num_classes)
+    if dec is None:
+        return DEFAULT_STATS_BLOCK_N, DEFAULT_STATS_BLOCK_D
+    return (
+        int(dec.blocks.get("block_n", DEFAULT_STATS_BLOCK_N)),
+        int(dec.blocks.get("block_d", DEFAULT_STATS_BLOCK_D)),
+    )
+
+
+def stats_acc_blocks(
+    num_classes: int,
+    feature_dim: int,
+    *,
+    rows: Optional[int] = None,
+    cache: Optional[TuneCache] = None,
+) -> Tuple[int, int]:
+    """(block_n, block_d) for the streaming carry fold.
+
+    ``rows`` is the per-batch row count when known; the carry layout
+    (``block_d``) must be picked before the first batch arrives, which
+    the nearest-``n`` lookup handles.
+    """
+    dec = _resolve(cache).lookup("stats_acc", rows, feature_dim, num_classes)
+    if dec is None:
+        return DEFAULT_STATS_BLOCK_N, DEFAULT_STATS_BLOCK_D
+    return (
+        int(dec.blocks.get("block_n", DEFAULT_STATS_BLOCK_N)),
+        int(dec.blocks.get("block_d", DEFAULT_STATS_BLOCK_D)),
+    )
+
+
+def stats_backend(
+    n: int, d: int, num_classes: int, *, cache: Optional[TuneCache] = None
+) -> str:
+    """Resolve ``backend="auto"`` for a statistics sweep: measured winner
+    at the bucket, else the crossover heuristic."""
+    dec = _resolve(cache).lookup("stats", n, d, num_classes)
+    if dec is not None:
+        return dec.winner
+    if not _on_tpu():
+        return "jnp"  # interpret-mode Pallas never beats compiled XLA
+    flops = 2.0 * n * d * (d + num_classes)
+    return "fused" if flops >= STATS_CROSSOVER_FLOPS else "jnp"
+
+
+def gnb_blocks(
+    n: int, d: int, num_classes: int, *, cache: Optional[TuneCache] = None
+) -> Tuple[int, int, int]:
+    """(block_n, block_c, block_k) for the GNB scoring kernel."""
+    dec = _resolve(cache).lookup("gnb", n, d, num_classes)
+    if dec is None:
+        return DEFAULT_GNB_BLOCK_N, DEFAULT_GNB_BLOCK_C, DEFAULT_GNB_BLOCK_K
+    return (
+        int(dec.blocks.get("block_n", DEFAULT_GNB_BLOCK_N)),
+        int(dec.blocks.get("block_c", DEFAULT_GNB_BLOCK_C)),
+        int(dec.blocks.get("block_k", DEFAULT_GNB_BLOCK_K)),
+    )
+
+
+def gnb_backend(
+    n: int, d: int, num_classes: int, *, cache: Optional[TuneCache] = None
+) -> str:
+    """Resolve ``backend="auto"`` for GNB scoring.
+
+    Untuned non-TPU hosts stay on the fused kernel — the serving tests
+    pin bit-exactness against exactly that path, and only a MEASURED
+    jnp win (a cache entry) may flip it.  On TPU the heuristic routes
+    sub-block batches to the jnp matmul (the kernel would pad a 32-row
+    request up to a full 256×512×128 block of wasted MXU work).
+    """
+    dec = _resolve(cache).lookup("gnb", n, d, num_classes)
+    if dec is not None:
+        return dec.winner
+    if not _on_tpu():
+        return "fused"
+    flops = 2.0 * n * d * num_classes
+    return "fused" if flops >= GNB_CROSSOVER_FLOPS else "jnp"
+
+
+def serve_row_multiple(
+    feature_dim: int,
+    num_classes: Optional[int] = None,
+    *,
+    cache: Optional[TuneCache] = None,
+) -> int:
+    """The serve batcher's pad-to multiple, coupled to the tuned head.
+
+    Fused winner → its tuned ``block_n`` (a smaller tuned block at low
+    occupancy is a direct pad-waste win); jnp winner → the lane-aligned
+    :data:`JNP_ROW_MULTIPLE`; untuned → the kernel default, exactly
+    today's behaviour.
+    """
+    dec = _resolve(cache).lookup("gnb", None, feature_dim, num_classes)
+    if dec is None:
+        return DEFAULT_GNB_BLOCK_N
+    if dec.winner == "jnp":
+        return JNP_ROW_MULTIPLE
+    return int(dec.blocks.get("block_n", DEFAULT_GNB_BLOCK_N))
+
+
+# -- candidate grids --------------------------------------------------------
+
+
+def stats_candidates(n: int, d: int, *, smoke: bool = False) -> List[Tuple[int, int]]:
+    """Bounded (block_n, block_d) grid for the stats kernels.
+
+    Respects the TPU minimum tile (8, 128): block_d stays a lane
+    multiple, block_n a sublane multiple.  block_d never exceeds the
+    padded feature dim (padding d twice over buys nothing), block_n is
+    capped so a candidate never pads the row count more than the
+    default would.
+    """
+    if smoke:
+        grid = [(128, 128), (256, 128)]
+    else:
+        d_cap = max(128, bucket(d))
+        n_cap = max(128, min(2048, bucket(n)))
+        grid = [
+            (bn, bd)
+            for bn in (128, 256, 512, 1024, 2048)
+            if bn <= n_cap
+            for bd in (128, 256)
+            if bd <= d_cap
+        ]
+    default = (DEFAULT_STATS_BLOCK_N, DEFAULT_STATS_BLOCK_D)
+    if default not in grid:
+        grid.append(default)
+    return grid
+
+
+def gnb_candidates(
+    n: int, d: int, *, smoke: bool = False
+) -> List[Tuple[int, int, int]]:
+    """Bounded (block_n, block_c, block_k) grid for the scoring kernel."""
+    if smoke:
+        grid = [(64, 128, 128), (128, 128, 128)]
+    else:
+        k_cap = max(128, bucket(d))
+        n_cap = max(64, min(1024, bucket(n)))
+        grid = [
+            (bn, 128, bk)
+            for bn in (64, 128, 256, 512, 1024)
+            if bn <= n_cap
+            for bk in (128, 256, 512)
+            if bk <= k_cap
+        ]
+    default = (DEFAULT_GNB_BLOCK_N, DEFAULT_GNB_BLOCK_C, DEFAULT_GNB_BLOCK_K)
+    if default not in grid:
+        grid.append(default)
+    return grid
+
+
+# -- timing + tuners --------------------------------------------------------
+
+
+def _time_best_ms(fn, iters: int) -> float:
+    """min-of-iters wall ms (one warm/compile call first).
+
+    Minimum, not mean: scheduling noise only ever ADDS time, so the min
+    is the stable estimator — a crossover decided by mean-of-3 flips
+    between runs near the boundary.
+    """
+    import jax
+
+    run = lambda: jax.block_until_ready(fn())  # noqa: E731
+    run()  # compile + warm
+    best = math.inf
+    for _ in range(max(1, iters)):
+        _, dt = timed(run)
+        best = min(best, dt)
+    return best * 1e3
+
+
+def tune_stats(
+    n: int,
+    d: int,
+    num_classes: int,
+    *,
+    cache: Optional[TuneCache] = None,
+    candidates: Optional[Sequence[Tuple[int, int]]] = None,
+    iters: int = 3,
+    seed: int = 0,
+    interpret: Optional[bool] = None,
+    record: bool = True,
+) -> Decision:
+    """Tune the one-shot fused stats sweep at (n, d, C) vs its jnp twin.
+
+    The jnp reference is timed through ``StatsPipeline(backend="jnp")``
+    — the exact code ``backend="auto"`` would run on a jnp verdict,
+    eager overheads included — so the recorded winner is a
+    pipeline-level truth, not a kernel-microbenchmark one.
+    """
+    import jax
+
+    from repro.core.stats_pipeline import StatsPipeline
+    from repro.kernels import client_stats
+
+    cache = _resolve(cache)
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    f = jax.random.normal(k1, (n, d))
+    y = jax.random.randint(k2, (n,), 0, num_classes)
+
+    jnp_pipe = StatsPipeline(num_classes, backend="jnp")
+    t_jnp = _time_best_ms(lambda: jnp_pipe.from_arrays(f, y), iters)
+
+    def fused_at(bn: int, bd: int):
+        return lambda: client_stats(
+            f, y, num_classes, block_n=bn, block_d=bd, interpret=interpret
+        )
+
+    grid = list(candidates or stats_candidates(n, d))
+    t_default = None
+    best_ms, best_blocks = math.inf, grid[0]
+    for bn, bd in grid:
+        t = _time_best_ms(fused_at(bn, bd), iters)
+        if (bn, bd) == (DEFAULT_STATS_BLOCK_N, DEFAULT_STATS_BLOCK_D):
+            t_default = t
+        if t < best_ms:
+            best_ms, best_blocks = t, (bn, bd)
+    if t_default is None:
+        t_default = _time_best_ms(
+            fused_at(DEFAULT_STATS_BLOCK_N, DEFAULT_STATS_BLOCK_D), iters
+        )
+
+    decision = Decision(
+        kernel="stats", n=n, d=d, c=num_classes,
+        winner="jnp" if t_jnp <= best_ms else "fused",
+        blocks={"block_n": best_blocks[0], "block_d": best_blocks[1]},
+        jnp_ms=t_jnp, fused_ms=best_ms, default_ms=t_default,
+    )
+    if record:
+        cache.record(decision)
+    return decision
+
+
+def tune_stats_acc(
+    n: int,
+    d: int,
+    num_classes: int,
+    *,
+    cache: Optional[TuneCache] = None,
+    candidates: Optional[Sequence[Tuple[int, int]]] = None,
+    iters: int = 3,
+    seed: int = 0,
+    interpret: Optional[bool] = None,
+    record: bool = True,
+) -> Decision:
+    """Tune ONE streaming carry-fold step at batch shape (n, d, C).
+
+    Each timed call re-inits the carry (the TPU fold donates its carry
+    buffers, so a reused carry would be a use-after-donate) — the zeros
+    alloc is identical across candidates, so the ranking is fair.
+    """
+    import jax
+
+    from repro.core import stats_pipeline
+    from repro.core.statistics import FeatureStats
+    from repro.kernels import client_stats_acc, stats_carry_init
+
+    cache = _resolve(cache)
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    f = jax.random.normal(k1, (n, d))
+    y = jax.random.randint(k2, (n,), 0, num_classes)
+
+    fold_jnp = stats_pipeline.AUDITED_JITS["stats_pipeline.fold_jnp"]
+    zero = FeatureStats.zeros(num_classes, d)
+    t_jnp = _time_best_ms(lambda: fold_jnp(zero, f, y, num_classes), iters)
+
+    def acc_at(bn: int, bd: int):
+        def run():
+            m, nn = stats_carry_init(num_classes, d, block_d=bd)
+            return client_stats_acc(
+                m, nn, f, y, block_n=bn, block_d=bd, interpret=interpret
+            )
+
+        return run
+
+    grid = list(candidates or stats_candidates(n, d))
+    t_default = None
+    best_ms, best_blocks = math.inf, grid[0]
+    for bn, bd in grid:
+        t = _time_best_ms(acc_at(bn, bd), iters)
+        if (bn, bd) == (DEFAULT_STATS_BLOCK_N, DEFAULT_STATS_BLOCK_D):
+            t_default = t
+        if t < best_ms:
+            best_ms, best_blocks = t, (bn, bd)
+    if t_default is None:
+        t_default = _time_best_ms(
+            acc_at(DEFAULT_STATS_BLOCK_N, DEFAULT_STATS_BLOCK_D), iters
+        )
+
+    decision = Decision(
+        kernel="stats_acc", n=n, d=d, c=num_classes,
+        winner="jnp" if t_jnp <= best_ms else "fused",
+        blocks={"block_n": best_blocks[0], "block_d": best_blocks[1]},
+        jnp_ms=t_jnp, fused_ms=best_ms, default_ms=t_default,
+    )
+    if record:
+        cache.record(decision)
+    return decision
+
+
+def tune_gnb(
+    n: int,
+    d: int,
+    num_classes: int,
+    *,
+    cache: Optional[TuneCache] = None,
+    candidates: Optional[Sequence[Tuple[int, int, int]]] = None,
+    iters: int = 3,
+    seed: int = 0,
+    interpret: Optional[bool] = None,
+    record: bool = True,
+) -> Decision:
+    """Tune the GNB scoring kernel at (n, d, C) vs the jnp matmul."""
+    import jax
+
+    from repro.kernels import gnb_logits
+    from repro.kernels.ops import gnb_logits_jnp
+
+    cache = _resolve(cache)
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    f = jax.random.normal(k1, (n, d))
+    w = jax.random.normal(k2, (num_classes, d))
+    b = jax.random.normal(k3, (num_classes,))
+
+    t_jnp = _time_best_ms(lambda: gnb_logits_jnp(f, w, b), iters)
+
+    def fused_at(bn: int, bc: int, bk: int):
+        return lambda: gnb_logits(
+            f, w, b, block_n=bn, block_c=bc, block_k=bk, interpret=interpret
+        )
+
+    grid = list(candidates or gnb_candidates(n, d))
+    default = (DEFAULT_GNB_BLOCK_N, DEFAULT_GNB_BLOCK_C, DEFAULT_GNB_BLOCK_K)
+    t_default = None
+    best_ms, best_blocks = math.inf, grid[0]
+    for blocks in grid:
+        t = _time_best_ms(fused_at(*blocks), iters)
+        if blocks == default:
+            t_default = t
+        if t < best_ms:
+            best_ms, best_blocks = t, blocks
+    if t_default is None:
+        t_default = _time_best_ms(fused_at(*default), iters)
+
+    decision = Decision(
+        kernel="gnb", n=n, d=d, c=num_classes,
+        winner="jnp" if t_jnp <= best_ms else "fused",
+        blocks={
+            "block_n": best_blocks[0],
+            "block_c": best_blocks[1],
+            "block_k": best_blocks[2],
+        },
+        jnp_ms=t_jnp, fused_ms=best_ms, default_ms=t_default,
+    )
+    if record:
+        cache.record(decision)
+    return decision
+
+
+def tune_all(
+    shapes: Sequence[Tuple[int, int, int]],
+    *,
+    cache: TuneCache,
+    smoke: bool = False,
+    iters: int = 3,
+    seed: int = 0,
+) -> List[Decision]:
+    """Run all three tuners over a shape list, recording into ``cache``."""
+    out: List[Decision] = []
+    for n, d, c in shapes:
+        out.append(tune_stats(
+            n, d, c, cache=cache, iters=iters, seed=seed,
+            candidates=stats_candidates(n, d, smoke=smoke),
+        ))
+        out.append(tune_stats_acc(
+            n, d, c, cache=cache, iters=iters, seed=seed,
+            candidates=stats_candidates(n, d, smoke=smoke),
+        ))
+        out.append(tune_gnb(
+            n, d, c, cache=cache, iters=iters, seed=seed,
+            candidates=gnb_candidates(n, d, smoke=smoke),
+        ))
+    return out

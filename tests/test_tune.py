@@ -1,0 +1,262 @@
+"""repro.tune: cache round-trip, miss-path defaults, dispatch equivalence.
+
+The load-bearing contracts:
+
+- ``backend="auto"`` is a DISPATCHER, not a third numeric path — its
+  output must be bitwise identical to whichever concrete backend it
+  selects, at every shape (property test straddling the cache's bucket
+  boundaries).
+- A corrupt, absent, or foreign cache file degrades to the empty cache:
+  every accessor answers with today's compiled-in defaults, never an
+  error — an untuned deployment is exactly the pre-tuning deployment.
+- The serve batcher's pad-to multiple comes from the same cache verdict
+  that picks the scoring backend, so tuning can't desync padding from
+  the kernel's block expectations.
+"""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
+
+from repro import tune
+from repro.core.stats_pipeline import StatsPipeline
+from repro.kernels import gnb_logits
+from repro.kernels.ops import gnb_logits_jnp
+from repro.serve.batcher import DynamicBatcher
+from repro.serve.scoring import score_features
+
+
+def _decision(kernel="gnb", n=512, d=512, c=100, winner="jnp", **blocks):
+    defaults = {
+        "gnb": {"block_n": 128, "block_c": 128, "block_k": 512},
+        "stats": {"block_n": 256, "block_d": 128},
+        "stats_acc": {"block_n": 256, "block_d": 128},
+    }[kernel]
+    defaults.update(blocks)
+    return tune.Decision(kernel=kernel, n=n, d=d, c=c, winner=winner,
+                         blocks=defaults)
+
+
+# -- bucketing + cache mechanics --------------------------------------------
+
+
+def test_bucket_powers_of_two():
+    assert [tune.bucket(x) for x in (1, 2, 3, 17, 48, 512, 513)] == [
+        1, 2, 4, 32, 64, 512, 1024,
+    ]
+
+
+def test_record_validates_kernel_and_winner():
+    cache = tune.TuneCache()
+    with pytest.raises(ValueError):
+        cache.record(_decision(kernel="stats").__class__(
+            kernel="nope", n=1, d=1, c=1, winner="jnp", blocks={}))
+    with pytest.raises(ValueError):
+        cache.record(tune.Decision(kernel="gnb", n=1, d=1, c=1,
+                                   winner="fastest", blocks={}))
+
+
+def test_cache_roundtrip_preserves_decisions(tmp_path):
+    cache = tune.TuneCache()
+    cache.record(_decision(kernel="gnb", winner="jnp"))
+    cache.record(_decision(kernel="stats", n=4096, winner="fused"))
+    path = str(tmp_path / "tune.json")
+    cache.save(path)
+    reloaded = tune.TuneCache.load(path)
+    assert len(reloaded) == len(cache) == 2
+    assert sorted(map(repr, reloaded.decisions())) == sorted(
+        map(repr, cache.decisions())
+    )
+    # the reloaded cache drives every dispatch decision identically
+    assert tune.stats_backend(4096, 512, 100, cache=reloaded) == \
+        tune.stats_backend(4096, 512, 100, cache=cache) == "fused"
+    assert tune.gnb_blocks(512, 512, 100, cache=reloaded) == \
+        tune.gnb_blocks(512, 512, 100, cache=cache) == (128, 128, 512)
+    assert tune.serve_row_multiple(512, 100, cache=reloaded) == \
+        tune.serve_row_multiple(512, 100, cache=cache)
+
+
+@pytest.mark.parametrize("payload", [
+    "not json at all {",
+    json.dumps({"version": 999, "entries": {}}),          # foreign version
+    json.dumps({"version": 1, "entries": {"k": {"bad": 1}}}),  # bad schema
+    json.dumps([1, 2, 3]),                                 # wrong shape
+])
+def test_corrupt_cache_degrades_to_defaults(tmp_path, payload):
+    path = tmp_path / "tune.json"
+    path.write_text(payload)
+    cache = tune.TuneCache.load(str(path))
+    assert len(cache) == 0
+    assert tune.stats_blocks(4096, 512, 100, cache=cache) == (
+        tune.DEFAULT_STATS_BLOCK_N, tune.DEFAULT_STATS_BLOCK_D,
+    )
+    assert tune.serve_row_multiple(512, 100, cache=cache) == \
+        tune.DEFAULT_GNB_BLOCK_N
+
+
+def test_absent_cache_degrades_to_defaults(tmp_path):
+    cache = tune.TuneCache.load(str(tmp_path / "never_written.json"))
+    assert len(cache) == 0
+    assert tune.gnb_blocks(64, 64, 10, cache=cache) == (
+        tune.DEFAULT_GNB_BLOCK_N, tune.DEFAULT_GNB_BLOCK_C,
+        tune.DEFAULT_GNB_BLOCK_K,
+    )
+
+
+def test_lookup_nearest_n_falls_back_within_d_c_bucket():
+    cache = tune.TuneCache()
+    cache.record(_decision(kernel="stats", n=4096, d=512, c=100,
+                           winner="fused"))
+    # other n, same d/C family → the 4096 verdict informs it
+    assert cache.lookup("stats", 512, 512, 100).winner == "fused"
+    # n unknown entirely (batcher construction time) → largest-n entry
+    assert cache.lookup("stats", None, 512, 100).winner == "fused"
+    # different d bucket → genuine miss
+    assert cache.lookup("stats", 4096, 64, 100) is None
+
+
+def test_using_cache_scopes_and_restores():
+    cache = tune.TuneCache()
+    cache.record(_decision(kernel="gnb", winner="jnp"))
+    assert tune.serve_row_multiple(512, 100) == tune.DEFAULT_GNB_BLOCK_N
+    with tune.using_cache(cache):
+        assert tune.serve_row_multiple(512, 100) == tune.JNP_ROW_MULTIPLE
+        with tune.using_cache(tune.TuneCache()):
+            assert tune.serve_row_multiple(512, 100) == \
+                tune.DEFAULT_GNB_BLOCK_N
+        assert tune.serve_row_multiple(512, 100) == tune.JNP_ROW_MULTIPLE
+    assert tune.serve_row_multiple(512, 100) == tune.DEFAULT_GNB_BLOCK_N
+
+
+# -- heuristics (the untuned miss path, on this CPU host) -------------------
+
+
+def test_cpu_heuristics_without_cache():
+    # interpret-mode Pallas never beats compiled XLA → stats goes jnp…
+    assert tune.stats_backend(65536, 512, 100, cache=tune.TuneCache()) == "jnp"
+    # …but GNB stays fused: the serve tests pin bit-exactness against
+    # the kernel path, and only a MEASURED jnp win may flip it
+    assert tune.gnb_backend(48, 17, 7, cache=tune.TuneCache()) == "fused"
+
+
+# -- batcher coupling -------------------------------------------------------
+
+
+def test_batcher_row_multiple_follows_tuned_verdict():
+    d, c = 512, 100
+    fused = tune.TuneCache()
+    fused.record(_decision(kernel="gnb", d=d, c=c, winner="fused",
+                           block_n=128))
+    jnp_win = tune.TuneCache()
+    jnp_win.record(_decision(kernel="gnb", d=d, c=c, winner="jnp"))
+    with tune.using_cache(fused):
+        assert DynamicBatcher(d, num_classes=c).row_multiple == 128
+    with tune.using_cache(jnp_win):
+        assert DynamicBatcher(d, num_classes=c).row_multiple == \
+            tune.JNP_ROW_MULTIPLE
+    with tune.using_cache(tune.TuneCache()):
+        assert DynamicBatcher(d, num_classes=c).row_multiple == \
+            tune.DEFAULT_GNB_BLOCK_N
+    # explicit override always wins over the cache
+    with tune.using_cache(fused):
+        assert DynamicBatcher(d, num_classes=c,
+                              row_multiple=32).row_multiple == 32
+
+
+# -- auto dispatch ≡ selected concrete backend ------------------------------
+
+
+def _crossover_cache(d, c):
+    """jnp wins the small-n bucket, fused the large one — auto must
+    straddle the boundary."""
+    cache = tune.TuneCache()
+    cache.record(_decision(kernel="stats", n=64, d=d, c=c, winner="jnp"))
+    cache.record(_decision(kernel="stats", n=256, d=d, c=c, winner="fused",
+                           block_n=128))
+    return cache
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(min_value=4, max_value=320))
+def test_auto_stats_bitwise_matches_selected_backend(n):
+    d, c = 24, 5
+    cache = _crossover_cache(d, c)
+    rng = np.random.default_rng(n)
+    f = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, c, n), jnp.int32)
+    with tune.using_cache(cache):
+        verdict = tune.stats_backend(n, d, c)
+        assert verdict in ("jnp", "fused")
+        auto = StatsPipeline(c, backend="auto").from_arrays(f, y)
+        concrete = StatsPipeline(c, backend=verdict).from_arrays(f, y)
+    np.testing.assert_array_equal(np.asarray(auto.A), np.asarray(concrete.A))
+    np.testing.assert_array_equal(np.asarray(auto.B), np.asarray(concrete.B))
+    np.testing.assert_array_equal(np.asarray(auto.N), np.asarray(concrete.N))
+
+
+def test_auto_stats_resolves_before_use_kernel():
+    pipe = StatsPipeline(3)  # default backend is now auto
+    assert pipe.backend == "auto"
+    with pytest.raises(RuntimeError):
+        pipe.use_kernel  # unresolved auto must never reach a kernel choice
+
+
+def test_auto_scoring_bitwise_matches_selected_backend():
+    d, c, n = 24, 5, 48
+    rng = np.random.default_rng(0)
+    f = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((c, d)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(c), jnp.float32)
+    for winner, reference in (
+        ("jnp", gnb_logits_jnp(f, w, b)),
+        ("fused", gnb_logits(f, w, b, interpret=True)),
+    ):
+        cache = tune.TuneCache()
+        cache.record(_decision(kernel="gnb", n=n, d=d, c=c, winner=winner))
+        with tune.using_cache(cache):
+            auto = score_features(f, w, b, interpret=True, backend="auto")
+        np.testing.assert_array_equal(np.asarray(auto), np.asarray(reference))
+
+
+def test_scoring_rejects_unknown_backend():
+    f = jnp.zeros((4, 8))
+    w = jnp.zeros((3, 8))
+    b = jnp.zeros((3,))
+    with pytest.raises(ValueError):
+        score_features(f, w, b, interpret=True, backend="pallas")
+
+
+# -- the tuner itself (tiny smoke: grid → decision → cache) -----------------
+
+
+def test_tune_stats_smoke_records_decision():
+    cache = tune.TuneCache()
+    dec = tune.tune_stats(64, 16, 4, cache=cache, iters=1, interpret=True,
+                          candidates=[(128, 128)])
+    assert dec.winner in ("jnp", "fused")
+    assert dec.blocks == {"block_n": 128, "block_d": 128}
+    assert dec.jnp_ms > 0 and dec.fused_ms > 0 and dec.default_ms > 0
+    assert cache.lookup("stats", 64, 16, 4) is dec
+
+
+def test_tune_gnb_smoke_records_decision():
+    cache = tune.TuneCache()
+    dec = tune.tune_gnb(64, 16, 4, cache=cache, iters=1, interpret=True,
+                        candidates=[(64, 128, 128)])
+    assert dec.kernel == "gnb"
+    assert dec.blocks["block_n"] == 64
+    assert cache.lookup("gnb", 64, 16, 4) is dec
+
+
+def test_tune_stats_acc_smoke_records_decision():
+    cache = tune.TuneCache()
+    dec = tune.tune_stats_acc(64, 16, 4, cache=cache, iters=1,
+                              interpret=True, candidates=[(128, 128)])
+    assert dec.kernel == "stats_acc"
+    assert tune.stats_acc_blocks(4, 16, rows=64, cache=cache) == (128, 128)
