@@ -1,26 +1,33 @@
-"""Serving benchmark: open-loop Poisson traffic against the GNBServer.
+"""Serving benchmark: traffic curves against the bucketed serving tier.
 
-Synthetic clients fire ragged scoring requests at the dynamic-batching
-server (``repro.serve``) with exponential inter-arrival gaps — OPEN
-loop, arrivals don't wait for completions, which is what exposes the
-batcher's latency/throughput trade-off: at low rates ticks fire on the
-``max_delay_s`` clock with near-empty batches (latency ≈ the delay
-bound, pad waste high), at high rates batches fill to
-``max_batch_rows`` and throughput climbs while queueing delay takes
-over.  Each rate emits p50/p95/p99 latency, achieved throughput,
-batch occupancy, pad waste, and the rejected-request count
-(backpressure) — the curve lands in ``serve_bench.json`` next to the
-kernel numbers (CI uploads both).
+Three workloads, one JSON artifact (CI uploads it):
 
-The kernel traces for the padded shapes are warmed before traffic
-starts, so the curve measures the steady-state serving loop rather
-than jit compiles.
+- **poisson**: open-loop Poisson traffic against a single
+  ``GNBServer`` — arrivals don't wait for completions, which exposes
+  the batcher's latency/throughput trade-off (low rates tick on the
+  ``max_delay_s`` clock, high rates fill batches);
+- **burst**: the mixed-size efficiency point — a back-to-back ragged
+  mix spanning several pow2 shape buckets.  This is the pad-waste /
+  occupancy headline for shape-bucketed batching: requests coalesce
+  toward full batches and pad only to their bucket target, where the
+  old pad-to-one-shape batcher burned >70% of its kernel rows on
+  zeros at the same mix;
+- **shed curve**: offered load swept across decades of rows/s through
+  a multi-worker :class:`~repro.serve.front.ServeFront` with tight
+  queue bounds — past saturation the tier degrades into a measured
+  shed ratio with bounded p99, not unbounded queueing delay.
+
+Kernel traces for every padded shape normal traffic can produce
+(``batcher.pad_targets()``) are warmed before measuring, so the curves
+see the steady-state loop rather than jit compiles.  Pass
+``--tune-cache`` to dispatch through a measured autotune cache (CI
+feeds it the tune smoke's artifact); untuned runs use the built-in
+heuristics.
 
 Standalone:  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
 
-``--smoke`` (what CI runs on every push) is one low rate with a
-handful of requests — a regression tripwire for the subsystem plus the
-JSON emission, not a measurement.
+``--smoke`` (what CI runs on every push) shrinks every workload to a
+regression tripwire plus the JSON emission, not a measurement.
 """
 
 from __future__ import annotations
@@ -34,28 +41,59 @@ import numpy as np
 from benchmarks.common import Reporter
 from repro.core.classifier import LinearHead
 from repro.launch.serve_gnb import standin_head
-from repro.serve import GNBServer, QueueFull
-from repro.serve.batcher import pad_rows_to
+from repro.serve import GNBServer, QueueFull, ServeFront
+
+_CURVE_METRICS = (
+    "latency_p50_ms", "latency_p95_ms", "latency_p99_ms",
+    "throughput_rps", "throughput_rows_s",
+    "batch_occupancy", "pad_waste_frac", "batches",
+)
 
 
 def _warm_traces(server: GNBServer, head: LinearHead) -> None:
-    """Compile EVERY padded-shape trace the traffic can hit.
+    """Compile every padded-shape trace normal traffic can hit.
 
-    Batches pad to multiples of ``row_multiple`` up to ``max_batch_rows``
-    (requests here are far smaller than a batch, so no oversized
-    batches occur); warming each multiple keeps first-hit jit compiles
-    out of the measured latencies.
+    The bucketed batcher's pad shapes are enumerable up front
+    (``pad_targets()`` — O(log max_rows) of them), so first-hit jit
+    compiles stay out of the measured latencies.
     """
     from repro.serve.scoring import score_features
 
-    mult = server.batcher.row_multiple
-    for r in range(mult, server.batcher.max_batch_rows + 1, mult):
-        f = np.zeros((r, server.batcher.feature_dim), np.float32)
+    for rows in server.batcher.pad_targets():
+        f = np.zeros((rows, server.batcher.feature_dim), np.float32)
         np.asarray(score_features(
-            pad_rows_to(f, mult), head.W, head.b,
+            f, head.W, head.b,
             mesh=server.mesh, client_axes=server.client_axes,
             interpret=server.interpret,
         ))
+
+
+def _ragged_sizes(rng, n_requests: int, mean_rows: int) -> np.ndarray:
+    """A bucket-spanning ragged mix: geometric spread around the mean,
+    clipped to [1, 4*mean] — tiny probes next to near-batch requests."""
+    raw = rng.lognormal(np.log(mean_rows), 0.9, n_requests)
+    return np.clip(raw, 1, 4 * mean_rows).astype(int)
+
+
+def _paced_submit(submit, requests, gaps) -> int:
+    """Open-loop pacing; returns the rejected/shed request count.
+
+    Sub-millisecond gaps are accumulated instead of slept — at offered
+    loads past ~10^5 rows/s the scheduler can't honour them and the
+    sleep overhead itself would throttle the offered rate.
+    """
+    rejected = 0
+    owed = 0.0
+    for req, gap in zip(requests, gaps):
+        owed += gap
+        if owed >= 1e-3:
+            time.sleep(owed)
+            owed = 0.0
+        try:
+            submit(req)
+        except QueueFull:
+            rejected += 1
+    return rejected
 
 
 def drive_rate(
@@ -66,16 +104,22 @@ def drive_rate(
     feature_dim: int,
     classes: int,
     seed: int,
+    burst: bool = False,
     max_batch_rows: int = 1024,
     max_delay_s: float = 2e-3,
     max_queue_rows: int = 16384,
     timeout_s: float = 120.0,
 ) -> dict:
-    """One point of the curve: Poisson arrivals at ``rate_rps``."""
+    """One single-server point: Poisson arrivals (or a burst) of a
+    bucket-spanning ragged mix."""
     rng = np.random.default_rng(seed)
     head = standin_head(classes, feature_dim, seed)
-    sizes = np.clip(rng.poisson(mean_rows, n_requests), 1, None).astype(int)
-    gaps = rng.exponential(1.0 / rate_rps, n_requests)
+    sizes = _ragged_sizes(rng, n_requests, mean_rows)
+    gaps = (
+        np.zeros(n_requests)
+        if burst
+        else rng.exponential(1.0 / rate_rps, n_requests)
+    )
     requests = [
         rng.standard_normal((n, feature_dim)).astype(np.float32) for n in sizes
     ]
@@ -86,32 +130,82 @@ def drive_rate(
         max_queue_rows=max_queue_rows,
     )
     _warm_traces(server, head)
-    rejected = 0
+    futures = []
     with server:
-        futures = []
-        for req, gap in zip(requests, gaps):
-            time.sleep(gap)
-            try:
-                futures.append(server.submit(req))
-            except QueueFull:
-                rejected += 1
+        rejected = _paced_submit(
+            lambda r: futures.append(server.submit(r)), requests, gaps
+        )
         for f in futures:
             f.result(timeout=timeout_s)
         server.drain()
         snap = server.metrics.snapshot()
     return {
-        "offered_rate_rps": rate_rps,
+        "workload": "burst" if burst else "poisson",
+        "offered_rate_rps": None if burst else rate_rps,
         "requests": n_requests,
         "mean_rows": mean_rows,
+        "offered_rows": int(sizes.sum()),
         "rejected": rejected,
-        **{
-            k: snap[k]
-            for k in (
-                "latency_p50_ms", "latency_p95_ms", "latency_p99_ms",
-                "throughput_rps", "throughput_rows_s",
-                "batch_occupancy", "pad_waste_frac", "batches",
-            )
-        },
+        **{k: snap[k] for k in _CURVE_METRICS},
+    }
+
+
+def drive_shed_point(
+    offered_rows_s: float,
+    n_requests: int,
+    *,
+    mean_rows: int,
+    feature_dim: int,
+    classes: int,
+    seed: int,
+    workers: int = 2,
+    max_batch_rows: int = 1024,
+    max_delay_s: float = 2e-3,
+    max_queue_rows: int = 2048,
+    timeout_s: float = 120.0,
+) -> dict:
+    """One front point: offered load in rows/s against N workers with
+    TIGHT queue bounds, so saturation surfaces as shed ratio + p99."""
+    rng = np.random.default_rng(seed)
+    head = standin_head(classes, feature_dim, seed)
+    sizes = _ragged_sizes(rng, n_requests, mean_rows)
+    rate_rps = offered_rows_s / mean_rows
+    gaps = rng.exponential(1.0 / rate_rps, n_requests)
+    requests = [
+        rng.standard_normal((n, feature_dim)).astype(np.float32) for n in sizes
+    ]
+    front = ServeFront.create(
+        workers,
+        head=head,
+        max_batch_rows=max_batch_rows,
+        max_delay_s=max_delay_s,
+        max_queue_rows=max_queue_rows,
+    )
+    _warm_traces(front.workers[0], head)
+    futures = []
+    with front:
+        _paced_submit(
+            lambda r: futures.append(front.submit(r)), requests, gaps
+        )
+        for f in futures:
+            f.result(timeout=timeout_s)
+        front.drain(timeout=timeout_s)
+        snap = front.snapshot()
+    agg = snap["aggregate"]
+    return {
+        "offered_rows_s": offered_rows_s,
+        "requests": n_requests,
+        "mean_rows": mean_rows,
+        "workers": workers,
+        "accepted": snap["front"]["accepted"],
+        "shed": snap["front"]["shed"],
+        "shed_ratio": snap["front"]["shed_ratio"],
+        "latency_p99_ms": agg["latency_p99_ms"],
+        "throughput_rows_s": sum(
+            w["throughput_rows_s"] for w in snap["workers"]
+            if w["throughput_rows_s"] == w["throughput_rows_s"]
+        ),
+        "pad_waste_frac": agg["pad_waste_frac"],
     }
 
 
@@ -122,29 +216,63 @@ def run(
     seed: int = 0,
     json_path: str | None = "serve_bench.json",
     smoke: bool = False,
+    tune_cache: str | None = None,
 ) -> None:
+    if tune_cache:
+        from repro import tune
+
+        tune.set_cache(tune.TuneCache.load(tune_cache))
     feature_dim, classes, mean_rows = 64, 10, 64
     if smoke:
-        points = [(100.0, 24)]
+        poisson_points = [(100.0, 24)]
+        burst_requests = 150
+        shed_points = [(1e4, 60), (1e5, 90), (1e6, 120)]
     elif quick:
-        points = [(100.0, 64), (400.0, 64)]
+        poisson_points = [(100.0, 64), (400.0, 64)]
+        burst_requests = 250
+        shed_points = [(1e4, 120), (1e5, 180), (1e6, 240)]
     else:
-        points = [(50.0, 128), (200.0, 128), (800.0, 256)]
+        poisson_points = [(50.0, 128), (200.0, 128), (800.0, 256)]
+        burst_requests = 600
+        shed_points = [(1e4, 200), (3e4, 200), (1e5, 300), (3e5, 300),
+                       (1e6, 400)]
     results = []
-    for rate, n_requests in points:
+    for rate, n_requests in poisson_points:
         row = drive_rate(
             rate, n_requests,
             mean_rows=mean_rows, feature_dim=feature_dim, classes=classes,
             seed=seed,
         )
         results.append(row)
-        tag = f"rate{rate:g}|req{n_requests}|rows{mean_rows}"
-        for metric in (
-            "latency_p50_ms", "latency_p95_ms", "latency_p99_ms",
-            "throughput_rps", "batch_occupancy", "pad_waste_frac",
-        ):
+        tag = f"poisson|rate{rate:g}|req{n_requests}"
+        for metric in _CURVE_METRICS[:7]:
             reporter.add("serve", tag, metric, row[metric])
         reporter.add("serve", tag, "rejected", row["rejected"])
+
+    # the mixed-size efficiency headline for shape-bucketed batching
+    burst = drive_rate(
+        0.0, burst_requests,
+        mean_rows=mean_rows, feature_dim=feature_dim, classes=classes,
+        seed=seed, burst=True,
+    )
+    results.append(burst)
+    for metric in ("batch_occupancy", "pad_waste_frac", "throughput_rows_s",
+                   "latency_p99_ms"):
+        reporter.add("serve", f"burst|req{burst_requests}", metric,
+                     burst[metric])
+
+    shed_curve = []
+    for offered, n_requests in shed_points:
+        point = drive_shed_point(
+            offered, n_requests,
+            mean_rows=mean_rows, feature_dim=feature_dim, classes=classes,
+            seed=seed,
+        )
+        shed_curve.append(point)
+        tag = f"front|offered{offered:g}rows_s"
+        for metric in ("shed_ratio", "latency_p99_ms", "throughput_rows_s"):
+            reporter.add("serve", tag, metric, point[metric])
+
     if json_path:
         with open(json_path, "w") as fh:
             json.dump(
@@ -153,23 +281,29 @@ def run(
                         "feature_dim": feature_dim,
                         "classes": classes,
                         "mean_rows": mean_rows,
+                        "tune_cache": tune_cache,
                         "mode": "smoke" if smoke else ("quick" if quick else "full"),
                     },
                     "traffic": results,
+                    "shed_curve": shed_curve,
                 },
                 fh,
                 indent=2,
             )
-        print(f"# wrote {json_path} ({len(results)} rates)")
+        print(f"# wrote {json_path} "
+              f"({len(results)} traffic points, {len(shed_curve)} shed points)")
 
 
 if __name__ == "__main__":
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument(
         "--smoke", action="store_true",
-        help="one rate, few requests — CI's regression tripwire",
+        help="shrunken workloads — CI's regression tripwire",
     )
-    p.add_argument("--quick", action="store_true", help="reduced rate sweep")
+    p.add_argument("--quick", action="store_true", help="reduced sweep")
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--tune-cache", default=None,
+                   help="autotune cache JSON to dispatch through")
     args = p.parse_args()
-    run(Reporter(), quick=args.quick, seed=args.seed, smoke=args.smoke)
+    run(Reporter(), quick=args.quick, seed=args.seed, smoke=args.smoke,
+        tune_cache=args.tune_cache)

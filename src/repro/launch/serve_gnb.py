@@ -13,6 +13,12 @@ synthetic ragged traffic and prints the metrics snapshot.
 Example:
     PYTHONPATH=src python -m repro.launch.serve_gnb --requests 64
     fedcgs-serve --requests 64          # installed console script
+    fedcgs-serve --requests 64 --workers 4   # multi-worker ServeFront
+
+With ``--workers N > 1`` the same workload fans out across N
+``GNBServer`` workers behind a :class:`~repro.serve.front.ServeFront`
+(shared registry, join-shortest-queue routing); the socket-facing
+front with load shedding is the separate ``fedcgs-front`` script.
 """
 
 from __future__ import annotations
@@ -78,6 +84,8 @@ def main(argv=None) -> int:
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--max-batch-rows", type=int, default=1024)
     p.add_argument("--max-delay-ms", type=float, default=2.0)
+    p.add_argument("--workers", type=int, default=1,
+                   help="GNBServer workers (>1 fans out via ServeFront)")
     p.add_argument("--direct", action="store_true",
                    help="one-shot gnb_serve() call instead of the server loop")
     args = p.parse_args(argv)
@@ -106,23 +114,35 @@ def main(argv=None) -> int:
         for n in sizes
     ]
     total_rows = int(sum(sizes))
-    server = GNBServer(
-        head,
+    kwargs = dict(
         max_batch_rows=args.max_batch_rows,
         max_delay_s=args.max_delay_ms * 1e-3,
         # serve_requests submits the whole workload up front — the queue
         # bound must admit it all or the CLI would trip its own backpressure
         max_queue_rows=max(2 * total_rows, 64 * args.max_batch_rows),
     )
-    with server:
-        results, dt = timed(serve_requests, server, requests, 300.0)
-    snap = server.metrics.snapshot()
+    if args.workers > 1:
+        from repro.serve import ServeFront
+
+        front = ServeFront.create(args.workers, head=head, **kwargs)
+        with front:
+            results, dt = timed(serve_requests, front, requests, 300.0)
+        snap = front.snapshot()
+        p95 = max(w["latency_p95_ms"] for w in snap["workers"])
+        waste = snap["aggregate"]["pad_waste_frac"]
+    else:
+        server = GNBServer(head, **kwargs)
+        with server:
+            results, dt = timed(serve_requests, server, requests, 300.0)
+        snap = server.metrics.snapshot()
+        p95 = snap["latency_p95_ms"]
+        waste = snap["pad_waste_frac"]
     print(json.dumps(snap, indent=2))
     rows = sum(r.logits.shape[0] for r in results)
     print(
         f"served {len(results)} requests / {rows} rows in {dt*1e3:.1f} ms "
-        f"(p95 {snap['latency_p95_ms']:.2f} ms, "
-        f"pad waste {snap['pad_waste_frac']*100:.1f}%)"
+        f"across {args.workers} worker(s) "
+        f"(p95 {p95:.2f} ms, pad waste {waste*100:.1f}%)"
     )
     return 0
 

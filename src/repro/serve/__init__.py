@@ -3,40 +3,56 @@
 FedCGS produces a training-free linear head from ONE communication
 round of feature statistics; this package is the deployment half of
 that story (ROADMAP "GNB serving as a real endpoint"): a request
-queue with dynamic batching over the fused ``kernels.gnb_logits``
-Pallas kernel, a versioned head registry with atomic hot-swap fed by
-completed :class:`~repro.core.stats_pipeline.StatsPipeline` rounds,
-and a thread-driven run loop with latency/throughput/occupancy
-metrics and graceful drain.
+queue with shape-bucketed dynamic batching over the fused
+``kernels.gnb_logits`` Pallas kernel, a versioned head registry with
+atomic hot-swap fed by completed
+:class:`~repro.core.stats_pipeline.StatsPipeline` rounds, a
+thread-driven run loop with latency/throughput/occupancy metrics and
+graceful drain, and a multi-worker front with admission control,
+load shedding, and snapshot-driven registry replication.
 
 Layers (each importable on its own):
 
-- :mod:`repro.serve.scoring`  — stateless row scoring: block-padded
-  kernel call locally, pad-to-shards + ``shard_map`` on a mesh;
-- :mod:`repro.serve.metrics`  — latency percentiles, throughput,
-  batch-occupancy and pad-waste counters (plus the shared ``timed``
-  wall-clock helper the benchmarks reuse);
-- :mod:`repro.serve.batcher`  — the request queue + dynamic batcher
-  (admission by max-rows / max-delay, block-multiple padding so the
-  whole workload costs a handful of jit traces, backpressure);
-- :mod:`repro.serve.registry` — versioned ``LinearHead`` store with
-  atomic publish and the one-call "FL round → live head" ingest;
-- :mod:`repro.serve.server`   — ``GNBServer`` gluing them together.
+- :mod:`repro.serve.scoring`   — stateless row scoring: block-padded
+  kernel call locally, pad-to-shards + ``shard_map`` on a mesh, with
+  the jnp/fused backend resolved per per-shard shape;
+- :mod:`repro.serve.metrics`   — latency percentiles (true
+  nearest-rank), throughput, batch-occupancy and pad-waste counters
+  (plus the shared ``timed`` wall-clock helper the benchmarks reuse);
+- :mod:`repro.serve.batcher`   — per-shape-bucket request queues +
+  the continuous batcher (admission by max-rows / max-delay,
+  pad-to-bucket targets from ``repro.tune`` with cross-bucket top-up,
+  backpressure);
+- :mod:`repro.serve.registry`  — versioned ``LinearHead`` store with
+  atomic publish/restore and the one-call "FL round → live head"
+  ingest;
+- :mod:`repro.serve.server`    — ``GNBServer`` gluing them together;
+- :mod:`repro.serve.front`     — ``ServeFront``: N workers behind
+  join-shortest-queue routing, load shedding, and the asyncio
+  JSON-lines socket shim (``fedcgs-front``);
+- :mod:`repro.serve.replicate` — ``RegistryReplicator``: poll shared
+  :mod:`repro.checkpoint.store` snapshots and hot-swap replicas.
 """
 
 from repro.serve.batcher import DynamicBatcher, QueueFull, ServeResult
+from repro.serve.front import FrontMetrics, ServeFront
 from repro.serve.metrics import ServeMetrics, timed
 from repro.serve.registry import HeadRegistry
+from repro.serve.replicate import RegistryReplicator, publish_snapshot
 from repro.serve.scoring import score_features
 from repro.serve.server import GNBServer
 
 __all__ = [
     "DynamicBatcher",
+    "FrontMetrics",
     "GNBServer",
     "HeadRegistry",
     "QueueFull",
+    "RegistryReplicator",
+    "ServeFront",
     "ServeMetrics",
     "ServeResult",
+    "publish_snapshot",
     "score_features",
     "timed",
 ]

@@ -1,18 +1,28 @@
-"""Request queue + dynamic batcher for the GNB serving loop.
+"""Request queue + shape-bucketed dynamic batcher for the GNB serving loop.
 
-Requests are ragged (any row count ≥ 1); the batcher coalesces whatever
-is in flight each tick into one feature matrix, pads the row count up
-to the scoring path's row multiple — ``repro.tune.serve_row_multiple``:
-the tuned ``gnb_logits`` block, or a small lane-aligned quantum when
-the tuner picked the jnp matmul (the same zero-row pad
-discipline as ``stats_pipeline._pad_batch`` — padded rows are pure
-garbage lanes that get sliced off, they never reach a caller), scores
-the padded batch ONCE, and slices each request's rows back out.  Row
-counts are always one of ``row_multiple · k`` for small k, so the whole
-workload costs one jit trace per padded shape instead of one per ragged
-request size.
+Requests are ragged (any row count ≥ 1).  The batcher keeps one FIFO
+queue per power-of-two row bucket (``repro.tune.bucket``) and each tick
+coalesces ONE bucket's requests into a feature matrix padded to that
+batch's bucket target — ``repro.tune.serve_pad_target``: the pow2 row
+bucket covering the real rows, rounded up to the bucket backend's
+quantum (the tuned fused ``block_n``, or the sublane quantum on a jnp
+verdict).  Padded rows are pure garbage lanes that get sliced off; they
+never reach a caller.  Because targets are pow2 buckets, the whole
+traffic mix costs O(log max_rows) jit traces — and because a 5-row
+request no longer pads to one global block shape, pad waste collapses
+under mixed request sizes.
 
-Admission policy: a batch is formed as soon as the queue holds
+Two policies turn the buckets into batches:
+
+- **primary pick**: the bucket whose head request has waited longest
+  (global FIFO fairness — no bucket starves);
+- **top-up**: after the primary bucket is drained up to
+  ``max_batch_rows``, the gap between the real rows and the pad target
+  is filled with requests from OTHER buckets that fit — a padding lane
+  converted into a real row is a free occupancy win (same kernel shape,
+  same trace).
+
+Admission policy: a batch is formed as soon as the queues hold
 ``max_batch_rows`` rows OR the oldest request has waited
 ``max_delay_s`` — the classic dynamic-batching latency/throughput
 dial.  Backpressure: when the queued rows would exceed
@@ -20,7 +30,7 @@ dial.  Backpressure: when the queued rows would exceed
 letting the queue grow without bound.
 
 The batcher owns NO thread and NO kernel call — it is a pure data
-structure (lock-protected deque) the server's run loop drives via
+structure (lock-protected deques) the server's run loop drives via
 ``ready()`` / ``form_batch()`` / ``complete()``, which keeps every
 policy decision unit-testable without a running server.
 """
@@ -32,7 +42,7 @@ import dataclasses
 import threading
 import time
 from concurrent.futures import Future
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -72,8 +82,15 @@ def pad_rows_to(features: Array, multiple: int) -> Array:
     return np.pad(features, ((0, pad), (0, 0)))
 
 
+def _pad_to_rows(features: Array, target: int) -> Array:
+    """Zero-pad rows up to exactly ``target`` (no-op when already there)."""
+    if features.shape[0] >= target:
+        return features
+    return np.pad(features, ((0, target - features.shape[0]), (0, 0)))
+
+
 class DynamicBatcher:
-    """Coalesce ragged requests into block-padded kernel batches."""
+    """Coalesce ragged requests into bucket-padded kernel batches."""
 
     def __init__(
         self,
@@ -85,16 +102,16 @@ class DynamicBatcher:
         max_queue_rows: Optional[int] = None,
         row_multiple: Optional[int] = None,
     ):
-        # the pad-to multiple is COUPLED to the scoring dispatch: the
-        # tuned kernel's block_n (or the jnp quantum) via the one shared
-        # accessor, so tuning can't desync batcher padding from what the
-        # kernel pads to internally.  Explicit row_multiple= overrides.
+        # ``row_multiple`` is the ALIGNMENT every pad target must divide
+        # by (the mesh shard lcm when serving sharded) — the per-batch
+        # pad target itself comes from ``tune.serve_pad_target``, so the
+        # tuner's per-bucket verdicts pick each batch's padded shape.
         if row_multiple is None:
-            row_multiple = tune.serve_row_multiple(feature_dim, num_classes)
+            row_multiple = tune.SERVE_ROW_ALIGN
         if max_batch_rows is None:
-            max_batch_rows = 4 * row_multiple
+            max_batch_rows = 4 * tune.serve_row_multiple(feature_dim, num_classes)
         if max_queue_rows is None:
-            max_queue_rows = 64 * row_multiple
+            max_queue_rows = 16 * max_batch_rows
         if max_batch_rows < 1 or max_queue_rows < max_batch_rows:
             raise ValueError(
                 "need max_queue_rows >= max_batch_rows >= 1, got "
@@ -103,12 +120,13 @@ class DynamicBatcher:
         if row_multiple < 1:
             raise ValueError(f"row_multiple must be >= 1, got {row_multiple}")
         self.feature_dim = feature_dim
+        self.num_classes = num_classes
         self.max_batch_rows = max_batch_rows
         self.max_delay_s = max_delay_s
         self.max_queue_rows = max_queue_rows
         self.row_multiple = row_multiple
         self._lock = threading.Lock()
-        self._queue: collections.deque[_Pending] = collections.deque()
+        self._buckets: Dict[int, collections.deque[_Pending]] = {}
         self._queued_rows = 0
 
     # -- producer side ------------------------------------------------------
@@ -139,7 +157,11 @@ class DynamicBatcher:
                     f"queue holds {self._queued_rows} rows; "
                     f"+{pending.rows} exceeds the {self.max_queue_rows} bound"
                 )
-            self._queue.append(pending)
+            key = tune.bucket(pending.rows)
+            queue = self._buckets.get(key)
+            if queue is None:
+                queue = self._buckets[key] = collections.deque()
+            queue.append(pending)
             self._queued_rows += pending.rows
         return pending.future
 
@@ -153,45 +175,89 @@ class DynamicBatcher:
     @property
     def pending_requests(self) -> int:
         with self._lock:
-            return len(self._queue)
+            return sum(len(q) for q in self._buckets.values())
+
+    def queued_buckets(self) -> Dict[int, int]:
+        """bucket → queued request count (introspection/tests)."""
+        with self._lock:
+            return {k: len(q) for k, q in self._buckets.items() if q}
+
+    def pad_targets(self) -> List[int]:
+        """The distinct padded shapes normal traffic can produce — the
+        trace-warming set (oversized single requests may add more)."""
+        return tune.serve_pad_targets(
+            self.max_batch_rows, self.feature_dim, self.num_classes,
+            align=self.row_multiple,
+        )
 
     def ready(self, now: Optional[float] = None) -> bool:
         """Admission policy: enough rows, or the oldest waited too long."""
         now = time.perf_counter() if now is None else now
         with self._lock:
-            if not self._queue:
+            oldest = self._oldest_locked()
+            if oldest is None:
                 return False
             if self._queued_rows >= self.max_batch_rows:
                 return True
-            return (now - self._queue[0].enqueued_at) >= self.max_delay_s
+            return (now - oldest.enqueued_at) >= self.max_delay_s
+
+    def _oldest_locked(self) -> Optional[_Pending]:
+        oldest = None
+        for queue in self._buckets.values():
+            if queue and (oldest is None
+                          or queue[0].enqueued_at < oldest.enqueued_at):
+                oldest = queue[0]
+        return oldest
+
+    def _pad_target(self, rows: int) -> int:
+        return tune.serve_pad_target(
+            rows, self.feature_dim, self.num_classes, align=self.row_multiple
+        )
 
     def form_batch(self) -> Tuple[List[_Pending], Array, int]:
-        """Pop FIFO requests up to ``max_batch_rows`` and coalesce them.
+        """Pop one bucket's FIFO (plus top-ups) and coalesce them.
 
-        Returns ``(pendings, padded_features, real_rows)``; the padded
-        row count is the least ``row_multiple`` multiple covering the
-        real rows.  The first request is always admitted even if it
-        alone exceeds ``max_batch_rows``.
+        Returns ``(pendings, padded_features, real_rows)``.  The primary
+        bucket is the one whose head request is oldest; its queue drains
+        FIFO up to ``max_batch_rows`` (the first request is always
+        admitted even if it alone exceeds the bound), the pad target is
+        the batch's bucket shape, and the remaining padding lanes are
+        topped up with fitting requests from other buckets — real rows
+        in lanes the kernel would otherwise burn on zeros.
         """
         taken: List[_Pending] = []
         rows = 0
         with self._lock:
-            while self._queue:
-                nxt = self._queue[0]
+            oldest = self._oldest_locked()
+            if oldest is None:
+                return [], np.zeros((0, self.feature_dim), np.float32), 0
+            primary = self._buckets[tune.bucket(oldest.rows)]
+            while primary:
+                nxt = primary[0]
                 if taken and rows + nxt.rows > self.max_batch_rows:
                     break
-                self._queue.popleft()
+                primary.popleft()
                 self._queued_rows -= nxt.rows
                 taken.append(nxt)
                 rows += nxt.rows
-        if not taken:
-            return [], np.zeros((0, self.feature_dim), np.float32), 0
+            target = self._pad_target(rows)
+            # top-up: convert padding lanes into real rows, largest
+            # fitting requests first; per-bucket FIFO order is kept (only
+            # queue heads pop), so no request is overtaken within its
+            # own bucket
+            for key in sorted(self._buckets, reverse=True):
+                queue = self._buckets[key]
+                while queue and queue[0].rows <= target - rows:
+                    nxt = queue.popleft()
+                    self._queued_rows -= nxt.rows
+                    taken.append(nxt)
+                    rows += nxt.rows
         feats = (
             taken[0].features
             if len(taken) == 1
             else np.concatenate([p.features for p in taken], axis=0)
         )
-        return taken, pad_rows_to(feats, self.row_multiple), rows
+        return taken, _pad_to_rows(feats, target), rows
 
     def complete(
         self,
@@ -228,7 +294,7 @@ class DynamicBatcher:
     def drain_pending(self) -> List[_Pending]:
         """Pop EVERYTHING (shutdown without scoring — callers fail them)."""
         with self._lock:
-            taken = list(self._queue)
-            self._queue.clear()
+            taken = [p for q in self._buckets.values() for p in q]
+            self._buckets.clear()
             self._queued_rows = 0
         return taken

@@ -1,0 +1,351 @@
+"""serve.front — the multi-worker serving front (fan-out + load shed).
+
+One :class:`GNBServer` is a single worker thread; the production tier
+puts a front in front of N of them.  :class:`ServeFront` owns the
+routing and admission policy:
+
+- **routing** is join-shortest-queue by queued rows — the worker with
+  the least backlog gets the request, which keeps per-worker batchers
+  warm without any shared state beyond the queue-depth reads;
+- **admission control** is two-level: an optional front-wide
+  ``max_queued_rows`` bound (cheap reject before any worker is
+  touched), then the workers' own queue bounds.  A request no worker
+  can take is SHED — counted in the front metrics and surfaced to the
+  caller as :class:`~repro.serve.batcher.QueueFull`, so offered load
+  beyond capacity degrades into a measurable shed ratio instead of
+  unbounded latency;
+- **replication-ready**: workers usually share one
+  :class:`~repro.serve.registry.HeadRegistry` (``ServeFront.create``),
+  but each worker can equally own a replica registry driven off shared
+  snapshots by :mod:`repro.serve.replicate` — the front never touches
+  heads.
+
+The socket shim (:func:`serve_socket` / ``fedcgs-front``) is an asyncio
+front-end speaking newline-delimited JSON — ``{"features": [[...]]}``
+in, ``{"logits": ..., "predictions": ..., "head_version": ...}`` (or
+``{"error": "shed"}``) out.  The event loop only parses and routes;
+every kernel call stays on the worker threads, and the
+``concurrent.futures`` future from ``submit`` bridges back into the
+loop via ``asyncio.wrap_future``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import threading
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serve.batcher import QueueFull, ServeResult
+from repro.serve.server import GNBServer
+
+
+class FrontMetrics:
+    """Accepted/shed counters for the front (thread-safe)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._accepted = 0
+        self._shed = 0
+
+    def record_accepted(self) -> None:
+        with self._lock:
+            self._accepted += 1
+
+    def record_shed(self) -> None:
+        with self._lock:
+            self._shed += 1
+
+    def snapshot(self) -> Dict[str, float]:
+        with self._lock:
+            offered = self._accepted + self._shed
+            return {
+                "accepted": self._accepted,
+                "shed": self._shed,
+                "shed_ratio": (self._shed / offered) if offered else 0.0,
+            }
+
+
+class ServeFront:
+    """Fan ragged scoring requests across N :class:`GNBServer` workers."""
+
+    def __init__(
+        self,
+        workers: Sequence[GNBServer],
+        *,
+        max_queued_rows: Optional[int] = None,
+    ):
+        workers = list(workers)
+        if not workers:
+            raise ValueError("need at least one worker")
+        dims = {w.batcher.feature_dim for w in workers}
+        if len(dims) != 1:
+            raise ValueError(f"workers disagree on feature_dim: {sorted(dims)}")
+        self.workers = workers
+        self.max_queued_rows = max_queued_rows
+        self.metrics = FrontMetrics()
+
+    @classmethod
+    def create(
+        cls,
+        num_workers: int,
+        *,
+        registry=None,
+        head=None,
+        max_queued_rows: Optional[int] = None,
+        **server_kwargs,
+    ) -> "ServeFront":
+        """Build N workers sharing ONE registry (every worker hot-swaps
+        on the same publish) and wrap them in a front."""
+        from repro.serve.registry import HeadRegistry
+
+        if num_workers < 1:
+            raise ValueError(f"need num_workers >= 1, got {num_workers}")
+        if registry is None:
+            registry = HeadRegistry()
+        if head is not None:
+            registry.publish(head)
+        workers = [
+            GNBServer(registry=registry, **server_kwargs)
+            for _ in range(num_workers)
+        ]
+        return cls(workers, max_queued_rows=max_queued_rows)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> "ServeFront":
+        for w in self.workers:
+            w.start()
+        return self
+
+    def __enter__(self) -> "ServeFront":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.shutdown(drain=exc_type is None)
+
+    def shutdown(self, *, drain: bool = True,
+                 timeout: Optional[float] = None) -> None:
+        for w in self.workers:
+            w.shutdown(drain=drain, timeout=timeout)
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        for w in self.workers:
+            w.drain(timeout)
+
+    # -- request side -------------------------------------------------------
+
+    @property
+    def feature_dim(self) -> int:
+        return self.workers[0].batcher.feature_dim
+
+    @property
+    def queued_rows(self) -> int:
+        return sum(w.batcher.queued_rows for w in self.workers)
+
+    def submit(self, features) -> Future:
+        """Route to the least-loaded worker; shed when none can take it.
+
+        Sheds (front bound exceeded, or every worker at its queue
+        bound) raise :class:`QueueFull` after counting — callers see
+        the same backpressure signal a single worker gives.
+        """
+        f = np.asarray(features, dtype=np.float32)
+        if f.ndim != 2 or f.shape[1] != self.feature_dim:
+            raise ValueError(
+                f"expected (n, {self.feature_dim}) features, got {f.shape}"
+            )
+        if (
+            self.max_queued_rows is not None
+            and self.queued_rows + f.shape[0] > self.max_queued_rows
+        ):
+            self.metrics.record_shed()
+            raise QueueFull(
+                f"front holds {self.queued_rows} rows; +{f.shape[0]} "
+                f"exceeds the {self.max_queued_rows} bound (request shed)"
+            )
+        for worker in sorted(
+            self.workers, key=lambda w: w.batcher.queued_rows
+        ):
+            try:
+                fut = worker.submit(f)
+            except QueueFull:
+                continue
+            self.metrics.record_accepted()
+            return fut
+        self.metrics.record_shed()
+        raise QueueFull("every worker is at its queue bound (request shed)")
+
+    def score(self, features, timeout: Optional[float] = None) -> ServeResult:
+        """Synchronous convenience: submit + wait."""
+        return self.submit(features).result(timeout=timeout)
+
+    # -- metrics ------------------------------------------------------------
+
+    def snapshot(self) -> Dict[str, object]:
+        """Front counters + the aggregated worker view (JSON-ready)."""
+        per_worker = [w.metrics.snapshot() for w in self.workers]
+        agg: Dict[str, float] = {}
+        if per_worker:
+            for key in ("requests", "rows", "batches", "rejected",
+                        "head_swaps", "score_time_s"):
+                agg[key] = sum(s[key] for s in per_worker)
+            rows = sum(s["rows"] for s in per_worker)
+            padded = [
+                s["rows"] / (1.0 - s["pad_waste_frac"])
+                for s in per_worker
+                if s["rows"] and s["pad_waste_frac"] == s["pad_waste_frac"]
+            ]
+            agg["pad_waste_frac"] = (
+                1.0 - rows / sum(padded) if padded and sum(padded) else float("nan")
+            )
+            agg["latency_p99_ms"] = max(
+                (s["latency_p99_ms"] for s in per_worker), default=float("nan")
+            )
+        return {
+            "front": self.metrics.snapshot(),
+            "workers": per_worker,
+            "aggregate": agg,
+        }
+
+
+# -- asyncio socket shim -----------------------------------------------------
+
+
+async def _handle_client(
+    front: ServeFront,
+    reader: asyncio.StreamReader,
+    writer: asyncio.StreamWriter,
+) -> None:
+    try:
+        while True:
+            line = await reader.readline()
+            if not line:
+                break
+            try:
+                req = json.loads(line)
+                feats = np.asarray(req["features"], dtype=np.float32)
+                fut = front.submit(feats)
+                res = await asyncio.wrap_future(fut)
+                resp = {
+                    "logits": np.asarray(res.logits).tolist(),
+                    "predictions": np.asarray(res.predictions).tolist(),
+                    "head_version": res.head_version,
+                }
+            except QueueFull:
+                resp = {"error": "shed"}
+            except (KeyError, TypeError, ValueError,
+                    json.JSONDecodeError) as exc:
+                resp = {"error": f"bad request: {exc}"}
+            writer.write((json.dumps(resp) + "\n").encode())
+            await writer.drain()
+    finally:
+        writer.close()
+
+
+async def serve_socket(
+    front: ServeFront, host: str = "127.0.0.1", port: int = 0
+):
+    """Start the asyncio TCP front; returns the ``asyncio.Server``
+    (bind address via ``server.sockets[0].getsockname()``)."""
+
+    async def handler(reader, writer):
+        await _handle_client(front, reader, writer)
+
+    return await asyncio.start_server(handler, host, port)
+
+
+async def request_scores(
+    host: str, port: int, requests: Sequence[np.ndarray]
+) -> List[dict]:
+    """Minimal JSON-lines client (tests, the smoke path): send every
+    request over one connection, gather the decoded responses in order."""
+    reader, writer = await asyncio.open_connection(host, port)
+    out: List[dict] = []
+    try:
+        for req in requests:
+            msg = json.dumps({"features": np.asarray(req).tolist()}) + "\n"
+            writer.write(msg.encode())
+            await writer.drain()
+            out.append(json.loads(await reader.readline()))
+    finally:
+        writer.close()
+    return out
+
+
+# -- CLI ---------------------------------------------------------------------
+
+
+async def _smoke(args) -> int:
+    # deferred import: launch.serve_gnb itself imports repro.serve
+    from repro.launch.serve_gnb import standin_head
+
+    rng = np.random.default_rng(args.seed)
+    head = standin_head(args.classes, args.feature_dim, args.seed)
+    front = ServeFront.create(
+        args.workers,
+        head=head,
+        max_delay_s=args.max_delay_ms * 1e-3,
+        max_queued_rows=args.max_queued_rows,
+    )
+    sizes = np.clip(
+        rng.poisson(args.batch, args.requests), 1, None
+    ).astype(int)
+    reqs = [
+        rng.standard_normal((n, args.feature_dim)).astype(np.float32)
+        for n in sizes
+    ]
+    with front:
+        server = await serve_socket(front, args.host, args.port)
+        host, port = server.sockets[0].getsockname()[:2]
+        print(f"# fedcgs-front listening on {host}:{port} "
+              f"({args.workers} workers)")
+        responses = await request_scores(host, port, reqs)
+        server.close()
+        await server.wait_closed()
+        front.drain(timeout=120)
+        snap = front.snapshot()
+    served = [r for r in responses if "logits" in r]
+    shed = [r for r in responses if r.get("error") == "shed"]
+    for res, req in zip(responses, reqs):
+        if "logits" in res:
+            assert len(res["logits"]) == req.shape[0], "row count mismatch"
+    print(json.dumps(snap, indent=2))
+    print(
+        f"# served {len(served)}/{len(reqs)} requests over the socket "
+        f"({len(shed)} shed, shed_ratio "
+        f"{snap['front']['shed_ratio']:.3f})"
+    )
+    return 0 if served else 1
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--workers", type=int, default=2,
+                   help="number of GNBServer workers behind the front")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=0,
+                   help="TCP port (0 = ephemeral)")
+    p.add_argument("--requests", type=int, default=32,
+                   help="ragged requests the smoke path pushes through")
+    p.add_argument("--batch", type=int, default=48,
+                   help="mean rows per request (ragged around it)")
+    p.add_argument("--feature-dim", type=int, default=64)
+    p.add_argument("--classes", type=int, default=10)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--max-delay-ms", type=float, default=2.0)
+    p.add_argument("--max-queued-rows", type=int, default=None,
+                   help="front-wide admission bound (rows)")
+    p.add_argument("--smoke", action="store_true",
+                   help="spin workers + socket, push synthetic traffic, "
+                        "print the aggregated snapshot (what CI runs)")
+    args = p.parse_args(argv)
+    return asyncio.run(_smoke(args))
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

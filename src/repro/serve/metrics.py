@@ -15,6 +15,7 @@ function instead of hand-rolling ``time.time()`` pairs.
 from __future__ import annotations
 
 import collections
+import math
 import threading
 import time
 from typing import Dict, Optional
@@ -25,11 +26,19 @@ __all__ = ["ServeMetrics", "percentile", "timed"]
 
 
 def percentile(sorted_values, q: float) -> float:
-    """Nearest-rank percentile of an already-sorted sequence (q in [0, 1])."""
-    if not sorted_values:
+    """True nearest-rank percentile of an already-sorted sequence.
+
+    The 1-based rank is ``ceil(q·N)`` (clamped to [1, N]), q in [0, 1].
+    Not ``round()``: Python rounds half to even, so a rounded rank
+    understates every percentile whose exact rank lands on .5 — the
+    committed bench curves were reporting the sample *below* the true
+    nearest rank at exactly the window sizes the smoke run produces.
+    """
+    n = len(sorted_values)
+    if not n:
         return float("nan")
-    idx = min(len(sorted_values) - 1, max(0, round(q * (len(sorted_values) - 1))))
-    return float(sorted_values[idx])
+    rank = min(n, max(1, math.ceil(q * n)))
+    return float(sorted_values[rank - 1])
 
 
 class ServeMetrics:
@@ -37,7 +46,12 @@ class ServeMetrics:
 
     ``capacity_rows`` (the batcher's max-rows admission bound) turns the
     per-batch row counts into an occupancy fraction; without it the
-    snapshot reports mean rows per batch instead.
+    snapshot reports mean rows per batch instead.  A batch is accounted
+    at ``max(capacity_rows, padded_rows)`` capacity: an oversized single
+    request (admitted whole by the batcher's first-request rule) really
+    occupied its padded shape, not the nominal bound — dividing it by
+    ``capacity_rows`` alone reports occupancy > 1.0 and corrupts the
+    bench curves.
     """
 
     def __init__(self, *, capacity_rows: Optional[int] = None,
@@ -48,6 +62,7 @@ class ServeMetrics:
         self._requests = 0
         self._rows = 0
         self._padded_rows = 0
+        self._capacity_sum = 0
         self._batches = 0
         self._score_s = 0.0
         self._swaps = 0
@@ -65,6 +80,7 @@ class ServeMetrics:
             self._requests += requests
             self._rows += rows
             self._padded_rows += padded_rows
+            self._capacity_sum += max(self._capacity_rows or 0, padded_rows)
             self._score_s += score_s
             if self._first_t is None:
                 self._first_t = now - score_s
@@ -94,8 +110,8 @@ class ServeMetrics:
                 else float("nan")
             )
             occupancy = (
-                self._rows / (self._batches * self._capacity_rows)
-                if self._batches and self._capacity_rows
+                self._rows / self._capacity_sum
+                if self._capacity_rows and self._capacity_sum
                 else (self._rows / self._batches if self._batches else float("nan"))
             )
             return {

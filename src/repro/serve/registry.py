@@ -141,6 +141,11 @@ class HeadRegistry:
         published head).  Version numbering continues from the
         snapshot's counter, so publishes after a restore never reuse a
         persisted version number.
+
+        A restore that CHANGES the live version is a hot-swap exactly
+        like :meth:`publish` — subscribers fire with the new version, so
+        a replica restoring a newer FL round off shared storage records
+        its swap metric and wakes any watcher callback.
         """
         from repro.checkpoint import store
 
@@ -156,9 +161,14 @@ class HeadRegistry:
                     W=jnp.asarray(arr), b=jnp.asarray(flat[f"heads/{v}/b"])
                 )
         with self._lock:
+            prev_live = None if self._live is None else self._live[0]
             self._heads = heads
             self._live = None if live < 0 else (live, heads[live])
             self._next_version = max(next_version, (max(heads) + 1) if heads else 0)
+            subscribers = list(self._subscribers)
+        if live >= 0 and live != prev_live:
+            for cb in subscribers:
+                cb(live)
         return None if live < 0 else live
 
     def subscribe(self, callback: Callable[[int], None]) -> None:

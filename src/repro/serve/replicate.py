@@ -1,0 +1,132 @@
+"""serve.replicate — drive replica registries off shared head snapshots.
+
+The multi-worker front scales scoring on one host; replication scales
+it across hosts.  The write side stays exactly what it was — an FL
+round publishes into a :class:`~repro.serve.registry.HeadRegistry`,
+then :func:`publish_snapshot` persists the registry through
+:mod:`repro.checkpoint.store` (flat npz, atomic rename).  Each replica
+host runs a :class:`RegistryReplicator` against the same directory: a
+poll loop that watches ``store.latest_step`` and calls
+``HeadRegistry.restore()`` whenever a NEWER step lands.  Restore is an
+atomic all-state swap that fires the registry's subscribers on a live
+version change, so the replica's servers hot-swap mid-traffic exactly
+as if the publish had happened locally — same metrics, same
+per-batch version stamping.
+
+Polling (not inotify) is deliberate: the snapshot directory is
+typically network storage where file events don't propagate, and the
+store's atomic-rename discipline makes "newest ``step_*.npz``" a safe
+thing to poll.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+from repro.checkpoint import store
+from repro.serve.registry import HeadRegistry
+
+
+def publish_snapshot(
+    registry: HeadRegistry,
+    directory: str,
+    head=None,
+    *,
+    step: Optional[int] = None,
+) -> str:
+    """Publish ``head`` (optional) and snapshot the registry for replicas.
+
+    The one-call write side of replication: an FL round that just
+    refit a head publishes + persists in one step, and every
+    :class:`RegistryReplicator` watching ``directory`` picks it up on
+    its next poll.  Returns the snapshot path.
+    """
+    if head is not None:
+        registry.publish(head)
+    return registry.snapshot(directory, step=step)
+
+
+class RegistryReplicator:
+    """Poll a snapshot directory and restore newer steps into a replica.
+
+    ``sync_once()`` is the unit of work (poll → maybe restore); the
+    ``start()``/``stop()`` thread just repeats it on an interval.  Steps
+    are tracked monotonically — an already-applied or older snapshot is
+    never re-restored, so a replica under traffic only ever swaps
+    forward.
+    """
+
+    def __init__(
+        self,
+        registry: HeadRegistry,
+        directory: str,
+        *,
+        poll_interval_s: float = 0.05,
+    ):
+        self.registry = registry
+        self.directory = directory
+        self.poll_interval_s = poll_interval_s
+        self._lock = threading.Lock()
+        self._last_step: Optional[int] = None
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    @property
+    def last_step(self) -> Optional[int]:
+        """The snapshot step most recently restored (None before any)."""
+        with self._lock:
+            return self._last_step
+
+    def sync_once(self) -> Optional[int]:
+        """Restore the directory's latest snapshot if it is new.
+
+        Returns the restored live head version, or None when there was
+        nothing newer (or the new snapshot carries no live head).
+        """
+        step = store.latest_step(self.directory)
+        if step is None:
+            return None
+        with self._lock:
+            if self._last_step is not None and step <= self._last_step:
+                return None
+        version = self.registry.restore(self.directory, step=step)
+        with self._lock:
+            self._last_step = step
+        return version
+
+    # -- watch thread --------------------------------------------------------
+
+    def start(self) -> "RegistryReplicator":
+        if self._thread is not None:
+            raise RuntimeError("replicator already started")
+        self._stop.clear()
+        self._thread = threading.Thread(
+            target=self._run_loop, name="gnb-replicate", daemon=True
+        )
+        self._thread.start()
+        return self
+
+    def __enter__(self) -> "RegistryReplicator":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.stop()
+
+    def stop(self, timeout: Optional[float] = None) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout)
+            self._thread = None
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def _run_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                self.sync_once()
+            except FileNotFoundError:
+                pass  # directory not created yet — keep watching
+            self._stop.wait(self.poll_interval_s)

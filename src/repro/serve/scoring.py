@@ -35,6 +35,22 @@ AUDITED_JITS = {
 BACKENDS = ("auto", "jnp", "fused")
 
 
+def resolve_backend(backend: str, rows: int, d: int, num_classes: int) -> str:
+    """Resolve ``backend="auto"`` at the shape the kernel will actually
+    see.  ``rows`` must be the PER-SHARD row count on a mesh — each
+    shard scores ``n/shards`` rows, which can land in a different pow2
+    bucket than the global batch, and the tuner's verdict only holds at
+    the bucket it was measured on.
+    """
+    if backend == "auto":
+        from repro import tune
+
+        backend = tune.gnb_backend(int(rows), int(d), int(num_classes))
+    if backend not in ("jnp", "fused"):
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    return backend
+
+
 def live_axes(mesh: Mesh, client_axes: Tuple[str, ...]) -> Tuple[str, ...]:
     return tuple(a for a in client_axes if a in mesh.axis_names)
 
@@ -80,14 +96,7 @@ def score_features(
         features = extractor.features(features)
     features = jnp.asarray(features)
     n = features.shape[0]
-    if backend == "auto":
-        from repro import tune
-
-        backend = tune.gnb_backend(
-            int(n), int(features.shape[1]), int(w.shape[0])
-        )
-    if backend not in ("jnp", "fused"):
-        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    d, c = int(features.shape[1]), int(w.shape[0])
 
     def _score(f_: Array, w_: Array, b_: Array) -> Array:
         if backend == "jnp":
@@ -95,15 +104,20 @@ def score_features(
         return gnb_logits(f_, w_, b_, interpret=interpret)
 
     if mesh is None:
+        backend = resolve_backend(backend, n, d, c)
         return _score(features, w, b)
 
     axes = live_axes(mesh, client_axes)
     if not axes:
+        backend = resolve_backend(backend, n, d, c)
         return _score(features, w, b)
     shards = num_shards(mesh, client_axes)
     pad = (-n) % shards
     if pad:
         features = jnp.pad(features, ((0, pad), (0, 0)))
+    # pad-to-shards FIRST, then resolve on the per-shard shape: the tune
+    # verdict must match the rows each shard's kernel call actually sees
+    backend = resolve_backend(backend, features.shape[0] // shards, d, c)
 
     def shard_fn(f_shard: Array, w_: Array, b_: Array) -> Array:
         return _score(f_shard, w_, b_)

@@ -63,34 +63,37 @@ class GNBServer:
         self.registry = registry
         _, live = registry.current()
         d = int(live.W.shape[1]) if feature_dim is None else feature_dim
+        classes = int(live.W.shape[0])
         self.mesh = mesh
         self.client_axes = client_axes
         self.interpret = interpret
-        # pad target: the TUNED scoring row multiple AND an even shard
-        # split — one number so the mesh path never re-pads what the
-        # batcher padded (same accessor the batcher itself defaults to)
-        multiple = tune.serve_row_multiple(d, int(live.W.shape[0]))
+        # pad alignment: every bucket target must divide the live shard
+        # count so the mesh path never re-pads what the batcher padded;
+        # batch capacity defaults still scale with the tuned row multiple
+        align = tune.SERVE_ROW_ALIGN
         if mesh is not None:
-            multiple = math.lcm(multiple, num_shards(mesh, client_axes))
+            align = math.lcm(align, num_shards(mesh, client_axes))
         if max_batch_rows is None:
-            max_batch_rows = 4 * multiple
+            max_batch_rows = 4 * tune.serve_row_multiple(d, classes)
         if max_queue_rows is None:
-            max_queue_rows = 64 * multiple
+            max_queue_rows = 16 * max_batch_rows
         self.batcher = DynamicBatcher(
             d,
+            num_classes=classes,
             max_batch_rows=max_batch_rows,
             max_delay_s=max_delay_s,
             max_queue_rows=max_queue_rows,
-            row_multiple=multiple,
+            row_multiple=align,
         )
         self.metrics = ServeMetrics(capacity_rows=max_batch_rows)
-        # count hot-swaps AFTER the initial head: every later publish is one
+        # count hot-swaps AFTER the initial head: every later publish
+        # (or replica restore) is one
         self.registry.subscribe(lambda _v: self.metrics.record_swap())
         self._poll_interval_s = poll_interval_s
         self._state_lock = threading.Lock()
         self._closed = False
         self._stop = threading.Event()
-        self._in_tick = False
+        self._tick_busy = threading.Event()
         self._thread: Optional[threading.Thread] = None
 
     # -- lifecycle ----------------------------------------------------------
@@ -115,9 +118,22 @@ class GNBServer:
         return self._thread is not None and self._thread.is_alive()
 
     def drain(self, timeout: Optional[float] = None) -> None:
-        """Block until everything queued has been scored (keeps serving)."""
+        """Block until everything queued has been scored (keeps serving).
+
+        Raises ``RuntimeError`` when work is queued but no worker is
+        alive to score it — a drain before ``start()`` (or after the
+        worker died) would otherwise spin forever on a non-empty queue.
+        """
         deadline = None if timeout is None else timeout + _now()
-        while self.batcher.pending_requests or self._in_tick:
+        while True:
+            busy = self._tick_busy.is_set()
+            if not self.batcher.pending_requests and not busy:
+                return
+            if not self.running:
+                raise RuntimeError(
+                    "drain() with work queued but no running worker — "
+                    "start() the server (or check it did not die)"
+                )
             if deadline is not None and _now() > deadline:
                 raise TimeoutError("drain timed out")
             _sleep(self._poll_interval_s)
@@ -175,11 +191,13 @@ class GNBServer:
             if self._stop.is_set():
                 return
             if self.batcher.ready():
-                self._in_tick = True
+                # the busy window is an Event (atomic set/clear/is_set),
+                # not a bare bool: drain() reads it from other threads
+                self._tick_busy.set()
                 try:
                     self._tick()
                 finally:
-                    self._in_tick = False
+                    self._tick_busy.clear()
             else:
                 _sleep(self._poll_interval_s)
 

@@ -19,8 +19,9 @@ makes every kernel call site shape-aware instead:
 - **Dispatch accessors**: ``StatsPipeline(backend="auto")`` asks
   :func:`stats_backend`, ``serve.scoring.score_features`` asks
   :func:`gnb_backend`, the kernel wrappers ask ``*_blocks``, and
-  ``serve.batcher`` derives its pad-to multiple from
-  :func:`serve_row_multiple` — one funnel, so tuned blocks can never
+  ``serve.batcher`` derives its per-batch pad-to-bucket targets from
+  :func:`serve_pad_target` (capacity defaults still come from
+  :func:`serve_row_multiple`) — one funnel, so tuned blocks can never
   desync a caller's padding from the kernel's expectations.  On a cache
   miss the backend accessors fall back to a static crossover heuristic
   calibrated from the ``kernel_bench.py`` crossover sweep (see
@@ -59,6 +60,11 @@ DEFAULT_GNB_BLOCK_K = classifier_kernel.BLOCK_K
 # A jnp-winner head needs no kernel block multiple; pad serving batches
 # to a lane-aligned quantum instead (8× less pad waste than BLOCK_N).
 JNP_ROW_MULTIPLE = 64
+
+# The smallest row-pad step the serve batcher takes (sublane quantum).
+# Bucketed batches pad to pow2 row buckets aligned to this, instead of
+# to one block shape — see :func:`serve_pad_target`.
+SERVE_ROW_ALIGN = 8
 
 KERNELS = ("stats", "stats_acc", "gnb")
 
@@ -350,6 +356,66 @@ def serve_row_multiple(
     if dec.winner == "jnp":
         return JNP_ROW_MULTIPLE
     return int(dec.blocks.get("block_n", DEFAULT_GNB_BLOCK_N))
+
+
+def serve_pad_target(
+    rows: int,
+    feature_dim: int,
+    num_classes: Optional[int] = None,
+    *,
+    align: int = 1,
+    cache: Optional[TuneCache] = None,
+) -> int:
+    """Padded row count for a serving batch of ``rows`` real rows.
+
+    The shape-bucketed batcher's pad-to-bucket rule: the row count
+    buckets to a power of two (so the whole traffic mix still costs
+    O(log max_rows) jit traces), then rounds up to the bucket's backend
+    quantum — the tuned ``block_n`` when the bucket's measured verdict
+    is the fused kernel (which pads to its block internally anyway, so
+    anything finer would just hide the waste), or the sublane
+    :data:`SERVE_ROW_ALIGN` when the verdict is the jnp matmul (which
+    needs no block at all).  ``align`` folds in caller alignment (the
+    mesh shard count) via lcm.  Untuned, every bucket resolves exactly
+    like :func:`gnb_backend`'s miss path, so behaviour without a cache
+    matches the pre-bucketing pad-to-block discipline.
+    """
+    rows = max(1, int(rows))
+    target = bucket(rows)
+    dec = _resolve(cache).lookup("gnb", target, feature_dim, num_classes)
+    if dec is not None:
+        winner = dec.winner
+        block_n = int(dec.blocks.get("block_n", DEFAULT_GNB_BLOCK_N))
+    else:
+        block_n = DEFAULT_GNB_BLOCK_N
+        if not _on_tpu():
+            winner = "fused"  # gnb_backend's untuned non-TPU pin
+        else:
+            flops = 2.0 * target * feature_dim * (num_classes or 1)
+            winner = "fused" if flops >= GNB_CROSSOVER_FLOPS else "jnp"
+    quantum = block_n if winner == "fused" else SERVE_ROW_ALIGN
+    quantum = math.lcm(int(quantum), max(1, int(align)))
+    return ((target + quantum - 1) // quantum) * quantum
+
+
+def serve_pad_targets(
+    max_rows: int,
+    feature_dim: int,
+    num_classes: Optional[int] = None,
+    *,
+    align: int = 1,
+    cache: Optional[TuneCache] = None,
+) -> List[int]:
+    """Every distinct padded shape batches of up to ``max_rows`` rows can
+    produce — the trace-warming set for a serving worker."""
+    targets = set()
+    r = 1
+    while r <= bucket(max(1, int(max_rows))):
+        targets.add(serve_pad_target(
+            r, feature_dim, num_classes, align=align, cache=cache
+        ))
+        r *= 2
+    return sorted(targets)
 
 
 # -- candidate grids --------------------------------------------------------

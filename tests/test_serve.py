@@ -114,6 +114,81 @@ def test_batcher_exactness_deterministic():
         )
 
 
+def test_batcher_pads_to_bucket_not_capacity():
+    """The tentpole behaviour: a small batch pads to ITS pow2 bucket
+    target, not to one global shape — a 5-row request in an otherwise
+    idle queue must not burn max_batch_rows-5 padding lanes."""
+    from repro import tune
+
+    d = 16
+    batcher = DynamicBatcher(d, max_batch_rows=1024, max_queue_rows=16384)
+    batcher.submit(np.zeros((5, d), np.float32))
+    pendings, padded, rows = batcher.form_batch()
+    assert rows == 5
+    assert padded.shape[0] == tune.serve_pad_target(5, d, None)
+    assert padded.shape[0] < 1024  # NOT pad-to-capacity
+    assert padded.shape[0] % batcher.row_multiple == 0
+    batcher.complete(pendings, np.zeros((rows, 3)), 0, batch_rows=rows)
+    # every normal-traffic pad shape is enumerable (the trace-warm set)
+    targets = batcher.pad_targets()
+    assert padded.shape[0] in targets
+    assert all(t % batcher.row_multiple == 0 for t in targets)
+    assert targets == sorted(set(targets))
+
+
+def test_batcher_buckets_by_request_size():
+    from repro import tune
+
+    d = 4
+    batcher = DynamicBatcher(d, max_batch_rows=64, max_queue_rows=4096,
+                             max_delay_s=60.0)
+    for n in (3, 4, 17, 30, 200):
+        batcher.submit(np.zeros((n, d), np.float32))
+    assert batcher.queued_buckets() == {
+        tune.bucket(3): 2,  # 3 and 4 share the pow2-4 bucket
+        tune.bucket(17): 2,  # 17 and 30 share the pow2-32 bucket
+        tune.bucket(200): 1,
+    }
+    batcher.drain_pending()
+    assert batcher.queued_buckets() == {}
+
+
+def test_batcher_top_up_fills_padding_lanes():
+    """Padding lanes of the primary batch are converted into real rows
+    from other buckets when they fit — occupancy for free."""
+    d = 8
+    head = _head(d, 3, 0)
+    batcher = DynamicBatcher(d, max_batch_rows=1024, max_queue_rows=16384)
+    target = batcher._pad_target(100)
+    assert target >= 128  # the top-up below must fit the padding gap
+    reqs = _requests([100, 5, 5], d, 0)
+    futures = [batcher.submit(r) for r in reqs]
+    pendings, padded, rows = batcher.form_batch()
+    # one batch took all three: the two 5-row requests rode the padding
+    assert rows == 110 and len(pendings) == 3
+    assert padded.shape[0] == target  # top-up never grows the target
+    assert batcher.pending_requests == 0
+    logits = _direct(head, padded)[:rows]
+    batcher.complete(pendings, logits, 0, batch_rows=rows)
+    for fut, req in zip(futures, reqs):  # exactness across the seams
+        np.testing.assert_array_equal(
+            fut.result(timeout=0).logits, _direct(head, req)
+        )
+
+
+def test_batcher_primary_bucket_is_oldest_head():
+    d = 4
+    batcher = DynamicBatcher(d, max_batch_rows=64, max_queue_rows=4096,
+                             max_delay_s=60.0)
+    first = batcher.submit(np.zeros((40, d), np.float32))  # pow2-64 bucket
+    batcher.submit(np.zeros((2, d), np.float32))  # pow2-2 bucket, younger
+    pendings, _, _ = batcher.form_batch()
+    # the 40-row request is oldest, so ITS bucket is primary (the 2-row
+    # request still rides along as top-up into the same batch)
+    assert pendings[0].future is first
+    batcher.drain_pending()
+
+
 def test_batcher_admission_policy():
     d = 4
     batcher = DynamicBatcher(
@@ -176,6 +251,31 @@ def test_server_drain_and_shutdown():
     with pytest.raises(RuntimeError):
         server.submit(np.zeros((1, d), np.float32))
     assert not server.running
+
+
+def test_server_drain_raises_without_running_worker():
+    """Regression: ``drain()`` with work queued but no worker alive used
+    to spin forever (the queue can only empty inside the worker tick).
+    Both the never-started and the already-stopped cases must raise."""
+    d, c = 8, 3
+    server = GNBServer(_head(d, c), max_delay_s=60.0)
+    server.submit(np.zeros((2, d), np.float32))
+    with pytest.raises(RuntimeError, match="no running worker"):
+        server.drain(timeout=5)
+
+    # an empty queue with no worker is fine — nothing to wait for
+    GNBServer(_head(d, c)).drain(timeout=5)
+
+    # dead-worker case: stop the thread, leave work queued
+    server2 = GNBServer(_head(d, c), max_delay_s=60.0, max_batch_rows=1 << 14)
+    server2.start()
+    server2._stop.set()
+    server2._thread.join(timeout=10)
+    assert not server2.running
+    server2.submit(np.zeros((2, d), np.float32))
+    with pytest.raises(RuntimeError, match="no running worker"):
+        server2.drain(timeout=5)
+    server2.shutdown(drain=False)
 
 
 def test_server_shutdown_without_drain_fails_pending():
@@ -258,6 +358,34 @@ def test_registry_snapshot_restore_round_trip(tmp_path):
 
     # step defaults to one past the latest snapshot in the directory
     assert reg.snapshot(str(tmp_path)).endswith("step_00000001.npz")
+
+
+def test_registry_restore_notifies_subscribers(tmp_path):
+    """Regression: ``restore()`` used to swap the live head WITHOUT
+    firing subscribers — a replica restoring a newer round off shared
+    storage silently skipped its swap metric (and any watcher hook)."""
+    d, c = 6, 3
+    source = HeadRegistry()
+    source.publish(_head(d, c, 0))
+    source.publish(_head(d, c, 1))
+    source.snapshot(str(tmp_path))
+
+    replica = HeadRegistry(_head(d, c, 9))
+    fired = []
+    replica.subscribe(fired.append)
+    assert replica.restore(str(tmp_path)) == 1
+    assert fired == [1]  # live version changed 0 -> 1: one notification
+
+    # idempotent restore: same live version again -> NO spurious swap
+    assert replica.restore(str(tmp_path)) == 1
+    assert fired == [1]
+
+    # the server-level consequence: a replica GNBServer counts the
+    # restore as a head swap exactly like a local publish
+    server = GNBServer(registry=HeadRegistry(_head(d, c, 9)))
+    assert server.metrics.snapshot()["head_swaps"] == 0
+    server.registry.restore(str(tmp_path))
+    assert server.metrics.snapshot()["head_swaps"] == 1
 
 
 def test_registry_snapshot_empty_and_missing(tmp_path):
@@ -401,10 +529,18 @@ def test_percentile_nearest_rank():
     assert percentile([], 0.5) != percentile([], 0.5)  # NaN
     assert percentile([1.0], 0.99) == 1.0
     vals = sorted(range(1, 101))
-    # zero-based nearest rank: round(0.5 * 99) = 50 -> the 51st value
-    assert percentile(vals, 0.5) == 51
+    # true nearest rank is ceil(q*N): p50 of 100 samples is the 50th
+    # value, not the 51st (the old round() impl overshot by one here)
+    assert percentile(vals, 0.5) == 50
+    assert percentile(vals, 0.95) == 95
     assert percentile(vals, 0.0) == 1
     assert percentile(vals, 1.0) == 100
+    # regression: round() banker's-rounds ranks landing on .5 — the old
+    # impl returned 3 for p50 of [1,2,3,4] (round(1.5)=2, zero-based)
+    assert percentile([1.0, 2.0, 3.0, 4.0], 0.5) == 2.0
+    # and q*N need not land on an integer: ceil, never floor
+    assert percentile([1.0, 2.0, 3.0], 0.5) == 2.0
+    assert percentile([1.0, 2.0, 3.0], 0.34) == 2.0
 
 
 def test_metrics_accounting():
@@ -419,6 +555,22 @@ def test_metrics_accounting():
     assert snap["pad_waste_frac"] == pytest.approx(0.5)
     assert snap["latency_p50_ms"] == pytest.approx(10.0)
     assert snap["latency_p99_ms"] == pytest.approx(20.0)
+
+
+def test_metrics_occupancy_capped_for_oversized_batches():
+    # regression: an oversized single request (admitted whole by the
+    # batcher's first-request rule) used to be divided by the nominal
+    # capacity, reporting occupancy > 1.0
+    m = ServeMetrics(capacity_rows=100)
+    m.record_batch(requests=1, rows=150, padded_rows=160, score_s=0.0)
+    snap = m.snapshot()
+    assert snap["batch_occupancy"] == pytest.approx(150 / 160)
+    assert snap["batch_occupancy"] <= 1.0
+    # mixed with a normal batch: each accounted at its own capacity
+    m.record_batch(requests=1, rows=50, padded_rows=64, score_s=0.0)
+    snap = m.snapshot()
+    assert snap["batch_occupancy"] == pytest.approx(200 / 260)
+    assert snap["batch_occupancy"] <= 1.0
 
 
 # ---------------------------------------------------------------------------
@@ -469,6 +621,66 @@ def test_serve_mesh_sharded_subprocess():
     assert "SERVE_MESH_OK" in proc.stdout, proc.stderr[-2000:]
 
 
+_SHARD_BACKEND_SUBPROCESS_BODY = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np, jax.numpy as jnp
+    from repro import tune
+    from repro.kernels import gnb_logits
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve.scoring import resolve_backend, score_features
+
+    mesh = make_host_mesh(2)  # (data=4, model=2): 4 row shards
+    d, c = 16, 5
+    # a cache where the GLOBAL batch bucket (512) and the PER-SHARD
+    # bucket (512/4 = 128) disagree on the winning backend
+    cache = tune.TuneCache()
+    cache.record(tune.Decision(kernel="gnb", n=512, d=d, c=c,
+                               winner="fused", blocks={"block_n": 128}))
+    cache.record(tune.Decision(kernel="gnb", n=128, d=d, c=c,
+                               winner="jnp", blocks={}))
+    tune.set_cache(cache)
+    assert resolve_backend("auto", 512, d, c) == "fused"
+    assert resolve_backend("auto", 128, d, c) == "jnp"
+
+    rng = np.random.default_rng(0)
+    feats = jnp.asarray(rng.standard_normal((512, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((c, d)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(c), jnp.float32)
+    # spy on the rows the dispatcher asks the tuner about (jit-cache
+    # counting can't see calls staged under shard_map tracing)
+    resolved = []
+    real_gnb_backend = tune.gnb_backend
+    def spy(n, d_, c_, **kw):
+        resolved.append(int(n))
+        return real_gnb_backend(n, d_, c_, **kw)
+    tune.gnb_backend = spy
+    out = score_features(feats, w, b, mesh=mesh, backend="auto")
+    # regression: auto used to resolve on the global 512-row batch
+    # (fused) even though each shard's kernel call sees 128 rows — the
+    # tuner's verdict only holds at the bucket it was measured on
+    assert resolved == [128], (
+        "mesh auto dispatch resolved on rows %r, not the 128-row shard"
+        % (resolved,)
+    )
+    want = np.asarray(gnb_logits(feats, w, b))
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5, atol=1e-4)
+    print("SHARD_BACKEND_OK")
+    """
+)
+
+
+def test_mesh_auto_backend_resolves_per_shard_subprocess():
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARD_BACKEND_SUBPROCESS_BODY],
+        capture_output=True, text=True, timeout=300,
+        env=subprocess_env(),
+        cwd="/root/repo",
+    )
+    assert "SHARD_BACKEND_OK" in proc.stdout, proc.stderr[-2000:]
+
+
 # ---------------------------------------------------------------------------
 # serve_bench smoke: the CI artifact is well-formed
 # ---------------------------------------------------------------------------
@@ -487,8 +699,21 @@ def test_serve_bench_smoke_emits_json(tmp_path):
 
     data = json.loads(out.read_text())
     assert data["config"]["mode"] == "smoke"
-    (row,) = data["traffic"]
+    poisson, burst = data["traffic"]
+    assert poisson["workload"] == "poisson"
     for key in ("latency_p50_ms", "latency_p95_ms", "latency_p99_ms",
                 "throughput_rps", "batch_occupancy", "pad_waste_frac"):
-        assert np.isfinite(row[key]), (key, row)
-    assert row["rejected"] == 0
+        assert np.isfinite(poisson[key]), (key, poisson)
+    assert poisson["rejected"] == 0
+    # the bucketed-batching acceptance: the mixed-size burst coalesces
+    # toward full batches instead of padding every request to one shape
+    assert burst["workload"] == "burst"
+    assert burst["pad_waste_frac"] < 0.15, burst
+    assert burst["batch_occupancy"] > 0.5, burst
+    # the front degrades into shedding with bounded p99, measurably
+    curve = data["shed_curve"]
+    assert [p["offered_rows_s"] for p in curve] == [1e4, 1e5, 1e6]
+    assert curve[-1]["shed_ratio"] > 0.0, curve[-1]
+    for p in curve:
+        assert 0.0 <= p["shed_ratio"] <= 1.0
+        assert np.isfinite(p["latency_p99_ms"]), p

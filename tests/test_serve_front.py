@@ -1,0 +1,363 @@
+"""repro.serve.front + repro.serve.replicate: the multi-worker tier.
+
+- fan-out exactness: ragged traffic through N workers behind the front
+  is bit-identical per request to direct ``score_features`` scoring
+  (hypothesis over ragged mixes crossing shape buckets, plus a
+  deterministic sweep);
+- routing: join-shortest-queue sends work to the least-loaded worker;
+- admission control + load shedding: the front-wide row bound and the
+  all-workers-full case both shed (QueueFull) and count into
+  ``FrontMetrics.shed_ratio`` instead of growing latency unboundedly;
+- the asyncio JSON-lines socket shim end-to-end on localhost,
+  including the ``{"error": "shed"}`` degraded response;
+- replication: publish → snapshot → replica ``sync_once`` restores an
+  identical ``(version, head)`` and fires hot-swap subscribers; steps
+  apply monotonically; the watch thread picks up new snapshots.
+"""
+
+import asyncio
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
+
+from repro.core.classifier import LinearHead
+from repro.kernels import gnb_logits
+from repro.serve import (
+    GNBServer,
+    HeadRegistry,
+    QueueFull,
+    RegistryReplicator,
+    ServeFront,
+    publish_snapshot,
+)
+from repro.serve.front import request_scores, serve_socket
+from repro.serve.scoring import score_features
+
+
+def _head(d, c, seed=0):
+    rng = np.random.default_rng(seed)
+    return LinearHead(
+        W=jnp.asarray(rng.standard_normal((c, d)), jnp.float32),
+        b=jnp.asarray(rng.standard_normal(c), jnp.float32),
+    )
+
+
+def _requests(sizes, d, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal((n, d)).astype(np.float32) for n in sizes]
+
+
+def _direct(head, feats):
+    return np.asarray(score_features(jnp.asarray(feats), head.W, head.b))
+
+
+# ---------------------------------------------------------------------------
+# fan-out exactness
+# ---------------------------------------------------------------------------
+
+
+def _assert_front_exact(sizes, d, c, seed, workers=3):
+    head = _head(d, c, seed)
+    reqs = _requests(sizes, d, seed)
+    front = ServeFront.create(workers, head=head, max_delay_s=5e-4)
+    with front:
+        futures = [front.submit(r) for r in reqs]
+        front.drain(timeout=120)
+    for fut, req in zip(futures, reqs):
+        res = fut.result(timeout=0)
+        np.testing.assert_array_equal(res.logits, _direct(head, req))
+    snap = front.snapshot()
+    assert snap["front"]["accepted"] == len(reqs)
+    assert snap["front"]["shed"] == 0
+    assert snap["aggregate"]["requests"] == len(reqs)
+    assert snap["aggregate"]["rows"] == sum(s for s in sizes)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    sizes=st.lists(st.integers(min_value=1, max_value=300), min_size=1,
+                   max_size=10),
+    seed=st.integers(min_value=0, max_value=4),
+)
+def test_front_exactness_ragged(sizes, seed):
+    """Ragged mixes spanning several pow2 buckets, fanned across
+    workers: per-request results are bit-identical to direct
+    ``score_features``."""
+    _assert_front_exact(sizes, d=8, c=5, seed=seed)
+
+
+def test_front_exactness_deterministic():
+    _assert_front_exact([1, 33, 7, 300, 2, 64, 129], d=16, c=7, seed=3)
+
+
+def test_front_single_worker_matches_server():
+    d, c = 8, 4
+    head = _head(d, c, 1)
+    reqs = _requests([5, 17, 40], d, 1)
+    with ServeFront.create(1, head=head, max_delay_s=5e-4) as front:
+        got = [front.score(r, timeout=120) for r in reqs]
+    with GNBServer(head, max_delay_s=5e-4) as server:
+        want = [server.score(r, timeout=120) for r in reqs]
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g.logits, w.logits)
+
+
+# ---------------------------------------------------------------------------
+# routing + shedding
+# ---------------------------------------------------------------------------
+
+
+def test_front_routes_to_least_loaded_worker():
+    d, c = 4, 3
+    # workers never tick (not started, huge delay): queues only fill
+    front = ServeFront.create(2, head=_head(d, c), max_delay_s=60.0,
+                              max_batch_rows=64, max_queue_rows=64)
+    front.submit(np.zeros((10, d), np.float32))
+    assert [w.batcher.queued_rows for w in front.workers] == [10, 0]
+    front.submit(np.zeros((4, d), np.float32))  # worker 1 is emptier
+    assert [w.batcher.queued_rows for w in front.workers] == [10, 4]
+    front.submit(np.zeros((2, d), np.float32))
+    assert [w.batcher.queued_rows for w in front.workers] == [10, 6]
+    for w in front.workers:
+        w.batcher.drain_pending()
+
+
+def test_front_sheds_when_all_workers_full():
+    d, c = 4, 3
+    front = ServeFront.create(2, head=_head(d, c), max_delay_s=60.0,
+                              max_batch_rows=16, max_queue_rows=16)
+    front.submit(np.zeros((16, d), np.float32))
+    front.submit(np.zeros((16, d), np.float32))  # fills the second worker
+    with pytest.raises(QueueFull, match="shed"):
+        front.submit(np.zeros((1, d), np.float32))
+    snap = front.metrics.snapshot()
+    assert snap == {"accepted": 2, "shed": 1, "shed_ratio": pytest.approx(1 / 3)}
+    for w in front.workers:
+        w.batcher.drain_pending()
+
+
+def test_front_wide_admission_bound():
+    d, c = 4, 3
+    front = ServeFront.create(2, head=_head(d, c), max_delay_s=60.0,
+                              max_batch_rows=64, max_queue_rows=64,
+                              max_queued_rows=20)
+    front.submit(np.zeros((12, d), np.float32))
+    with pytest.raises(QueueFull, match="shed"):
+        # workers have room (2×64) but the FRONT bound says no
+        front.submit(np.zeros((12, d), np.float32))
+    front.submit(np.zeros((8, d), np.float32))  # exactly at the bound
+    assert front.metrics.snapshot()["shed"] == 1
+    for w in front.workers:
+        w.batcher.drain_pending()
+
+
+def test_front_rejects_mismatched_workers():
+    reg = HeadRegistry(_head(4, 3))
+    reg2 = HeadRegistry(_head(8, 3))
+    with pytest.raises(ValueError, match="feature_dim"):
+        ServeFront([GNBServer(registry=reg), GNBServer(registry=reg2)])
+    with pytest.raises(ValueError):
+        ServeFront([])
+    with pytest.raises(ValueError):
+        ServeFront.create(0, head=_head(4, 3))
+
+
+def test_front_shared_registry_hot_swaps_every_worker():
+    d, c = 8, 4
+    head0 = _head(d, c, 0)
+    front = ServeFront.create(3, head=head0, max_delay_s=5e-4)
+    with front:
+        r0 = front.score(np.ones((5, d), np.float32), timeout=120)
+        head1 = _head(d, c, 1)
+        front.workers[0].registry.publish(head1)  # ONE registry: all see it
+        front.drain(timeout=120)
+        futs = [w.submit(np.ones((5, d), np.float32)) for w in front.workers]
+        results = [f.result(timeout=120) for f in futs]
+    assert r0.head_version == 0
+    assert [r.head_version for r in results] == [1, 1, 1]
+    assert all(w.metrics.snapshot()["head_swaps"] == 1 for w in front.workers)
+
+
+# ---------------------------------------------------------------------------
+# the asyncio socket shim
+# ---------------------------------------------------------------------------
+
+
+def test_socket_front_end_to_end():
+    d, c = 8, 5
+    head = _head(d, c, 2)
+    reqs = _requests([3, 50, 7, 129, 1], d, 2)
+
+    async def drive(front):
+        server = await serve_socket(front)
+        host, port = server.sockets[0].getsockname()[:2]
+        try:
+            return await request_scores(host, port, reqs)
+        finally:
+            server.close()
+            await server.wait_closed()
+
+    with ServeFront.create(2, head=head, max_delay_s=5e-4) as front:
+        responses = asyncio.run(drive(front))
+    assert len(responses) == len(reqs)
+    for resp, req in zip(responses, reqs):
+        assert resp["head_version"] == 0
+        np.testing.assert_array_equal(
+            np.asarray(resp["logits"], np.float32), _direct(head, req)
+        )
+        want_pred = np.argmax(_direct(head, req), axis=-1)
+        np.testing.assert_array_equal(np.asarray(resp["predictions"]),
+                                      want_pred)
+
+
+def test_socket_front_sheds_gracefully():
+    d, c = 4, 3
+    # an unstarted worker with a tiny queue, pre-filled out-of-band:
+    # every socket request must come back as a shed ERROR (a degraded
+    # response), never hang the connection
+    front = ServeFront.create(1, head=_head(d, c), max_delay_s=60.0,
+                              max_batch_rows=8, max_queue_rows=8)
+    front.submit(np.zeros((8, d), np.float32))  # fills the only queue
+    reqs = _requests([8, 4], d, 0)
+
+    async def drive():
+        server = await serve_socket(front)
+        host, port = server.sockets[0].getsockname()[:2]
+        try:
+            return await request_scores(host, port, reqs)
+        finally:
+            server.close()
+            await server.wait_closed()
+
+    responses = asyncio.run(drive())
+    assert [r.get("error") for r in responses] == ["shed", "shed"]
+    assert front.metrics.snapshot()["shed"] == 2
+    for w in front.workers:
+        w.batcher.drain_pending()
+
+
+def test_socket_front_reports_bad_requests():
+    front = ServeFront.create(1, head=_head(4, 3), max_delay_s=60.0)
+
+    async def drive():
+        server = await serve_socket(front)
+        host, port = server.sockets[0].getsockname()[:2]
+        try:
+            reader, writer = await asyncio.open_connection(host, port)
+            writer.write(b'{"no_features": 1}\n')
+            writer.write(b"not json\n")
+            await writer.drain()
+            import json as _json
+
+            out = [_json.loads(await reader.readline()) for _ in range(2)]
+            writer.close()
+            return out
+        finally:
+            server.close()
+            await server.wait_closed()
+
+    responses = asyncio.run(drive())
+    assert all(r["error"].startswith("bad request") for r in responses)
+
+
+# ---------------------------------------------------------------------------
+# replication off shared snapshots
+# ---------------------------------------------------------------------------
+
+
+def test_replication_round_trip(tmp_path):
+    """publish → snapshot → replica restore: the replica serves the
+    identical (version, head) and counts the restore as a hot swap."""
+    d, c = 8, 4
+    source = HeadRegistry(keep=8)
+    head = _head(d, c, 0)
+    path = publish_snapshot(source, str(tmp_path), head)
+    assert path.endswith("step_00000000.npz")
+
+    replica_reg = HeadRegistry(_head(d, c, 99))  # stale replica head
+    replicator = RegistryReplicator(replica_reg, str(tmp_path))
+    assert replicator.sync_once() == 0
+    assert replicator.last_step == 0
+
+    src_v, src_head = source.current()
+    rep_v, rep_head = replica_reg.current()
+    assert rep_v == src_v
+    np.testing.assert_array_equal(np.asarray(rep_head.W),
+                                  np.asarray(src_head.W))
+    np.testing.assert_array_equal(np.asarray(rep_head.b),
+                                  np.asarray(src_head.b))
+
+    # nothing new → no restore (monotonic steps, no churn under traffic)
+    assert replicator.sync_once() is None
+    assert replicator.last_step == 0
+
+    # a NEW round published on the source lands on the next poll and
+    # fires the replica's hot-swap subscribers
+    fired = []
+    replica_reg.subscribe(fired.append)
+    publish_snapshot(source, str(tmp_path), _head(d, c, 1))
+    assert replicator.sync_once() == 1
+    assert replicator.last_step == 1
+    assert fired == [1]
+    np.testing.assert_array_equal(
+        np.asarray(replica_reg.current()[1].W),
+        np.asarray(source.current()[1].W),
+    )
+
+
+def test_replication_empty_directory(tmp_path):
+    replica = HeadRegistry(_head(4, 2))
+    replicator = RegistryReplicator(replica, str(tmp_path / "empty"))
+    assert replicator.sync_once() is None  # nothing there yet: no-op
+    assert replica.latest_version == 0  # replica state untouched
+
+
+def test_replicated_serving_end_to_end(tmp_path):
+    """The full multi-host story on one box: an FL-side registry
+    publishes + snapshots; a replica server under a watch thread picks
+    the new head up and serves bit-identical logits under the same
+    version number."""
+    d, c = 8, 4
+    source = HeadRegistry(keep=8)
+    head0 = _head(d, c, 0)
+    publish_snapshot(source, str(tmp_path), head0)
+
+    replica_reg = HeadRegistry()
+    RegistryReplicator(replica_reg, str(tmp_path)).sync_once()  # seed it
+    server = GNBServer(registry=replica_reg, max_delay_s=5e-4)
+    replicator = RegistryReplicator(replica_reg, str(tmp_path),
+                                    poll_interval_s=5e-3)
+    req = _requests([13], d, 7)[0]
+    with server, replicator:
+        r0 = server.score(req, timeout=120)
+        publish_snapshot(source, str(tmp_path), _head(d, c, 1))
+        deadline = time.perf_counter() + 60
+        while replicator.last_step != 1:
+            assert time.perf_counter() < deadline, "replicator never synced"
+            time.sleep(2e-3)
+        server.drain(timeout=120)
+        r1 = server.score(req, timeout=120)
+    assert (r0.head_version, r1.head_version) == (0, 1)
+    np.testing.assert_array_equal(r0.logits, _direct(head0, req))
+    np.testing.assert_array_equal(
+        r1.logits, _direct(source.current()[1], req)
+    )
+    assert server.metrics.snapshot()["head_swaps"] == 1
+    assert not replicator.running
+
+
+def test_replicator_thread_lifecycle(tmp_path):
+    replicator = RegistryReplicator(HeadRegistry(_head(4, 2)),
+                                    str(tmp_path), poll_interval_s=1e-3)
+    assert not replicator.running
+    with replicator:
+        assert replicator.running
+        with pytest.raises(RuntimeError, match="already started"):
+            replicator.start()
+    assert not replicator.running

@@ -148,25 +148,47 @@ def test_cpu_heuristics_without_cache():
 # -- batcher coupling -------------------------------------------------------
 
 
-def test_batcher_row_multiple_follows_tuned_verdict():
+def test_serve_pad_target_follows_tuned_verdict():
+    """Per-batch pad targets couple to the tuner per BUCKET: the pow2
+    row bucket rounds up to the winning backend's quantum — the tuned
+    fused block_n, or the sublane alignment on a jnp verdict."""
     d, c = 512, 100
     fused = tune.TuneCache()
-    fused.record(_decision(kernel="gnb", d=d, c=c, winner="fused",
+    fused.record(_decision(kernel="gnb", n=512, d=d, c=c, winner="fused",
                            block_n=128))
     jnp_win = tune.TuneCache()
-    jnp_win.record(_decision(kernel="gnb", d=d, c=c, winner="jnp"))
+    jnp_win.record(_decision(kernel="gnb", n=512, d=d, c=c, winner="jnp"))
+    # fused verdict: bucket 512 rounds to the tuned 128-row blocks
+    assert tune.serve_pad_target(400, d, c, cache=fused) == 512
+    assert tune.serve_pad_target(513, d, c, cache=fused) == 1024
+    # jnp verdict: no kernel block constraint — just the row alignment
+    assert tune.serve_pad_target(400, d, c, cache=jnp_win) == 512
+    assert tune.serve_pad_target(390, d, c, align=100, cache=jnp_win) == 600
+    # untuned: the heuristic pin (fused on CPU) with the default block
+    assert tune.serve_pad_target(5, d, c, cache=tune.TuneCache()) == \
+        tune.DEFAULT_GNB_BLOCK_N
+    # caller alignment (mesh shards) always divides the target
+    assert tune.serve_pad_target(400, d, c, align=3, cache=fused) % 3 == 0
+
+
+def test_batcher_pad_targets_follow_tuned_verdict():
+    d, c = 512, 100
+    fused = tune.TuneCache()
+    fused.record(_decision(kernel="gnb", n=64, d=d, c=c, winner="fused",
+                           block_n=32))
     with tune.using_cache(fused):
-        assert DynamicBatcher(d, num_classes=c).row_multiple == 128
-    with tune.using_cache(jnp_win):
-        assert DynamicBatcher(d, num_classes=c).row_multiple == \
-            tune.JNP_ROW_MULTIPLE
-    with tune.using_cache(tune.TuneCache()):
-        assert DynamicBatcher(d, num_classes=c).row_multiple == \
-            tune.DEFAULT_GNB_BLOCK_N
-    # explicit override always wins over the cache
-    with tune.using_cache(fused):
-        assert DynamicBatcher(d, num_classes=c,
-                              row_multiple=32).row_multiple == 32
+        batcher = DynamicBatcher(d, num_classes=c, max_batch_rows=256,
+                                 max_queue_rows=4096)
+        # the tuned 32-row blocks shape the small buckets: 64-row bucket
+        # pads to 64 (2 blocks), not to the 256-row default block
+        assert 64 in batcher.pad_targets()
+        assert batcher._pad_target(40) == 64
+    # row_multiple is the pad ALIGNMENT now, not the pad target — an
+    # explicit value constrains every target without dictating it
+    batcher = DynamicBatcher(d, num_classes=c, row_multiple=24,
+                             max_batch_rows=256, max_queue_rows=4096)
+    assert batcher.row_multiple == 24
+    assert all(t % 24 == 0 for t in batcher.pad_targets())
 
 
 # -- auto dispatch ≡ selected concrete backend ------------------------------
