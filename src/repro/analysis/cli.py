@@ -2,8 +2,8 @@
 
     PYTHONPATH=src python -m repro.analysis --check
 
-Static rules (AST, no jax): lock discipline over ``repro/serve``, repo
-lint over ``src/`` and ``benchmarks/``.  Dynamic rules (traced): the
+Static rules (AST, no jax): lock discipline over ``repro/serve`` and
+``repro/obs``, repo lint over ``src/`` and ``benchmarks/``.  Dynamic rules (traced): the
 collective budgets, donation survival, host-callback/dtype screens and
 the retrace sentinel from ``repro.analysis.budgets`` — skipped with
 ``--static-only``.
@@ -84,6 +84,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     findings = []
     findings += lockcheck.check_tree(
         os.path.join(root, "src", "repro", "serve"), rel_to=root
+    )
+    findings += lockcheck.check_tree(
+        os.path.join(root, "src", "repro", "obs"), rel_to=root
     )
     findings += lint.check_paths(
         [os.path.join(root, "src"), os.path.join(root, "benchmarks")],

@@ -32,6 +32,16 @@ Each rule exists because its violation already bit us once:
   must come through the ``repro.tune`` accessors (``stats_blocks``,
   ``gnb_blocks``, ``serve_row_multiple``, …); ``repro/tune.py`` itself
   and the kernel layer are the sanctioned owners.
+- ``metric-funnel``: instrumentation in the serving tier funnels
+  through ``repro.obs`` — PR 9's serve layer grew a private counter
+  dict behind every component's own lock plus a 65536-entry latency
+  deque sorted on every snapshot, none of it scrapeable.  In
+  ``repro/serve/`` and ``repro/launch/`` the rule flags (a) bounded
+  sample windows (``deque(maxlen=...)`` — an ad-hoc metric instrument;
+  the registry histogram owns the bounded-window pattern) and (b)
+  direct construction of the obs instrument classes (``Counter(...)``
+  etc. imported from ``repro.obs``), which bypasses the registry's
+  get-or-create name table and its type/label checks.
 - ``extractor-protocol``: feature extraction outside ``fl/`` and
   ``models/`` must go through the Extractor protocol —
   ``extractor.features(x)`` / ``models.transformer.features()`` — so
@@ -61,6 +71,10 @@ EXTRACTOR_SCOPE = ("repro/launch/", "repro/serve/", "benchmarks/")
 # (same scope: the kernel layer and the tuner itself are the owners)
 BLOCK_SCOPE = EXTRACTOR_SCOPE
 _BLOCK_KWARGS = frozenset({"block_n", "block_d", "block_c", "block_k"})
+
+# components whose instrumentation must funnel through repro.obs
+METRIC_SCOPE = ("repro/serve/", "repro/launch/")
+_OBS_INSTRUMENTS = frozenset({"Counter", "Gauge", "Histogram"})
 
 # np.random attributes that are NOT the legacy global-state API
 _NP_RANDOM_OK = {"default_rng", "Generator", "SeedSequence", "BitGenerator",
@@ -102,12 +116,21 @@ def _in_extractor_scope(path: str) -> bool:
     return any(seg in p for seg in EXTRACTOR_SCOPE) or p.startswith("benchmarks/")
 
 
+def _in_metric_scope(path: str) -> bool:
+    p = path.replace(os.sep, "/")
+    return any(seg in p for seg in METRIC_SCOPE)
+
+
 class _LintVisitor(ast.NodeVisitor):
     def __init__(self, path: str):
         self.path = path
         self.findings: List[Finding] = []
         self._extractor_scope = _in_extractor_scope(path)
         self._block_scope = _in_extractor_scope(path)
+        self._metric_scope = _in_metric_scope(path)
+        # names the obs instrument classes were imported under (direct
+        # construction through one of these is a metric-funnel finding)
+        self._obs_instrument_aliases: set = set()
         # import aliases of repro.models.transformer (e.g. ``T``), and
         # bare names imported from it that are model entry points
         self._transformer_aliases: set = set()
@@ -153,6 +176,10 @@ class _LintVisitor(ast.NodeVisitor):
             for a in node.names:
                 if a.name == "forward":
                     self._transformer_fns.add(a.asname or "forward")
+        if mod == "repro.obs" or mod.startswith("repro.obs."):
+            for a in node.names:
+                if a.name in _OBS_INSTRUMENTS:
+                    self._obs_instrument_aliases.add(a.asname or a.name)
         if mod == "repro.kernels" or mod.startswith("repro.kernels."):
             for a in node.names:
                 if self._block_scope and a.name.startswith("BLOCK_"):
@@ -217,6 +244,8 @@ class _LintVisitor(ast.NodeVisitor):
                 )
         if self._extractor_scope:
             self._check_extractor_protocol(node, fn)
+        if self._metric_scope:
+            self._check_metric_funnel(node, fn)
         if self._block_scope:
             for kw in node.keywords:
                 if kw.arg in _BLOCK_KWARGS and isinstance(kw.value, ast.Constant):
@@ -262,6 +291,35 @@ class _LintVisitor(ast.NodeVisitor):
                 "extractor-protocol", node.lineno,
                 "direct Backbone.apply() in an FL consumer — call "
                 "extractor.features(x) (the Extractor protocol) instead",
+            )
+
+    # -- metric-funnel -------------------------------------------------------
+
+    def _check_metric_funnel(self, node: ast.Call, fn: ast.AST) -> None:
+        """Ad-hoc instrumentation in serve/launch outside repro.obs."""
+        fn_name = fn.attr if isinstance(fn, ast.Attribute) else (
+            fn.id if isinstance(fn, ast.Name) else None
+        )
+        if fn_name == "deque" and any(
+            kw.arg == "maxlen" for kw in node.keywords
+        ):
+            self._add(
+                "metric-funnel", node.lineno,
+                "bounded deque(maxlen=...) sample window — an ad-hoc "
+                "metric instrument; route observations through a "
+                "repro.obs registry histogram (bounded exact window + "
+                "log-spaced buckets, scrapeable)",
+            )
+        if (
+            isinstance(fn, ast.Name)
+            and fn.id in self._obs_instrument_aliases
+        ):
+            self._add(
+                "metric-funnel", node.lineno,
+                f"direct {fn.id}(...) construction bypasses the metrics "
+                "registry — use registry.counter/gauge/histogram "
+                "(get-or-create, type- and label-checked, one shared "
+                "family per name)",
             )
 
     # -- uncentred-second-moment --------------------------------------------

@@ -207,6 +207,31 @@ def plant_block_constants() -> List[Finding]:
     )
 
 
+_BAD_METRICS_SRC = textwrap.dedent(
+    """
+    import collections
+
+    from repro.obs import Counter
+
+
+    class MyMetrics:
+        def __init__(self):
+            # bypasses the registry name table AND hand-rolls a window
+            self.hits = Counter("serve_hits_total", "ad-hoc counter")
+            self.latencies = collections.deque(maxlen=4096)
+    """
+)
+
+
+def plant_metric_funnel() -> List[Finding]:
+    from repro.analysis import lint
+
+    # the path puts the fixture in scope (a serve-tier component)
+    return lint.check_source(
+        _BAD_METRICS_SRC, "src/repro/serve/planted_metrics.py"
+    )
+
+
 PLANTS: Dict[str, Callable[[], List[Finding]]] = {
     "collective-budget": plant_collective_budget,
     "donated-aliasing": plant_donated_aliasing,
@@ -219,4 +244,5 @@ PLANTS: Dict[str, Callable[[], List[Finding]]] = {
     "uncentred-second-moment": plant_uncentred_moment,
     "extractor-protocol": plant_extractor_protocol,
     "block-constants": plant_block_constants,
+    "metric-funnel": plant_metric_funnel,
 }

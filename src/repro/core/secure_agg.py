@@ -55,6 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import shamir
+from repro.obs import trace
 
 PyTree = Any
 
@@ -387,9 +388,12 @@ def recover_round(
     surv = sorted(set(int(s) for s in survivors))
     if len(views) != len(surv):
         raise ValueError("one masked view per survivor, aligned")
-    partial = views[0]
-    for v in views[1:]:
-        partial = jax.tree_util.tree_map(jnp.add, partial, v)
-    return recover_partial_sum(
-        partial, surv, setup, mask_scale=mask_scale
-    )
+    with trace.span("secure_agg.recover", survivors=len(surv),
+                    dropped=setup.num_clients - len(surv),
+                    threshold=setup.threshold):
+        partial = views[0]
+        for v in views[1:]:
+            partial = jax.tree_util.tree_map(jnp.add, partial, v)
+        return recover_partial_sum(
+            partial, surv, setup, mask_scale=mask_scale
+        )

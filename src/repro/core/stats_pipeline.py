@@ -99,6 +99,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.statistics import FeatureStats, aggregate
+from repro.obs import trace
 
 Array = jax.Array
 Batch = Tuple[Any, Any]
@@ -433,11 +434,17 @@ class StatsPipeline:
         if self.use_kernel:
             return self._fold_fused(stream, d, rows=rows)
 
-        carry = FeatureStats.zeros(self.num_classes, d, self.accum_dtype)
-        for fb, yb in stream:
-            carry = _fold_jnp(
-                carry, fb, yb, self.num_classes, accum_dtype=self.accum_dtype
-            )
+        with trace.span("pipeline.fold", backend="jnp",
+                        feature_dim=int(d), batch_rows=int(rows)) as sp:
+            carry = FeatureStats.zeros(self.num_classes, d, self.accum_dtype)
+            batches_folded = 0
+            for fb, yb in stream:
+                carry = _fold_jnp(
+                    carry, fb, yb, self.num_classes,
+                    accum_dtype=self.accum_dtype,
+                )
+                batches_folded += 1
+            sp.set(batches=batches_folded)
         return carry
 
     def _fold_fused(
@@ -465,13 +472,20 @@ class StatsPipeline:
         block_n, block_d = tune.stats_acc_blocks(
             self.num_classes, d, rows=rows
         )
-        m, n = stats_carry_init(self.num_classes, d, block_d=block_d)
-        for fb, yb in stream:
-            m, n = client_stats_acc(
-                m, n, fb, yb, interpret=self.interpret,
-                block_n=block_n, block_d=block_d,
-            )
-        A, B, N = stats_carry_finalize(m, n, self.num_classes, d)
+        with trace.span("pipeline.fold", backend="fused",
+                        feature_dim=int(d)) as sp:
+            m, n = stats_carry_init(self.num_classes, d, block_d=block_d)
+            batches_folded = 0
+            for fb, yb in stream:
+                m, n = client_stats_acc(
+                    m, n, fb, yb, interpret=self.interpret,
+                    block_n=block_n, block_d=block_d,
+                )
+                batches_folded += 1
+            sp.set(batches=batches_folded)
+        with trace.span("pipeline.finalize", backend="fused",
+                        feature_dim=int(d)):
+            A, B, N = stats_carry_finalize(m, n, self.num_classes, d)
         return FeatureStats(A=A, B=B, N=N)
 
     # -- simulated-client cohorts -------------------------------------------

@@ -1,0 +1,41 @@
+"""repro.obs — observability for the FedCGS stack.
+
+Three pieces, one funnel (the ``metric-funnel`` lint rule holds the
+serving and launch layers to it):
+
+- :mod:`repro.obs.trace`    — span-based structured tracing: trace IDs
+  propagated through the full request lifecycle (``submit → enqueue →
+  batch-form → score → complete``) and the round lifecycle (fold /
+  finalize, dropout recovery, hot-swap, replica sync), a thread-safe
+  bounded ring buffer, JSONL export, and a process-wide switch whose
+  disabled path is a near-zero-cost no-op;
+- :mod:`repro.obs.registry` — the unified metrics registry: named,
+  labeled Counter / Gauge / Histogram instruments (log-spaced latency
+  buckets + exact nearest-rank small-window percentiles) that
+  ``ServeMetrics`` / ``FrontMetrics`` snapshots are views over;
+- :mod:`repro.obs.expo`     — Prometheus text + JSON rendering, served
+  live via the ``fedcgs-front`` socket's ``{"op": "metrics"}`` /
+  ``{"op": "trace"}`` admin ops and the ``fedcgs-obs`` dump CLI.
+"""
+
+from repro.obs import trace
+from repro.obs.expo import parse_prometheus, render_json, render_prometheus
+from repro.obs.registry import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    default_registry,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "default_registry",
+    "parse_prometheus",
+    "render_json",
+    "render_prometheus",
+    "trace",
+]

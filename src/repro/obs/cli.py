@@ -1,0 +1,86 @@
+"""fedcgs-obs — dump live observability off a running ``fedcgs-front``.
+
+    fedcgs-obs dump --port 7011                    # Prometheus text
+    fedcgs-obs dump --port 7011 --what trace       # recent spans, JSONL
+    fedcgs-obs dump --port 7011 --what json        # metrics as JSON
+
+Speaks the front's newline-delimited JSON admin ops (``{"op":
+"metrics"}`` / ``{"op": "trace"}``) over one TCP connection — no
+dependency beyond the stdlib, so it works from any box that can reach
+the socket.
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+from typing import List, Optional
+
+
+async def _admin_request(host: str, port: int, op: dict) -> dict:
+    # one JSON-lines message per response: a full trace dump easily
+    # exceeds asyncio's default 64 KiB line limit
+    reader, writer = await asyncio.open_connection(host, port, limit=1 << 26)
+    try:
+        writer.write((json.dumps(op) + "\n").encode())
+        await writer.drain()
+        line = await reader.readline()
+    finally:
+        writer.close()
+    if not line:
+        raise ConnectionError(f"{host}:{port} closed without responding")
+    return json.loads(line)
+
+
+def fetch_metrics(host: str, port: int) -> dict:
+    """One ``{"op": "metrics"}`` round trip (text + JSON renderings)."""
+    return asyncio.run(_admin_request(host, port, {"op": "metrics"}))
+
+
+def fetch_trace(host: str, port: int, limit: Optional[int] = None) -> dict:
+    """One ``{"op": "trace"}`` round trip (recent spans)."""
+    op: dict = {"op": "trace"}
+    if limit is not None:
+        op["limit"] = limit
+    return asyncio.run(_admin_request(host, port, op))
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    p = argparse.ArgumentParser(prog="fedcgs-obs", description=__doc__)
+    sub = p.add_subparsers(dest="cmd", required=True)
+    dump = sub.add_parser(
+        "dump", help="scrape a running fedcgs-front's metrics or trace"
+    )
+    dump.add_argument("--host", default="127.0.0.1")
+    dump.add_argument("--port", type=int, required=True)
+    dump.add_argument(
+        "--what", choices=("metrics", "json", "trace"), default="metrics",
+        help="metrics = Prometheus text, json = structured metrics, "
+             "trace = recent spans as JSON lines",
+    )
+    dump.add_argument("--limit", type=int, default=None,
+                      help="newest-N span cap for --what trace")
+    args = p.parse_args(argv)
+
+    if args.what == "trace":
+        resp = fetch_trace(args.host, args.port, args.limit)
+        if "error" in resp:
+            print(json.dumps(resp))
+            return 1
+        for span in resp.get("spans", []):
+            print(json.dumps(span))
+        return 0
+    resp = fetch_metrics(args.host, args.port)
+    if "error" in resp:
+        print(json.dumps(resp))
+        return 1
+    if args.what == "json":
+        print(json.dumps(resp.get("json", {}), indent=2))
+    else:
+        print(resp.get("metrics", ""), end="")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

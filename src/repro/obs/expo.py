@@ -1,0 +1,151 @@
+"""Exposition: render a :class:`MetricsRegistry` as Prometheus text or JSON.
+
+``render_prometheus`` emits the text exposition format (version 0.0.4)
+— ``# HELP`` / ``# TYPE`` headers per family, one sample line per
+labeled child, histograms as cumulative ``_bucket{le=...}`` series plus
+``_sum`` / ``_count`` — so any scrape-compatible collector can ingest
+the serving tier live.  ``render_json`` is the structured twin for the
+socket admin path and the dump CLI.
+
+This module renders; it never mutates.  The live wiring (the
+``{"op": "metrics"}`` socket op on ``fedcgs-front``, the ``fedcgs-obs``
+dump CLI) lives with the servers it exposes.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.obs.registry import Histogram, MetricsRegistry, default_registry
+
+__all__ = [
+    "metrics_payload",
+    "parse_prometheus",
+    "render_json",
+    "render_prometheus",
+]
+
+
+def _escape(value: str) -> str:
+    return (
+        value.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+    )
+
+
+def _label_str(names: Tuple[str, ...], values: Tuple[str, ...],
+               extra: Optional[Tuple[str, str]] = None) -> str:
+    pairs = [f'{n}="{_escape(v)}"' for n, v in zip(names, values)]
+    if extra is not None:
+        pairs.append(f'{extra[0]}="{_escape(extra[1])}"')
+    return "{" + ",".join(pairs) + "}" if pairs else ""
+
+
+def _fmt(value: float) -> str:
+    if isinstance(value, float) and math.isinf(value):
+        return "+Inf" if value > 0 else "-Inf"
+    if isinstance(value, float) and math.isnan(value):
+        return "NaN"
+    # integral floats print as integers (counter semantics)
+    if float(value) == int(value):
+        return str(int(value))
+    return repr(float(value))
+
+
+def render_prometheus(registry: Optional[MetricsRegistry] = None) -> str:
+    """The whole registry in Prometheus text exposition format."""
+    registry = registry if registry is not None else default_registry()
+    lines: List[str] = []
+    for family in registry.collect():
+        lines.append(f"# HELP {family.name} {_escape(family.help)}")
+        lines.append(f"# TYPE {family.name} {family.kind}")
+        for values, child in family.children():
+            labels = _label_str(family.label_names, values)
+            if isinstance(child, Histogram):
+                for bound, cumulative in child.bucket_counts():
+                    le = _label_str(
+                        family.label_names, values, extra=("le", _fmt(bound))
+                    )
+                    lines.append(
+                        f"{family.name}_bucket{le} {cumulative}"
+                    )
+                lines.append(f"{family.name}_sum{labels} {_fmt(child.sum)}")
+                lines.append(f"{family.name}_count{labels} {child.count}")
+            else:
+                lines.append(f"{family.name}{labels} {_fmt(child.value)}")
+    return "\n".join(lines) + "\n"
+
+
+def render_json(registry: Optional[MetricsRegistry] = None) -> Dict:
+    """The whole registry as one JSON-ready dict."""
+    registry = registry if registry is not None else default_registry()
+    families = []
+    for family in registry.collect():
+        children = []
+        for values, child in family.children():
+            labels = dict(zip(family.label_names, values))
+            if isinstance(child, Histogram):
+                children.append({
+                    "labels": labels,
+                    "count": child.count,
+                    "sum": child.sum,
+                    "buckets": [
+                        {"le": ("+Inf" if math.isinf(b) else b), "count": c}
+                        for b, c in child.bucket_counts()
+                    ],
+                })
+            else:
+                children.append({"labels": labels, "value": child.value})
+        families.append({
+            "name": family.name,
+            "kind": family.kind,
+            "help": family.help,
+            "series": children,
+        })
+    return {"families": families}
+
+
+def parse_prometheus(text: str) -> Dict[str, Dict[str, float]]:
+    """A minimal parser of the text format: name → {label_str: value}.
+
+    Strict enough to catch malformed output (tests and the smoke
+    self-check use it); not a general scraper.  Raises ``ValueError``
+    on a line that is neither a comment nor a well-formed sample.
+    """
+    out: Dict[str, Dict[str, float]] = {}
+    for line in text.splitlines():
+        if not line.strip() or line.startswith("#"):
+            continue
+        rest = line
+        if "{" in line:
+            name = line[: line.index("{")]
+            closing = line.rindex("}")
+            labels = line[line.index("{"): closing + 1]
+            rest = line[closing + 1:]
+        else:
+            name, labels = line.split(None, 1)[0], ""
+            rest = line[len(name):]
+        value_str = rest.strip().split()[0]
+        if value_str == "+Inf":
+            value = math.inf
+        elif value_str == "NaN":
+            value = math.nan
+        else:
+            value = float(value_str)
+        if not name or not name[0].isalpha():
+            raise ValueError(f"malformed sample line: {line!r}")
+        out.setdefault(name, {})[labels] = value
+    return out
+
+
+def metrics_payload(registry: Optional[MetricsRegistry] = None) -> Dict:
+    """The socket ``{"op": "metrics"}`` response body: both renderings."""
+    return {
+        "metrics": render_prometheus(registry),
+        "json": render_json(registry),
+    }
+
+
+if __name__ == "__main__":  # pragma: no cover — debugging aid
+    print(json.dumps(render_json(), indent=2))

@@ -1,0 +1,318 @@
+"""The unified metrics registry: Counter / Gauge / Histogram in one
+named, labeled, process-wide namespace.
+
+Before this module every serve-layer component grew its own private
+counters behind its own lock and its own ``snapshot()`` dict; nothing
+could scrape the process as a whole, and the latency "histogram" was a
+65536-entry deque sorted under the lock on EVERY snapshot.  The
+registry inverts that: components create named instruments here
+(get-or-create, so N workers share one family distinguished by
+labels), their ``snapshot()`` dicts become views over the shared
+instruments, and :mod:`repro.obs.expo` renders the whole registry as
+Prometheus text or JSON in one pass.
+
+Instruments:
+
+- :class:`Counter` — monotone ``inc()`` (floats allowed: summed
+  seconds are counters too);
+- :class:`Gauge` — ``set()`` to the current value;
+- :class:`Histogram` — fixed log-spaced buckets (default: 8 per
+  decade over 10µs…100s, built for latencies) **plus** an exact
+  nearest-rank small-window path: while the observation count fits the
+  bounded sample window, ``percentile(q)`` is the exact nearest-rank
+  statistic (bit-identical to ``serve.metrics.percentile``); past it,
+  the rank is located in the bucket counts and interpolated inside the
+  bucket — O(#buckets), never a sort over the raw samples.
+
+Every instrument is individually thread-safe; the registry lock only
+guards the name table.  Labels are fixed per family at creation;
+``labels(**values)`` returns the per-labelset child (created on first
+use).  ``collect()`` walks everything for the exposition layer.
+"""
+
+from __future__ import annotations
+
+import bisect
+import collections
+import math
+import threading
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "default_registry",
+    "latency_buckets",
+]
+
+# exact nearest-rank percentiles while a histogram holds at most this
+# many observations; beyond it the bucket path takes over (no sort)
+EXACT_WINDOW = 1024
+
+
+def latency_buckets(
+    lo: float = 1e-5, hi: float = 1e2, per_decade: int = 8
+) -> Tuple[float, ...]:
+    """Fixed log-spaced bucket upper bounds, ``lo``…``hi`` seconds."""
+    decades = math.log10(hi / lo)
+    n = int(round(decades * per_decade))
+    return tuple(lo * 10 ** (i / per_decade) for i in range(n + 1))
+
+
+_DEFAULT_BUCKETS = latency_buckets()
+
+
+def _check_label_values(names: Tuple[str, ...], values: Dict[str, str]) -> Tuple[str, ...]:
+    if set(values) != set(names):
+        raise ValueError(
+            f"label values {sorted(values)} != declared labels {sorted(names)}"
+        )
+    return tuple(str(values[n]) for n in names)
+
+
+class _Instrument:
+    """Shared family machinery: label table + per-child creation."""
+
+    kind = "untyped"
+
+    def __init__(self, name: str, help: str, label_names: Sequence[str] = ()):
+        self.name = name
+        self.help = help
+        self.label_names = tuple(label_names)
+        self._lock = threading.Lock()
+        self._children: Dict[Tuple[str, ...], "_Instrument"] = {}
+        self._init_state()
+
+    def _init_state(self) -> None:  # pragma: no cover - overridden
+        pass
+
+    def _new_child(self) -> "_Instrument":
+        child = type(self)(self.name, self.help)
+        return child
+
+    def labels(self, **values) -> "_Instrument":
+        """The per-labelset child (get-or-create)."""
+        if not self.label_names:
+            raise ValueError(f"{self.name} declares no labels")
+        key = _check_label_values(self.label_names, values)
+        with self._lock:
+            child = self._children.get(key)
+            if child is None:
+                child = self._children[key] = self._new_child()
+            return child
+
+    def children(self) -> Iterator[Tuple[Tuple[str, ...], "_Instrument"]]:
+        """(label values, child) pairs — the unlabeled family yields
+        itself under the empty tuple."""
+        if not self.label_names:
+            yield (), self
+            return
+        with self._lock:
+            items = list(self._children.items())
+        yield from items
+
+
+class Counter(_Instrument):
+    """Monotonically increasing value (thread-safe)."""
+
+    kind = "counter"
+
+    def _init_state(self) -> None:
+        with self._lock:  # init-time, but guarded writes stay guarded
+            self._value = 0.0
+
+    def inc(self, amount: float = 1.0) -> None:
+        if amount < 0:
+            raise ValueError(f"counters only go up, got {amount}")
+        with self._lock:
+            self._value += amount
+
+    @property
+    def value(self) -> float:
+        with self._lock:
+            return self._value
+
+
+class Gauge(_Instrument):
+    """Set-to-current value (thread-safe)."""
+
+    kind = "gauge"
+
+    def _init_state(self) -> None:
+        with self._lock:  # init-time, but guarded writes stay guarded
+            self._value = 0.0
+
+    def set(self, value: float) -> None:
+        with self._lock:
+            self._value = float(value)
+
+    def inc(self, amount: float = 1.0) -> None:
+        with self._lock:
+            self._value += amount
+
+    @property
+    def value(self) -> float:
+        with self._lock:
+            return self._value
+
+
+class Histogram(_Instrument):
+    """Log-spaced bucket counts + an exact small-window percentile path.
+
+    ``observe(v)`` is O(log #buckets); ``percentile(q)`` is exact
+    nearest-rank while ``count <= window`` (the bounded raw-sample
+    window still holds everything), and a bucket-rank interpolation —
+    O(#buckets), no sort — once the window has been outgrown.
+    """
+
+    kind = "histogram"
+
+    def __init__(
+        self,
+        name: str,
+        help: str,
+        label_names: Sequence[str] = (),
+        *,
+        buckets: Optional[Sequence[float]] = None,
+        window: int = EXACT_WINDOW,
+    ):
+        self.buckets = tuple(buckets) if buckets is not None else _DEFAULT_BUCKETS
+        if list(self.buckets) != sorted(self.buckets):
+            raise ValueError("bucket bounds must be sorted ascending")
+        self.window = window
+        super().__init__(name, help, label_names)
+
+    def _init_state(self) -> None:
+        with self._lock:  # init-time, but guarded writes stay guarded
+            self._counts = [0] * (len(self.buckets) + 1)  # +1: +Inf bucket
+            self._count = 0
+            self._sum = 0.0
+            self._samples: collections.deque = collections.deque(
+                maxlen=self.window
+            )
+
+    def _new_child(self) -> "Histogram":
+        return Histogram(
+            self.name, self.help, buckets=self.buckets, window=self.window
+        )
+
+    def observe(self, value: float) -> None:
+        value = float(value)
+        idx = bisect.bisect_left(self.buckets, value)
+        with self._lock:
+            self._counts[idx] += 1
+            self._count += 1
+            self._sum += value
+            self._samples.append(value)
+
+    @property
+    def count(self) -> int:
+        with self._lock:
+            return self._count
+
+    @property
+    def sum(self) -> float:
+        with self._lock:
+            return self._sum
+
+    def bucket_counts(self) -> List[Tuple[float, int]]:
+        """Cumulative (upper_bound, count) pairs, ending at +Inf."""
+        with self._lock:
+            counts = list(self._counts)
+        out, running = [], 0
+        for bound, c in zip(self.buckets, counts):
+            running += c
+            out.append((bound, running))
+        out.append((math.inf, running + counts[-1]))
+        return out
+
+    def percentile(self, q: float) -> float:
+        """Nearest-rank percentile, exact while the window holds all
+        observations, bucket-interpolated beyond it (never a sort of
+        more than ``window`` samples)."""
+        with self._lock:
+            n = self._count
+            if n == 0:
+                return float("nan")
+            if n <= self.window:
+                ordered = sorted(self._samples)
+                rank = min(n, max(1, math.ceil(q * n)))
+                return float(ordered[rank - 1])
+            counts = list(self._counts)
+        rank = min(n, max(1, math.ceil(q * n)))
+        running = 0
+        for idx, c in enumerate(counts):
+            if running + c >= rank:
+                if idx >= len(self.buckets):
+                    # +Inf bucket has no upper edge: the highest finite
+                    # bound is the best monotone floor we can report
+                    return float(self.buckets[-1])
+                hi = self.buckets[idx]
+                lo = self.buckets[idx - 1] if idx > 0 else 0.0
+                frac = (rank - running) / c
+                return lo + (hi - lo) * frac
+            running += c
+        return float("nan")  # pragma: no cover — rank <= n by construction
+
+
+class MetricsRegistry:
+    """The named instrument table (get-or-create, type-checked)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._instruments: Dict[str, _Instrument] = {}
+
+    def _get_or_create(self, cls, name, help, label_names, **kwargs):
+        with self._lock:
+            existing = self._instruments.get(name)
+            if existing is not None:
+                if type(existing) is not cls:
+                    raise ValueError(
+                        f"{name} already registered as {existing.kind}, "
+                        f"not {cls.kind}"
+                    )
+                if existing.label_names != tuple(label_names):
+                    raise ValueError(
+                        f"{name} already registered with labels "
+                        f"{existing.label_names}, not {tuple(label_names)}"
+                    )
+                return existing
+            inst = cls(name, help, label_names, **kwargs)
+            self._instruments[name] = inst
+            return inst
+
+    def counter(self, name: str, help: str = "",
+                label_names: Sequence[str] = ()) -> Counter:
+        return self._get_or_create(Counter, name, help, label_names)
+
+    def gauge(self, name: str, help: str = "",
+              label_names: Sequence[str] = ()) -> Gauge:
+        return self._get_or_create(Gauge, name, help, label_names)
+
+    def histogram(
+        self, name: str, help: str = "", label_names: Sequence[str] = (),
+        *, buckets: Optional[Sequence[float]] = None,
+        window: int = EXACT_WINDOW,
+    ) -> Histogram:
+        return self._get_or_create(
+            Histogram, name, help, label_names, buckets=buckets, window=window
+        )
+
+    def get(self, name: str) -> Optional[_Instrument]:
+        with self._lock:
+            return self._instruments.get(name)
+
+    def collect(self) -> List[_Instrument]:
+        """Every registered family, name-sorted (the exposition walk)."""
+        with self._lock:
+            return [self._instruments[k] for k in sorted(self._instruments)]
+
+
+_REGISTRY = MetricsRegistry()
+
+
+def default_registry() -> MetricsRegistry:
+    """The process-wide registry every component shares by default."""
+    return _REGISTRY

@@ -1,0 +1,279 @@
+"""Span-based structured tracing with propagated trace IDs.
+
+``repro.timing.timed`` answers "how long did this call take"; a span
+answers "what happened to THIS request" — a named, attributed interval
+tied to a trace ID that travels with the request through every layer it
+crosses (``submit → enqueue → batch-form → score → complete`` in the
+serving tier, fold/finalize/recover/hot-swap in the round lifecycle).
+
+Design constraints, in order:
+
+1. **The disabled path is a near-zero-cost no-op.**  Tracing ships in
+   the serving hot path, so ``span()`` with tracing off must cost one
+   module-bool check and return a shared stateless context manager —
+   no allocation beyond the caller's kwargs, no lock, no clock read.
+   The serve-bench obs-overhead point holds this to <2% throughput.
+2. **Thread-safe bounded memory.**  Finished spans land in one
+   process-wide ring buffer (``collections.deque(maxlen=...)`` under a
+   lock); a runaway workload overwrites the oldest spans instead of
+   growing without bound.
+3. **Explicit propagation across threads.**  Within a thread, nested
+   spans inherit the active trace ID from a thread-local stack; across
+   threads (a request's future completes on the worker), the trace ID
+   is carried explicitly (``trace_id=`` on ``span()``; the serve tier
+   stows it on the queued request).
+
+Activation: :func:`enable` / :func:`disable`, or ``FEDCGS_TRACE=1`` in
+the environment at import time.  ``FEDCGS_TRACE_DEVICE=1`` (or
+``enable(device=True)``) additionally wraps the audited jit call sites
+in ``jax.profiler`` annotations (:func:`annotate`), so a device
+profile collected with ``jax.profiler.trace`` lines up with the host
+spans by name.
+
+Export: :func:`spans` (list of dicts), :func:`export_jsonl` (one JSON
+object per line), both draining nothing — :func:`reset` clears.
+"""
+
+from __future__ import annotations
+
+import collections
+import itertools
+import json
+import os
+import threading
+import time
+from typing import Dict, List, Optional
+
+__all__ = [
+    "Span",
+    "annotate",
+    "current_trace_id",
+    "disable",
+    "enable",
+    "enabled",
+    "export_jsonl",
+    "new_trace_id",
+    "reset",
+    "span",
+    "spans",
+]
+
+DEFAULT_CAPACITY = 65536
+
+# process-wide tracer state; `_enabled` is the hot-path gate (read
+# un-locked: a stale read worth one span either way is harmless)
+_enabled = False
+_device = False
+_lock = threading.Lock()
+_buffer: collections.deque = collections.deque(maxlen=DEFAULT_CAPACITY)
+_ids = itertools.count(1)
+_pid = os.getpid()
+_tls = threading.local()
+
+
+def enable(*, capacity: Optional[int] = None, device: bool = False) -> None:
+    """Switch tracing on process-wide (idempotent).
+
+    ``capacity`` bounds the ring buffer (finished spans retained);
+    ``device`` additionally turns :func:`annotate` into real
+    ``jax.profiler`` annotations.
+    """
+    global _enabled, _device, _buffer
+    with _lock:
+        if capacity is not None and capacity != _buffer.maxlen:
+            _buffer = collections.deque(_buffer, maxlen=capacity)
+        _device = device or _device
+        _enabled = True
+
+
+def disable() -> None:
+    """Switch tracing off (the buffer keeps what it holds)."""
+    global _enabled, _device
+    with _lock:
+        _enabled = False
+        _device = False
+
+
+def enabled() -> bool:
+    return _enabled
+
+
+def new_trace_id() -> str:
+    """A process-unique trace ID (pid-prefixed counter — deterministic
+    within a run, collision-free across forked smoke workers)."""
+    return f"{_pid:x}-{next(_ids):x}"
+
+
+def _stack() -> List["Span"]:
+    stack = getattr(_tls, "stack", None)
+    if stack is None:
+        stack = _tls.stack = []
+    return stack
+
+
+def current_trace_id() -> Optional[str]:
+    """The active span's trace ID on this thread (None outside spans)."""
+    stack = getattr(_tls, "stack", None)
+    return stack[-1].trace_id if stack else None
+
+
+class Span:
+    """One named interval.  Context manager; records itself on exit.
+
+    ``set(**attrs)`` merges attributes mid-span; ``fail(error)`` stamps
+    an error string (an exception escaping the ``with`` block stamps
+    its repr automatically).
+    """
+
+    __slots__ = (
+        "trace_id", "span_id", "parent_id", "name", "attrs", "error",
+        "start_s", "end_s",
+    )
+
+    def __init__(self, name: str, trace_id: Optional[str], attrs: Dict):
+        self.name = name
+        self.trace_id = trace_id
+        self.span_id = f"{_pid:x}-s{next(_ids):x}"
+        self.parent_id: Optional[str] = None
+        self.attrs = attrs
+        self.error: Optional[str] = None
+        self.start_s = 0.0
+        self.end_s = 0.0
+
+    def set(self, **attrs) -> None:
+        self.attrs.update(attrs)
+
+    def fail(self, error: str) -> None:
+        self.error = str(error)
+
+    def __enter__(self) -> "Span":
+        stack = _stack()
+        if stack:
+            parent = stack[-1]
+            self.parent_id = parent.span_id
+            if self.trace_id is None:
+                self.trace_id = parent.trace_id
+        if self.trace_id is None:
+            self.trace_id = new_trace_id()
+        self.start_s = time.perf_counter()
+        stack.append(self)
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.end_s = time.perf_counter()
+        stack = _stack()
+        if stack and stack[-1] is self:
+            stack.pop()
+        if exc is not None and self.error is None:
+            self.error = repr(exc)
+        if _enabled:  # a span straddling disable() is dropped, not lost-locked
+            with _lock:
+                _buffer.append(self)
+        return False
+
+    def as_dict(self) -> Dict:
+        out = {
+            "trace_id": self.trace_id,
+            "span_id": self.span_id,
+            "parent_id": self.parent_id,
+            "name": self.name,
+            "start_s": self.start_s,
+            "end_s": self.end_s,
+            "duration_s": self.end_s - self.start_s,
+            "attrs": self.attrs,
+        }
+        if self.error is not None:
+            out["error"] = self.error
+        return out
+
+
+class _NoopSpan:
+    """The shared disabled-path context manager: stateless, reentrant."""
+
+    __slots__ = ()
+    trace_id = None
+
+    def __enter__(self) -> "_NoopSpan":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        return False
+
+    def set(self, **attrs) -> None:
+        pass
+
+    def fail(self, error: str) -> None:
+        pass
+
+
+_NOOP = _NoopSpan()
+
+
+def span(name: str, *, trace_id: Optional[str] = None, **attrs):
+    """Open a span (context manager).
+
+    Disabled → the shared no-op (one bool check).  Enabled → a
+    :class:`Span` inheriting the thread's active trace ID unless
+    ``trace_id=`` pins one explicitly (cross-thread propagation).
+    """
+    if not _enabled:
+        return _NOOP
+    return Span(name, trace_id, attrs)
+
+
+def event(name: str, *, trace_id: Optional[str] = None, **attrs) -> None:
+    """A zero-duration span (a point-in-time marker)."""
+    if not _enabled:
+        return
+    with span(name, trace_id=trace_id, **attrs):
+        pass
+
+
+def annotate(name: str):
+    """A device-profile annotation around an audited jit call site.
+
+    With device tracing on, returns ``jax.profiler.TraceAnnotation`` so
+    the host span and the device trace carry the same name; otherwise
+    the shared no-op.  Host-only tracing deliberately skips this — a
+    TraceAnnotation costs a TraceMe even when no profiler session runs.
+    """
+    if not (_enabled and _device):
+        return _NOOP
+    import jax
+
+    return jax.profiler.TraceAnnotation(name)
+
+
+# -- export ------------------------------------------------------------------
+
+
+def spans(*, name: Optional[str] = None, limit: Optional[int] = None) -> List[Dict]:
+    """Finished spans (oldest first), optionally filtered by name /
+    truncated to the newest ``limit``."""
+    with _lock:
+        out = [s.as_dict() for s in _buffer]
+    if name is not None:
+        out = [s for s in out if s["name"] == name]
+    if limit is not None:
+        out = out[-limit:]
+    return out
+
+
+def export_jsonl(path: str) -> int:
+    """Write every buffered span as JSON lines; returns the span count."""
+    all_spans = spans()
+    with open(path, "w") as fh:
+        for s in all_spans:
+            fh.write(json.dumps(s) + "\n")
+    return len(all_spans)
+
+
+def reset() -> None:
+    """Drop every buffered span (tests, between bench points)."""
+    with _lock:
+        _buffer.clear()
+
+
+if os.environ.get("FEDCGS_TRACE", "").strip() not in ("", "0"):
+    enable(device=os.environ.get("FEDCGS_TRACE_DEVICE", "").strip()
+           not in ("", "0"))

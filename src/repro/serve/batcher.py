@@ -47,6 +47,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro import tune
+from repro.obs import trace
 
 Array = np.ndarray
 
@@ -72,6 +73,8 @@ class _Pending:
     rows: int
     future: Future
     enqueued_at: float
+    trace_id: Optional[str] = None  # propagated submit → complete
+    topup: bool = False  # rode another bucket's batch as a top-up
 
 
 def pad_rows_to(features: Array, multiple: int) -> Array:
@@ -131,7 +134,7 @@ class DynamicBatcher:
 
     # -- producer side ------------------------------------------------------
 
-    def submit(self, features) -> Future:
+    def submit(self, features, *, trace_id: Optional[str] = None) -> Future:
         """Enqueue one request; returns a Future of :class:`ServeResult`.
 
         A request larger than ``max_batch_rows`` is admitted whole (it
@@ -139,6 +142,11 @@ class DynamicBatcher:
         bound; anything that would push the queue past
         ``max_queue_rows`` raises :class:`QueueFull` — callers see the
         backpressure instead of unbounded latency.
+
+        ``trace_id`` pins the request's trace (the front mints one per
+        request); omitted, the thread's active trace — or a fresh ID —
+        is used.  The ID rides the queued request so the worker-thread
+        spans (score, complete) join the same trace.
         """
         f = np.asarray(features, dtype=np.float32)
         if f.ndim != 2 or f.shape[1] != self.feature_dim:
@@ -151,18 +159,24 @@ class DynamicBatcher:
             features=f, rows=f.shape[0], future=Future(),
             enqueued_at=time.perf_counter(),
         )
-        with self._lock:
-            if self._queued_rows + pending.rows > self.max_queue_rows:
-                raise QueueFull(
-                    f"queue holds {self._queued_rows} rows; "
-                    f"+{pending.rows} exceeds the {self.max_queue_rows} bound"
-                )
+        with trace.span("serve.enqueue", trace_id=trace_id,
+                        rows=pending.rows) as sp:
+            pending.trace_id = sp.trace_id
             key = tune.bucket(pending.rows)
-            queue = self._buckets.get(key)
-            if queue is None:
-                queue = self._buckets[key] = collections.deque()
-            queue.append(pending)
-            self._queued_rows += pending.rows
+            sp.set(bucket=key)
+            with self._lock:
+                if self._queued_rows + pending.rows > self.max_queue_rows:
+                    sp.fail("queue_full")
+                    raise QueueFull(
+                        f"queue holds {self._queued_rows} rows; "
+                        f"+{pending.rows} exceeds the "
+                        f"{self.max_queue_rows} bound"
+                    )
+                queue = self._buckets.get(key)
+                if queue is None:
+                    queue = self._buckets[key] = collections.deque()
+                queue.append(pending)
+                self._queued_rows += pending.rows
         return pending.future
 
     # -- consumer side (the server's run loop) ------------------------------
@@ -231,7 +245,8 @@ class DynamicBatcher:
             oldest = self._oldest_locked()
             if oldest is None:
                 return [], np.zeros((0, self.feature_dim), np.float32), 0
-            primary = self._buckets[tune.bucket(oldest.rows)]
+            primary_bucket = tune.bucket(oldest.rows)
+            primary = self._buckets[primary_bucket]
             while primary:
                 nxt = primary[0]
                 if taken and rows + nxt.rows > self.max_batch_rows:
@@ -250,8 +265,17 @@ class DynamicBatcher:
                 while queue and queue[0].rows <= target - rows:
                     nxt = queue.popleft()
                     self._queued_rows -= nxt.rows
+                    nxt.topup = True
                     taken.append(nxt)
                     rows += nxt.rows
+        if trace.enabled():
+            with trace.span(
+                "serve.batch_form", trace_id=taken[0].trace_id,
+                bucket=primary_bucket, pad_target=target, rows=rows,
+                trace_ids=[p.trace_id for p in taken],
+                topup_trace_ids=[p.trace_id for p in taken if p.topup],
+            ):
+                pass
         feats = (
             taken[0].features
             if len(taken) == 1
@@ -282,14 +306,21 @@ class DynamicBatcher:
                 latency_s=now - p.enqueued_at,
                 batch_rows=batch_rows,
             )
-            results.append(result)
-            p.future.set_result(result)
+            with trace.span("serve.complete", trace_id=p.trace_id,
+                            rows=p.rows, latency_s=result.latency_s,
+                            head_version=head_version,
+                            batch_rows=batch_rows, topup=p.topup):
+                results.append(result)
+                p.future.set_result(result)
         return results
 
     def fail(self, pendings: Sequence[_Pending], exc: BaseException) -> None:
         for p in pendings:
             if not p.future.done():
-                p.future.set_exception(exc)
+                with trace.span("serve.complete", trace_id=p.trace_id,
+                                rows=p.rows, topup=p.topup) as sp:
+                    sp.fail(str(exc) or type(exc).__name__)
+                    p.future.set_exception(exc)
 
     def drain_pending(self) -> List[_Pending]:
         """Pop EVERYTHING (shutdown without scoring — callers fail them)."""

@@ -33,41 +33,68 @@ from __future__ import annotations
 
 import argparse
 import asyncio
+import itertools
 import json
-import threading
 from concurrent.futures import Future
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs import trace
+from repro.obs.expo import metrics_payload
+from repro.obs.registry import MetricsRegistry, default_registry
 from repro.serve.batcher import QueueFull, ServeResult
 from repro.serve.server import GNBServer
 
+_front_ids = itertools.count()
+
 
 class FrontMetrics:
-    """Accepted/shed counters for the front (thread-safe)."""
+    """Accepted/shed views over the shared front instrument families.
 
-    def __init__(self):
-        self._lock = threading.Lock()
-        self._accepted = 0
-        self._shed = 0
+    Like :class:`~repro.serve.metrics.ServeMetrics`, this holds no
+    private counters since the ``repro.obs`` rebase — ``snapshot()``
+    reads the same labeled registry instruments the Prometheus
+    exposition renders, so the socket scrape and the dict view can
+    never disagree.
+    """
+
+    def __init__(self, *, registry: Optional[MetricsRegistry] = None,
+                 front: Optional[str] = None):
+        reg = registry if registry is not None else default_registry()
+        self.front = front if front is not None else f"f{next(_front_ids)}"
+        labels = ("front",)
+        lv = {"front": self.front}
+        self._accepted = reg.counter(
+            "fedcgs_front_accepted_total",
+            "Requests the front routed to a worker", labels).labels(**lv)
+        self._shed = reg.counter(
+            "fedcgs_front_shed_total",
+            "Requests shed at admission (front bound or all workers full)",
+            labels).labels(**lv)
+        self._queued_rows = reg.gauge(
+            "fedcgs_front_queued_rows",
+            "Rows currently queued across the front's workers",
+            labels).labels(**lv)
 
     def record_accepted(self) -> None:
-        with self._lock:
-            self._accepted += 1
+        self._accepted.inc()
 
     def record_shed(self) -> None:
-        with self._lock:
-            self._shed += 1
+        self._shed.inc()
+
+    def set_queued_rows(self, rows: int) -> None:
+        self._queued_rows.set(rows)
 
     def snapshot(self) -> Dict[str, float]:
-        with self._lock:
-            offered = self._accepted + self._shed
-            return {
-                "accepted": self._accepted,
-                "shed": self._shed,
-                "shed_ratio": (self._shed / offered) if offered else 0.0,
-            }
+        accepted = int(self._accepted.value)
+        shed = int(self._shed.value)
+        offered = accepted + shed
+        return {
+            "accepted": accepted,
+            "shed": shed,
+            "shed_ratio": (shed / offered) if offered else 0.0,
+        }
 
 
 class ServeFront:
@@ -159,26 +186,35 @@ class ServeFront:
             raise ValueError(
                 f"expected (n, {self.feature_dim}) features, got {f.shape}"
             )
-        if (
-            self.max_queued_rows is not None
-            and self.queued_rows + f.shape[0] > self.max_queued_rows
-        ):
+        # one trace per request, minted here: accepted requests carry
+        # the ID through enqueue → score → complete; shed requests end
+        # their chain right here with error="shed"
+        with trace.span("serve.submit", rows=int(f.shape[0])) as sp:
+            if (
+                self.max_queued_rows is not None
+                and self.queued_rows + f.shape[0] > self.max_queued_rows
+            ):
+                self.metrics.record_shed()
+                sp.fail("shed")
+                raise QueueFull(
+                    f"front holds {self.queued_rows} rows; +{f.shape[0]} "
+                    f"exceeds the {self.max_queued_rows} bound (request shed)"
+                )
+            for worker in sorted(
+                self.workers, key=lambda w: w.batcher.queued_rows
+            ):
+                try:
+                    fut = worker.submit(f, trace_id=sp.trace_id)
+                except QueueFull:
+                    continue
+                self.metrics.record_accepted()
+                sp.set(worker=worker.metrics.worker)
+                return fut
             self.metrics.record_shed()
+            sp.fail("shed")
             raise QueueFull(
-                f"front holds {self.queued_rows} rows; +{f.shape[0]} "
-                f"exceeds the {self.max_queued_rows} bound (request shed)"
+                "every worker is at its queue bound (request shed)"
             )
-        for worker in sorted(
-            self.workers, key=lambda w: w.batcher.queued_rows
-        ):
-            try:
-                fut = worker.submit(f)
-            except QueueFull:
-                continue
-            self.metrics.record_accepted()
-            return fut
-        self.metrics.record_shed()
-        raise QueueFull("every worker is at its queue bound (request shed)")
 
     def score(self, features, timeout: Optional[float] = None) -> ServeResult:
         """Synchronous convenience: submit + wait."""
@@ -188,6 +224,7 @@ class ServeFront:
 
     def snapshot(self) -> Dict[str, object]:
         """Front counters + the aggregated worker view (JSON-ready)."""
+        self.metrics.set_queued_rows(self.queued_rows)
         per_worker = [w.metrics.snapshot() for w in self.workers]
         agg: Dict[str, float] = {}
         if per_worker:
@@ -215,6 +252,38 @@ class ServeFront:
 
 # -- asyncio socket shim -----------------------------------------------------
 
+# asyncio streams default to a 64 KiB line limit — one ~50-row float32
+# request (or a metrics/trace admin response) overflows it and kills the
+# connection mid-stream.  JSON-lines framing means one message is one
+# line, so the limit must cover the largest message we expect.
+_STREAM_LIMIT = 1 << 26  # 64 MiB
+
+
+def _handle_admin(front: ServeFront, req: dict) -> Optional[dict]:
+    """Admin ops on the scoring socket (None = not an admin request).
+
+    ``{"op": "metrics"}`` — live Prometheus text + JSON rendering of
+    the process registry (the same instruments ``snapshot()`` views);
+    ``{"op": "trace", "limit": N}`` — the newest buffered spans.
+    Both are read-only and answered inline on the event loop (no
+    kernel work), so a scrape can never queue behind traffic.
+    """
+    op = req.get("op")
+    if op is None:
+        return None
+    if op == "metrics":
+        front.metrics.set_queued_rows(front.queued_rows)
+        payload = metrics_payload()
+        payload["snapshot"] = front.snapshot()
+        return payload
+    if op == "trace":
+        limit = req.get("limit")
+        return {
+            "tracing_enabled": trace.enabled(),
+            "spans": trace.spans(limit=int(limit) if limit else None),
+        }
+    return {"error": f"unknown op: {op!r}"}
+
 
 async def _handle_client(
     front: ServeFront,
@@ -228,14 +297,16 @@ async def _handle_client(
                 break
             try:
                 req = json.loads(line)
-                feats = np.asarray(req["features"], dtype=np.float32)
-                fut = front.submit(feats)
-                res = await asyncio.wrap_future(fut)
-                resp = {
-                    "logits": np.asarray(res.logits).tolist(),
-                    "predictions": np.asarray(res.predictions).tolist(),
-                    "head_version": res.head_version,
-                }
+                resp = _handle_admin(front, req)
+                if resp is None:
+                    feats = np.asarray(req["features"], dtype=np.float32)
+                    fut = front.submit(feats)
+                    res = await asyncio.wrap_future(fut)
+                    resp = {
+                        "logits": np.asarray(res.logits).tolist(),
+                        "predictions": np.asarray(res.predictions).tolist(),
+                        "head_version": res.head_version,
+                    }
             except QueueFull:
                 resp = {"error": "shed"}
             except (KeyError, TypeError, ValueError,
@@ -256,7 +327,9 @@ async def serve_socket(
     async def handler(reader, writer):
         await _handle_client(front, reader, writer)
 
-    return await asyncio.start_server(handler, host, port)
+    return await asyncio.start_server(
+        handler, host, port, limit=_STREAM_LIMIT
+    )
 
 
 async def request_scores(
@@ -264,7 +337,9 @@ async def request_scores(
 ) -> List[dict]:
     """Minimal JSON-lines client (tests, the smoke path): send every
     request over one connection, gather the decoded responses in order."""
-    reader, writer = await asyncio.open_connection(host, port)
+    reader, writer = await asyncio.open_connection(
+        host, port, limit=_STREAM_LIMIT
+    )
     out: List[dict] = []
     try:
         for req in requests:
@@ -277,13 +352,60 @@ async def request_scores(
     return out
 
 
+async def admin_request(host: str, port: int, req: dict) -> dict:
+    """One admin op (``{"op": "metrics"}`` / ``{"op": "trace"}``) over a
+    fresh connection; returns the decoded response."""
+    reader, writer = await asyncio.open_connection(
+        host, port, limit=_STREAM_LIMIT
+    )
+    try:
+        writer.write((json.dumps(req) + "\n").encode())
+        await writer.drain()
+        return json.loads(await reader.readline())
+    finally:
+        writer.close()
+
+
 # -- CLI ---------------------------------------------------------------------
+
+
+def verify_span_chains(span_dicts: Sequence[dict], *, served: int,
+                       shed: int) -> None:
+    """Assert every request left a complete span chain in the buffer.
+
+    Accepted requests must show ``serve.submit`` (no error) whose trace
+    ID also appears on a ``serve.enqueue`` and an error-free
+    ``serve.complete`` — the full submit → complete chain, including
+    requests that rode another bucket's batch as top-ups.  Shed
+    requests must show exactly their count of ``serve.submit`` spans
+    stamped ``error="shed"`` (the chain ends at admission).
+    """
+    submits = [s for s in span_dicts if s["name"] == "serve.submit"]
+    ok_submits = [s for s in submits if "error" not in s]
+    shed_submits = [s for s in submits if s.get("error") == "shed"]
+    enqueued = {s["trace_id"] for s in span_dicts
+                if s["name"] == "serve.enqueue" and "error" not in s}
+    completed = {s["trace_id"] for s in span_dicts
+                 if s["name"] == "serve.complete" and "error" not in s}
+    chains = [s for s in ok_submits
+              if s["trace_id"] in enqueued and s["trace_id"] in completed]
+    if len(chains) != served or len(ok_submits) != served:
+        raise AssertionError(
+            f"{served} served requests but {len(ok_submits)} accepted "
+            f"submit spans, {len(chains)} with full submit→complete chains"
+        )
+    if len(shed_submits) != shed:
+        raise AssertionError(
+            f"{shed} shed requests but {len(shed_submits)} submit spans "
+            "with error=\"shed\""
+        )
 
 
 async def _smoke(args) -> int:
     # deferred import: launch.serve_gnb itself imports repro.serve
     from repro.launch.serve_gnb import standin_head
 
+    trace.enable()  # the smoke path always traces (self-check below)
     rng = np.random.default_rng(args.seed)
     head = standin_head(args.classes, args.feature_dim, args.seed)
     front = ServeFront.create(
@@ -305,20 +427,51 @@ async def _smoke(args) -> int:
         print(f"# fedcgs-front listening on {host}:{port} "
               f"({args.workers} workers)")
         responses = await request_scores(host, port, reqs)
+        front.drain(timeout=120)
+        admin = await admin_request(host, port, {"op": "metrics"})
+        traced = await admin_request(
+            host, port, {"op": "trace", "limit": 8}
+        )
         server.close()
         await server.wait_closed()
-        front.drain(timeout=120)
         snap = front.snapshot()
     served = [r for r in responses if "logits" in r]
     shed = [r for r in responses if r.get("error") == "shed"]
     for res, req in zip(responses, reqs):
         if "logits" in res:
             assert len(res["logits"]) == req.shape[0], "row count mismatch"
+
+    # self-check 1: the socket scrape parses as Prometheus text and
+    # carries the same totals the in-process snapshot reports
+    from repro.obs.expo import parse_prometheus
+
+    prom = parse_prometheus(admin["metrics"])
+    flabel = '{front="%s"}' % front.metrics.front
+    assert prom["fedcgs_front_accepted_total"][flabel] == len(served), \
+        "socket metrics disagree with served count"
+    assert prom["fedcgs_front_shed_total"][flabel] == len(shed), \
+        "socket metrics disagree with shed count"
+    assert traced["tracing_enabled"] and traced["spans"], \
+        "trace admin op returned no spans"
+
+    # self-check 2: every request has a complete span chain
+    all_spans = trace.spans()
+    verify_span_chains(all_spans, served=len(served), shed=len(shed))
+
+    if args.trace_out:
+        n = trace.export_jsonl(args.trace_out)
+        print(f"# wrote {n} spans to {args.trace_out}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as fh:
+            fh.write(admin["metrics"])
+        print(f"# wrote metrics exposition to {args.metrics_out}")
+
     print(json.dumps(snap, indent=2))
     print(
         f"# served {len(served)}/{len(reqs)} requests over the socket "
         f"({len(shed)} shed, shed_ratio "
-        f"{snap['front']['shed_ratio']:.3f})"
+        f"{snap['front']['shed_ratio']:.3f}); "
+        f"{len(all_spans)} spans, all chains complete"
     )
     return 0 if served else 1
 
@@ -340,6 +493,10 @@ def main(argv=None) -> int:
     p.add_argument("--max-delay-ms", type=float, default=2.0)
     p.add_argument("--max-queued-rows", type=int, default=None,
                    help="front-wide admission bound (rows)")
+    p.add_argument("--trace-out", default=None,
+                   help="write the buffered spans as JSONL here")
+    p.add_argument("--metrics-out", default=None,
+                   help="write the Prometheus text exposition here")
     p.add_argument("--smoke", action="store_true",
                    help="spin workers + socket, push synthetic traffic, "
                         "print the aggregated snapshot (what CI runs)")

@@ -1,10 +1,16 @@
 """Serving metrics: latency percentiles, throughput, occupancy, pad waste.
 
-One thread-safe accumulator the server's run loop feeds per tick.  The
-counters answer the questions a dynamic batcher raises: how long do
-requests wait end-to-end (p50/p95/p99), how full are the batches the
-kernel actually sees (occupancy), and how many padded rows were burned
-to keep the jit-trace count bounded (pad waste).
+Since the ``repro.obs`` rebase this module holds no private counters:
+every number lives in a named, labeled instrument in the process-wide
+:class:`repro.obs.MetricsRegistry` (one family per metric, one labeled
+child per worker), and :meth:`ServeMetrics.snapshot` is a *view* over
+those shared instruments — same dict, same keys as before, but the
+same values are now scrapeable live as Prometheus text through
+:mod:`repro.obs.expo` (the ``fedcgs-front`` socket's
+``{"op": "metrics"}``).  Latency percentiles come from the registry
+histogram: exact nearest-rank while the window holds every sample,
+log-spaced bucket interpolation beyond it — snapshot cost is
+O(#buckets), never the old sort of a 65536-entry deque under the lock.
 
 The wall-clock primitive itself lives in the dependency-free
 ``repro.timing`` (re-exported here for the serve-facing API); the
@@ -14,15 +20,18 @@ function instead of hand-rolling ``time.time()`` pairs.
 
 from __future__ import annotations
 
-import collections
+import itertools
 import math
 import threading
 import time
 from typing import Dict, Optional
 
+from repro.obs.registry import MetricsRegistry, default_registry
 from repro.timing import timed
 
 __all__ = ["ServeMetrics", "percentile", "timed"]
+
+_worker_ids = itertools.count()
 
 
 def percentile(sorted_values, q: float) -> float:
@@ -42,7 +51,7 @@ def percentile(sorted_values, q: float) -> float:
 
 
 class ServeMetrics:
-    """Counters for the serving loop (all methods thread-safe).
+    """Per-worker views over the shared serve instrument families.
 
     ``capacity_rows`` (the batcher's max-rows admission bound) turns the
     per-batch row counts into an occupancy fraction; without it the
@@ -52,88 +61,142 @@ class ServeMetrics:
     occupied its padded shape, not the nominal bound — dividing it by
     ``capacity_rows`` alone reports occupancy > 1.0 and corrupts the
     bench curves.
+
+    ``worker`` is this instance's label value in the registry (one is
+    generated when omitted, so concurrent servers never share a
+    child).  ``latency_window`` is accepted for API compatibility but
+    superseded by the registry histogram's bounded exact window — the
+    percentile path no longer retains (or sorts) the raw samples past
+    it.
     """
 
     def __init__(self, *, capacity_rows: Optional[int] = None,
-                 latency_window: int = 65536):
-        self._lock = threading.Lock()
+                 latency_window: int = 65536,
+                 registry: Optional[MetricsRegistry] = None,
+                 worker: Optional[str] = None):
+        del latency_window  # superseded by the obs histogram window
+        reg = registry if registry is not None else default_registry()
+        self.worker = worker if worker is not None else f"w{next(_worker_ids)}"
         self._capacity_rows = capacity_rows
-        self._latencies = collections.deque(maxlen=latency_window)
-        self._requests = 0
-        self._rows = 0
-        self._padded_rows = 0
-        self._capacity_sum = 0
-        self._batches = 0
-        self._score_s = 0.0
-        self._swaps = 0
-        self._rejected = 0
+        labels = ("worker",)
+        lv = {"worker": self.worker}
+        self._requests = reg.counter(
+            "fedcgs_serve_requests_total",
+            "Requests scored by the serving loop", labels).labels(**lv)
+        self._rows = reg.counter(
+            "fedcgs_serve_rows_total",
+            "Real feature rows scored", labels).labels(**lv)
+        self._padded_rows = reg.counter(
+            "fedcgs_serve_padded_rows_total",
+            "Kernel rows including padding lanes", labels).labels(**lv)
+        self._capacity_sum = reg.counter(
+            "fedcgs_serve_capacity_rows_total",
+            "Row capacity the formed batches were accounted at",
+            labels).labels(**lv)
+        self._batches = reg.counter(
+            "fedcgs_serve_batches_total",
+            "Batches formed and scored", labels).labels(**lv)
+        self._score_s = reg.counter(
+            "fedcgs_serve_score_seconds_total",
+            "Wall seconds spent inside kernel scoring", labels).labels(**lv)
+        self._swaps = reg.counter(
+            "fedcgs_serve_head_swaps_total",
+            "Registry hot-swaps observed after the initial head",
+            labels).labels(**lv)
+        self._rejected = reg.counter(
+            "fedcgs_serve_rejected_total",
+            "Submissions rejected at the worker queue bound",
+            labels).labels(**lv)
+        self._latency = reg.histogram(
+            "fedcgs_serve_latency_seconds",
+            "End-to-end request latency (enqueue to result)",
+            labels).labels(**lv)
+        # throughput-span anchors: plain attrs, guarded by one lock
+        self._lock = threading.Lock()
         self._first_t: Optional[float] = None
         self._last_t: Optional[float] = None
 
     # -- recording ----------------------------------------------------------
 
     def record_batch(self, *, requests: int, rows: int, padded_rows: int,
-                     score_s: float) -> None:
+                     score_s: float,
+                     enqueued_t: Optional[float] = None) -> None:
+        """Account one scored batch.
+
+        ``enqueued_t`` is the batch's earliest request-submit time
+        (``time.perf_counter()`` clock): the throughput span is
+        anchored there, so the first window includes the queue wait.
+        The old anchor ``now - score_s`` backdated only by the kernel
+        time and overstated ``throughput_*`` whenever the first batch
+        had waited in the queue.  Callers without a submit timestamp
+        fall back to that old anchor.
+        """
         now = time.perf_counter()
+        self._batches.inc()
+        self._requests.inc(requests)
+        self._rows.inc(rows)
+        self._padded_rows.inc(padded_rows)
+        self._capacity_sum.inc(max(self._capacity_rows or 0, padded_rows))
+        self._score_s.inc(score_s)
+        anchor = enqueued_t if enqueued_t is not None else now - score_s
         with self._lock:
-            self._batches += 1
-            self._requests += requests
-            self._rows += rows
-            self._padded_rows += padded_rows
-            self._capacity_sum += max(self._capacity_rows or 0, padded_rows)
-            self._score_s += score_s
-            if self._first_t is None:
-                self._first_t = now - score_s
+            if self._first_t is None or anchor < self._first_t:
+                self._first_t = anchor
             self._last_t = now
 
     def record_latency(self, seconds: float) -> None:
-        with self._lock:
-            self._latencies.append(seconds)
+        self._latency.observe(seconds)
 
     def record_swap(self) -> None:
-        with self._lock:
-            self._swaps += 1
+        self._swaps.inc()
 
     def record_rejected(self) -> None:
-        with self._lock:
-            self._rejected += 1
+        self._rejected.inc()
 
     # -- reading ------------------------------------------------------------
 
     def snapshot(self) -> Dict[str, float]:
-        """A plain-dict view of everything (JSON-ready)."""
+        """A plain-dict view of everything (JSON-ready).
+
+        Reads the shared instruments; each is individually consistent
+        (its own lock) but the dict is not one atomic cut across all of
+        them — the usual scrape semantics.
+        """
         with self._lock:
-            lat = sorted(self._latencies)
-            span = (
-                (self._last_t - self._first_t)
-                if self._first_t is not None and self._last_t > self._first_t
-                else float("nan")
-            )
-            occupancy = (
-                self._rows / self._capacity_sum
-                if self._capacity_rows and self._capacity_sum
-                else (self._rows / self._batches if self._batches else float("nan"))
-            )
-            return {
-                "requests": self._requests,
-                "rows": self._rows,
-                "batches": self._batches,
-                "rejected": self._rejected,
-                "head_swaps": self._swaps,
-                "latency_p50_ms": percentile(lat, 0.50) * 1e3,
-                "latency_p95_ms": percentile(lat, 0.95) * 1e3,
-                "latency_p99_ms": percentile(lat, 0.99) * 1e3,
-                "throughput_rps": (
-                    self._requests / span if span == span else float("nan")
-                ),
-                "throughput_rows_s": (
-                    self._rows / span if span == span else float("nan")
-                ),
-                "batch_occupancy": occupancy,
-                "pad_waste_frac": (
-                    1.0 - self._rows / self._padded_rows
-                    if self._padded_rows
-                    else float("nan")
-                ),
-                "score_time_s": self._score_s,
-            }
+            first_t, last_t = self._first_t, self._last_t
+        span = (
+            (last_t - first_t)
+            if first_t is not None and last_t is not None and last_t > first_t
+            else float("nan")
+        )
+        requests = self._requests.value
+        rows = self._rows.value
+        padded = self._padded_rows.value
+        capacity_sum = self._capacity_sum.value
+        batches = self._batches.value
+        occupancy = (
+            rows / capacity_sum
+            if self._capacity_rows and capacity_sum
+            else (rows / batches if batches else float("nan"))
+        )
+        return {
+            "requests": int(requests),
+            "rows": int(rows),
+            "batches": int(batches),
+            "rejected": int(self._rejected.value),
+            "head_swaps": int(self._swaps.value),
+            "latency_p50_ms": self._latency.percentile(0.50) * 1e3,
+            "latency_p95_ms": self._latency.percentile(0.95) * 1e3,
+            "latency_p99_ms": self._latency.percentile(0.99) * 1e3,
+            "throughput_rps": (
+                float("nan") if math.isnan(span) else requests / span
+            ),
+            "throughput_rows_s": (
+                float("nan") if math.isnan(span) else rows / span
+            ),
+            "batch_occupancy": occupancy,
+            "pad_waste_frac": (
+                1.0 - rows / padded if padded else float("nan")
+            ),
+            "score_time_s": self._score_s.value,
+        }

@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.core.classifier import LinearHead, gnb_head
 from repro.core.statistics import FeatureStats, derive_global
+from repro.obs import trace
 
 
 class HeadRegistry:
@@ -59,19 +60,21 @@ class HeadRegistry:
             raise ValueError(
                 f"malformed head: W {head.W.shape}, b {head.b.shape}"
             )
-        with self._lock:
-            version = self._next_version
-            self._next_version += 1
-            self._heads[version] = head
-            self._live = (version, head)
-            while len(self._heads) > self._keep:
-                oldest = min(self._heads)
-                if oldest == version:
-                    break
-                del self._heads[oldest]
-            subscribers = list(self._subscribers)
-        for cb in subscribers:
-            cb(version)
+        with trace.span("registry.publish") as sp:
+            with self._lock:
+                version = self._next_version
+                self._next_version += 1
+                self._heads[version] = head
+                self._live = (version, head)
+                while len(self._heads) > self._keep:
+                    oldest = min(self._heads)
+                    if oldest == version:
+                        break
+                    del self._heads[oldest]
+                subscribers = list(self._subscribers)
+            sp.set(version=version, subscribers=len(subscribers))
+            for cb in subscribers:
+                cb(version)
         return version
 
     def refit_from_stats(self, stats: FeatureStats, *, ridge=None) -> int:
@@ -149,26 +152,31 @@ class HeadRegistry:
         """
         from repro.checkpoint import store
 
-        flat = store.load_flat(directory, step)
-        live = int(flat["meta/live"])
-        next_version = int(flat["meta/next_version"])
-        heads: Dict[int, LinearHead] = {}
-        for key, arr in flat.items():
-            parts = key.split("/")
-            if parts[0] == "heads" and parts[-1] == "W":
-                v = int(parts[1])
-                heads[v] = LinearHead(
-                    W=jnp.asarray(arr), b=jnp.asarray(flat[f"heads/{v}/b"])
+        with trace.span("registry.restore", directory=directory) as sp:
+            flat = store.load_flat(directory, step)
+            live = int(flat["meta/live"])
+            next_version = int(flat["meta/next_version"])
+            heads: Dict[int, LinearHead] = {}
+            for key, arr in flat.items():
+                parts = key.split("/")
+                if parts[0] == "heads" and parts[-1] == "W":
+                    v = int(parts[1])
+                    heads[v] = LinearHead(
+                        W=jnp.asarray(arr), b=jnp.asarray(flat[f"heads/{v}/b"])
+                    )
+            with self._lock:
+                prev_live = None if self._live is None else self._live[0]
+                self._heads = heads
+                self._live = None if live < 0 else (live, heads[live])
+                self._next_version = max(
+                    next_version, (max(heads) + 1) if heads else 0
                 )
-        with self._lock:
-            prev_live = None if self._live is None else self._live[0]
-            self._heads = heads
-            self._live = None if live < 0 else (live, heads[live])
-            self._next_version = max(next_version, (max(heads) + 1) if heads else 0)
-            subscribers = list(self._subscribers)
-        if live >= 0 and live != prev_live:
-            for cb in subscribers:
-                cb(live)
+                subscribers = list(self._subscribers)
+            swapped = live >= 0 and live != prev_live
+            sp.set(live=live, heads=len(heads), swapped=swapped)
+            if swapped:
+                for cb in subscribers:
+                    cb(live)
         return None if live < 0 else live
 
     def subscribe(self, callback: Callable[[int], None]) -> None:

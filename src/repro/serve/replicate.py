@@ -25,6 +25,7 @@ import threading
 from typing import Optional
 
 from repro.checkpoint import store
+from repro.obs import trace
 from repro.serve.registry import HeadRegistry
 
 
@@ -90,7 +91,9 @@ class RegistryReplicator:
         with self._lock:
             if self._last_step is not None and step <= self._last_step:
                 return None
-        version = self.registry.restore(self.directory, step=step)
+        with trace.span("replicate.sync_once", step=step) as sp:
+            version = self.registry.restore(self.directory, step=step)
+            sp.set(version=version)
         with self._lock:
             self._last_step = step
         return version

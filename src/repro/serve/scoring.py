@@ -20,6 +20,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.kernels import gnb_logits, gnb_logits_jnp
 from repro.kernels.ops import AUDITED_JITS as _KERNEL_JITS
+from repro.obs import trace
 from repro.sharding import shard_map
 
 Array = jax.Array
@@ -99,18 +100,27 @@ def score_features(
     d, c = int(features.shape[1]), int(w.shape[0])
 
     def _score(f_: Array, w_: Array, b_: Array) -> Array:
+        # the device-profile annotation names the audited jit being
+        # dispatched, so a jax.profiler capture lines up with the host
+        # `serve.score_features` span by name
         if backend == "jnp":
-            return gnb_logits_jnp(f_, w_, b_)
-        return gnb_logits(f_, w_, b_, interpret=interpret)
+            with trace.annotate("serve.scoring.gnb_logits_jnp"):
+                return gnb_logits_jnp(f_, w_, b_)
+        with trace.annotate("serve.scoring.gnb_logits"):
+            return gnb_logits(f_, w_, b_, interpret=interpret)
 
     if mesh is None:
         backend = resolve_backend(backend, n, d, c)
-        return _score(features, w, b)
+        with trace.span("serve.score_features", backend=backend,
+                        rows=n, feature_dim=d):
+            return _score(features, w, b)
 
     axes = live_axes(mesh, client_axes)
     if not axes:
         backend = resolve_backend(backend, n, d, c)
-        return _score(features, w, b)
+        with trace.span("serve.score_features", backend=backend,
+                        rows=n, feature_dim=d):
+            return _score(features, w, b)
     shards = num_shards(mesh, client_axes)
     pad = (-n) % shards
     if pad:
@@ -128,4 +138,6 @@ def score_features(
         out_specs=P(axes),
         check_rep=False,  # pallas_call has no replication rule
     )
-    return fn(features, w, b)[:n]
+    with trace.span("serve.score_features", backend=backend, rows=n,
+                    feature_dim=d, shards=shards):
+        return fn(features, w, b)[:n]

@@ -29,6 +29,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.classifier import LinearHead
+from repro.obs import trace
 from repro.serve.batcher import DynamicBatcher, ServeResult
 from repro.serve.metrics import ServeMetrics, timed
 from repro.serve.registry import HeadRegistry
@@ -162,11 +163,13 @@ class GNBServer:
 
     # -- request side -------------------------------------------------------
 
-    def submit(self, features) -> Future:
+    def submit(self, features, *, trace_id: Optional[str] = None) -> Future:
         """Enqueue rows; the Future resolves to a :class:`ServeResult`.
 
         Raises :class:`serve.batcher.QueueFull` under backpressure and
         ``RuntimeError`` once the server stopped admitting.
+        ``trace_id`` pins the request's trace (the front passes its
+        per-request ID through; direct callers may omit it).
         """
         # enqueue under the state lock: a concurrent shutdown() cannot
         # close-and-fail the queue between our _closed check and the
@@ -175,7 +178,7 @@ class GNBServer:
             if self._closed:
                 raise RuntimeError("server is shut down (not admitting)")
             try:
-                return self.batcher.submit(features)
+                return self.batcher.submit(features, trace_id=trace_id)
             except Exception:
                 self.metrics.record_rejected()
                 raise
@@ -207,8 +210,15 @@ class GNBServer:
             return
         version, head = self.registry.current()  # atomic (version, head) read
         try:
-            logits, dt = timed(self._score_padded, padded, head)
-            logits = np.asarray(logits)[:rows]  # blocks until ready
+            with trace.span(
+                "serve.score", trace_id=pendings[0].trace_id,
+                rows=rows, padded_rows=int(padded.shape[0]),
+                head_version=version,
+            ) as sp:
+                if trace.enabled():
+                    sp.set(trace_ids=[p.trace_id for p in pendings])
+                logits, dt = timed(self._score_padded, padded, head)
+                logits = np.asarray(logits)[:rows]  # blocks until ready
         except Exception as exc:  # noqa: BLE001 — fail the batch, keep serving
             self.batcher.fail(pendings, exc)
             return
@@ -216,6 +226,7 @@ class GNBServer:
         self.metrics.record_batch(
             requests=len(pendings), rows=rows, padded_rows=padded.shape[0],
             score_s=dt,
+            enqueued_t=min(p.enqueued_at for p in pendings),
         )
         for r in results:
             self.metrics.record_latency(r.latency_s)

@@ -267,7 +267,7 @@ def test_cli_json_output_is_parseable():
 @pytest.mark.parametrize("plant", [
     "collective-budget", "donated-aliasing",
     "lock-discipline", "shard-map-import", "extractor-protocol",
-    "block-constants",
+    "block-constants", "metric-funnel",
 ])
 def test_cli_plant_exits_nonzero(plant):
     """Acceptance: the gate must be able to FAIL, one subprocess per

@@ -1,0 +1,470 @@
+"""repro.obs: tracing, the metrics registry, and exposition.
+
+- trace: enable/disable switching, the no-op disabled path, ring-buffer
+  bounding, nested-span trace-ID inheritance, cross-thread pinning via
+  ``trace_id=``, error stamping, JSONL export;
+- registry: counter/gauge/histogram semantics, label children,
+  get-or-create with type/label mismatch errors, exact-vs-bucket
+  percentile paths;
+- expo: Prometheus text render + parse round-trip, JSON twin,
+  histogram bucket series;
+- ServeMetrics rebase satellites: the throughput-anchor regression
+  (queue wait must count), NaN-guarded snapshot, and the full-window
+  snapshot cost budget;
+- end-to-end span chains: every request in an in-process front run —
+  including cross-bucket top-ups and sheds — leaves a complete
+  submit→complete chain, and the same holds for the subprocess
+  ``fedcgs-front --smoke`` run with exported JSONL.
+"""
+
+import json
+import math
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.obs import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    parse_prometheus,
+    render_json,
+    render_prometheus,
+    trace,
+)
+from repro.obs.registry import EXACT_WINDOW, latency_buckets
+from repro.serve.metrics import ServeMetrics, percentile
+
+
+@pytest.fixture(autouse=True)
+def _clean_tracer():
+    """Every test starts and ends with tracing off, an empty buffer,
+    and the default ring capacity (capacity resizes are sticky)."""
+    trace.enable(capacity=trace.DEFAULT_CAPACITY)
+    trace.disable()
+    trace.reset()
+    yield
+    trace.enable(capacity=trace.DEFAULT_CAPACITY)
+    trace.disable()
+    trace.reset()
+
+
+# ---------------------------------------------------------------------------
+# trace
+# ---------------------------------------------------------------------------
+
+
+def test_span_disabled_is_shared_noop():
+    s1 = trace.span("a", rows=1)
+    s2 = trace.span("b")
+    assert s1 is s2  # one shared stateless no-op, no allocation
+    with s1 as sp:
+        sp.set(x=1)
+        sp.fail("nope")
+    assert trace.spans() == []
+
+
+def test_span_records_when_enabled():
+    trace.enable()
+    with trace.span("work", rows=3) as sp:
+        sp.set(extra="y")
+    (rec,) = trace.spans()
+    assert rec["name"] == "work"
+    assert rec["attrs"] == {"rows": 3, "extra": "y"}
+    assert rec["duration_s"] >= 0
+    assert rec["trace_id"] and rec["parent_id"] is None
+    assert "error" not in rec
+
+
+def test_nested_spans_inherit_trace_id():
+    trace.enable()
+    with trace.span("outer") as outer:
+        with trace.span("inner") as inner:
+            assert inner.trace_id == outer.trace_id
+            assert trace.current_trace_id() == outer.trace_id
+    inner_rec, outer_rec = trace.spans()
+    assert inner_rec["name"] == "inner"
+    assert inner_rec["parent_id"] == outer_rec["span_id"]
+    assert inner_rec["trace_id"] == outer_rec["trace_id"]
+
+
+def test_explicit_trace_id_pins_across_threads():
+    trace.enable()
+    with trace.span("submit") as sp:
+        tid = sp.trace_id
+
+    def worker():
+        with trace.span("complete", trace_id=tid):
+            pass
+
+    t = threading.Thread(target=worker)
+    t.start()
+    t.join()
+    names = {s["name"]: s["trace_id"] for s in trace.spans()}
+    assert names["complete"] == names["submit"] == tid
+
+
+def test_span_error_stamping():
+    trace.enable()
+    with trace.span("shedding") as sp:
+        sp.fail("shed")
+    with pytest.raises(RuntimeError):
+        with trace.span("boom"):
+            raise RuntimeError("kernel died")
+    shed, boom = trace.spans()
+    assert shed["error"] == "shed"
+    assert "kernel died" in boom["error"]
+
+
+def test_ring_buffer_bounds_memory():
+    trace.enable(capacity=8)
+    for i in range(50):
+        with trace.span("s", i=i):
+            pass
+    kept = trace.spans()
+    assert len(kept) == 8
+    assert [s["attrs"]["i"] for s in kept] == list(range(42, 50))
+
+
+def test_export_jsonl_round_trip(tmp_path):
+    trace.enable()
+    with trace.span("a"):
+        pass
+    with trace.span("b") as sp:
+        sp.fail("x")
+    path = str(tmp_path / "trace.jsonl")
+    assert trace.export_jsonl(path) == 2
+    lines = [json.loads(l) for l in open(path)]
+    assert [l["name"] for l in lines] == ["a", "b"]
+    assert lines[1]["error"] == "x"
+
+
+def test_disable_then_reenable_keeps_buffer():
+    trace.enable()
+    with trace.span("kept"):
+        pass
+    trace.disable()
+    with trace.span("dropped"):
+        pass
+    trace.enable()
+    assert [s["name"] for s in trace.spans()] == ["kept"]
+
+
+def test_annotate_is_noop_without_device_flag():
+    trace.enable()  # host-only: no TraceAnnotation cost
+    cm = trace.annotate("serve.scoring.gnb_logits")
+    with cm:
+        pass
+    assert trace.spans() == []  # annotations never enter the span buffer
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_counter_monotone():
+    reg = MetricsRegistry()
+    c = reg.counter("c_total", "help")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_gauge_set_and_inc():
+    reg = MetricsRegistry()
+    g = reg.gauge("g", "help")
+    g.set(5)
+    g.inc(-2)
+    assert g.value == 3.0
+
+
+def test_labels_create_independent_children():
+    reg = MetricsRegistry()
+    fam = reg.counter("reqs_total", "help", ("worker",))
+    fam.labels(worker="w0").inc(3)
+    fam.labels(worker="w1").inc(4)
+    assert fam.labels(worker="w0").value == 3
+    assert fam.labels(worker="w1").value == 4
+    assert dict(
+        (vals, child.value) for vals, child in fam.children()
+    ) == {("w0",): 3, ("w1",): 4}
+    with pytest.raises(ValueError):
+        fam.labels(wrong="x")
+
+
+def test_get_or_create_is_shared_and_type_checked():
+    reg = MetricsRegistry()
+    a = reg.counter("shared_total", "help")
+    b = reg.counter("shared_total")
+    assert a is b
+    with pytest.raises(ValueError):
+        reg.gauge("shared_total")
+    with pytest.raises(ValueError):
+        reg.counter("shared_total", label_names=("worker",))
+
+
+def test_histogram_exact_window_matches_nearest_rank():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", "help", window=64)
+    rng = np.random.default_rng(0)
+    vals = rng.exponential(0.01, 50)
+    for v in vals:
+        h.observe(v)
+    ordered = sorted(vals)
+    for q in (0.5, 0.95, 0.99):
+        assert h.percentile(q) == percentile(ordered, q)
+
+
+def test_histogram_bucket_path_beyond_window():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", "help", window=16)
+    rng = np.random.default_rng(1)
+    vals = rng.exponential(0.01, 500)
+    for v in vals:
+        h.observe(v)
+    ordered = sorted(vals)
+    for q in (0.5, 0.95, 0.99):
+        est, true = h.percentile(q), percentile(ordered, q)
+        # bucket interpolation: within one log-spaced bucket (x1.33)
+        assert true / 1.34 <= est <= true * 1.34, (q, est, true)
+    assert h.count == 500
+    assert h.sum == pytest.approx(vals.sum())
+
+
+def test_histogram_empty_and_overflow_bucket():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", "help", window=4)
+    assert math.isnan(h.percentile(0.5))
+    for _ in range(10):
+        h.observe(1e6)  # beyond the highest finite bound
+    # +Inf bucket: report the highest finite bound as a monotone floor
+    assert h.percentile(0.99) == latency_buckets()[-1]
+
+
+def test_histogram_bucket_counts_cumulative():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", "help", buckets=(0.1, 1.0), window=4)
+    for v in (0.05, 0.5, 0.5, 5.0):
+        h.observe(v)
+    assert h.bucket_counts() == [(0.1, 1), (1.0, 3), (math.inf, 4)]
+
+
+# ---------------------------------------------------------------------------
+# exposition
+# ---------------------------------------------------------------------------
+
+
+def test_prometheus_render_parse_round_trip():
+    reg = MetricsRegistry()
+    reg.counter("app_requests_total", "reqs", ("worker",)).labels(
+        worker="w0"
+    ).inc(7)
+    reg.gauge("app_depth", "queue depth").set(3)
+    h = reg.histogram("app_latency_seconds", "lat", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    text = render_prometheus(reg)
+    assert "# TYPE app_requests_total counter" in text
+    assert "# TYPE app_latency_seconds histogram" in text
+    parsed = parse_prometheus(text)
+    assert parsed["app_requests_total"]['{worker="w0"}'] == 7
+    assert parsed["app_depth"][""] == 3
+    assert parsed["app_latency_seconds_bucket"]['{le="0.1"}'] == 1
+    assert parsed["app_latency_seconds_bucket"]['{le="+Inf"}'] == 2
+    assert parsed["app_latency_seconds_count"][""] == 2
+    assert parsed["app_latency_seconds_sum"][""] == pytest.approx(0.55)
+
+
+def test_render_json_structure():
+    reg = MetricsRegistry()
+    reg.counter("x_total", "help").inc(2)
+    out = render_json(reg)
+    (fam,) = out["families"]
+    assert fam["name"] == "x_total" and fam["kind"] == "counter"
+    assert fam["series"] == [{"labels": {}, "value": 2.0}]
+    json.dumps(out)  # JSON-ready, no numpy leakage
+
+
+def test_parse_prometheus_rejects_malformed():
+    with pytest.raises(ValueError):
+        parse_prometheus("== not a sample ==\n")
+
+
+# ---------------------------------------------------------------------------
+# ServeMetrics rebase satellites
+# ---------------------------------------------------------------------------
+
+
+def _metrics(**kw):
+    return ServeMetrics(registry=MetricsRegistry(), **kw)
+
+
+def test_throughput_anchor_includes_queue_wait():
+    """Regression: the first batch's span must start at request submit,
+    not ``now - score_s`` — a queued first batch used to backdate only
+    by the kernel time and overstate throughput."""
+    m = _metrics(capacity_rows=64)
+    enqueue_t = time.perf_counter()
+    time.sleep(0.05)  # the queue wait the old anchor dropped
+    m.record_batch(requests=4, rows=8, padded_rows=8, score_s=1e-4,
+                   enqueued_t=enqueue_t)
+    time.sleep(0.01)
+    m.record_batch(requests=4, rows=8, padded_rows=8, score_s=1e-4)
+    rps = m.snapshot()["throughput_rps"]
+    # 8 requests over >= 60ms: the old anchor (span ~= 10ms) reported
+    # several hundred rps here — the fix caps it near 8/0.06 ~ 133
+    assert rps < 8 / 0.055, rps
+
+
+def test_snapshot_nan_guards_empty_metrics():
+    snap = _metrics().snapshot()
+    assert math.isnan(snap["throughput_rps"])
+    assert math.isnan(snap["throughput_rows_s"])
+    assert math.isnan(snap["latency_p50_ms"])
+    assert math.isnan(snap["pad_waste_frac"])
+    assert snap["requests"] == 0
+
+
+def test_snapshot_of_full_latency_window_is_cheap():
+    """Satellite: a 65536-observation history must snapshot in bounded
+    time — the bucket path is O(#buckets), never a sort of the raw
+    samples (the old deque sorted 65536 floats under the lock)."""
+    m = _metrics(capacity_rows=64)
+    rng = np.random.default_rng(0)
+    for v in rng.exponential(0.01, 65536):
+        m.record_latency(v)
+    t0 = time.perf_counter()
+    for _ in range(20):
+        snap = m.snapshot()
+    per_snap = (time.perf_counter() - t0) / 20
+    assert per_snap < 0.02, f"snapshot cost {per_snap * 1e3:.1f}ms"
+    assert snap["latency_p50_ms"] > 0
+
+
+def test_serve_metrics_snapshot_keys_are_prom_backed():
+    m = _metrics(capacity_rows=32)
+    m.record_batch(requests=2, rows=10, padded_rows=16, score_s=0.01)
+    m.record_latency(0.002)
+    m.record_swap()
+    m.record_rejected()
+    snap = m.snapshot()
+    assert snap["requests"] == 2 and snap["rows"] == 10
+    assert snap["head_swaps"] == 1 and snap["rejected"] == 1
+    assert snap["batch_occupancy"] == pytest.approx(10 / 32)
+    assert snap["pad_waste_frac"] == pytest.approx(1 - 10 / 16)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end span chains through the serving tier
+# ---------------------------------------------------------------------------
+
+
+def test_span_chain_in_process_with_topup_and_shed():
+    from repro.serve import ServeFront
+    from repro.serve.batcher import QueueFull
+    from repro.serve.front import verify_span_chains
+    from tests.test_serve_front import _head  # reuse the fixture helper
+
+    trace.enable()
+    d = 8
+    front = ServeFront.create(
+        1, head=_head(d, 4), max_batch_rows=64, max_delay_s=5e-3,
+        max_queued_rows=96,
+    )
+    rng = np.random.default_rng(0)
+    served = shed = 0
+    with front:
+        futures = []
+        # ragged mix across buckets: small probes ride big batches as
+        # top-ups; the tight front bound forces at least one shed
+        for n in (40, 3, 2, 60, 5, 50, 33, 7):
+            try:
+                futures.append(
+                    front.submit(rng.standard_normal((n, d)).astype(np.float32))
+                )
+            except QueueFull:
+                shed += 1
+        for f in futures:
+            f.result(timeout=30)
+            served += 1
+    assert shed >= 1, "fixture meant to shed at least once"
+    verify_span_chains(trace.spans(), served=served, shed=shed)
+    # cross-bucket top-ups keep their own trace IDs through complete
+    complete = [s for s in trace.spans() if s["name"] == "serve.complete"]
+    assert any(s["attrs"].get("topup") for s in complete)
+
+
+@pytest.mark.slow
+def test_front_smoke_subprocess_exports_complete_chains(tmp_path):
+    """Satellite: the CI smoke run — every request in a --workers 2 run
+    has a complete span chain in the exported JSONL, and the metrics
+    exposition file parses with matching totals."""
+    trace_out = str(tmp_path / "trace.jsonl")
+    metrics_out = str(tmp_path / "metrics.prom")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")]
+    )
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.serve.front", "--smoke",
+         "--workers", "2", "--requests", "16",
+         "--trace-out", trace_out, "--metrics-out", metrics_out],
+        capture_output=True, text=True, timeout=600, env=env,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr[-2000:]
+    # the smoke process already self-verifies chains; re-verify from
+    # the exported artifact so the JSONL itself is proven complete
+    from repro.serve.front import verify_span_chains
+
+    spans = [json.loads(l) for l in open(trace_out)]
+    served = sum(
+        1 for s in spans if s["name"] == "serve.submit" and "error" not in s
+    )
+    shed = sum(
+        1 for s in spans if s["name"] == "serve.submit"
+        and s.get("error") == "shed"
+    )
+    assert served + shed == 16
+    verify_span_chains(spans, served=served, shed=shed)
+    parsed = parse_prometheus(open(metrics_out).read())
+    total = sum(parsed["fedcgs_front_accepted_total"].values())
+    assert total == served
+
+
+# ---------------------------------------------------------------------------
+# round-lifecycle spans
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_and_registry_spans():
+    import jax.numpy as jnp
+
+    from repro.core.stats_pipeline import StatsPipeline
+    from repro.serve.registry import HeadRegistry
+
+    trace.enable()
+    rng = np.random.default_rng(0)
+    f = jnp.asarray(rng.standard_normal((32, 8)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 4, 32), jnp.int32)
+    pipe = StatsPipeline(4, backend="jnp")
+    stats = pipe.from_batches([(f[:16], y[:16]), (f[16:], y[16:])])
+    reg = HeadRegistry()
+    reg.refit_from_stats(stats)
+    names = [s["name"] for s in trace.spans()]
+    assert "pipeline.fold" in names
+    assert "registry.publish" in names
+    fold = next(s for s in trace.spans() if s["name"] == "pipeline.fold")
+    assert fold["attrs"]["batches"] == 2
+    pub = next(s for s in trace.spans() if s["name"] == "registry.publish")
+    assert pub["attrs"]["version"] == 0
